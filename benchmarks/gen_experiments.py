@@ -1,0 +1,87 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.config import get_arch, list_archs
+from repro.core.roofline.model import cell_from_report
+
+
+def load(dirname):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            rep = json.load(f)
+        out[(rep["arch"], rep["shape"], rep["mesh"])] = rep
+    return out
+
+
+def main():
+    v1 = load("runs/dryrun")       # both meshes: compile proof + memory
+    _rl_dir = next((d for d in ("runs/dryrun_v3", "runs/dryrun_v2")
+                if os.path.isdir(d) and os.listdir(d)), "runs/dryrun")
+    v2 = load(_rl_dir)             # single-pod: roofline terms
+
+    print("## Dry-run matrix (lower+compile success, bytes/device)\n")
+    print("| arch | shape | 16x16 (256) | 2x16x16 (512) | peak GB/dev "
+          "(256) | peak GB/dev (512) |")
+    print("|---|---|---|---|---|---|")
+    for aid in list_archs():
+        spec = get_arch(aid)
+        for s in spec.shapes:
+            if s in spec.skip_shapes:
+                continue
+            r1 = v1.get((aid, s, "16x16"))
+            r2 = v1.get((aid, s, "2x16x16"))
+            print(f"| {aid} | {s} | {'OK' if r1 else 'MISSING'} | "
+                  f"{'OK' if r2 else 'MISSING'} | "
+                  f"{(r1 or {}).get('peak_bytes', 0) / 1e9:.1f} | "
+                  f"{(r2 or {}).get('peak_bytes', 0) / 1e9:.1f} |")
+
+    print("\n## Roofline table (single-pod, 256 chips, per step)\n")
+    print("| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant | "
+          "useful | roofline |")
+    print("|---|---|---|---|---|---|---|---|")
+    cells = []
+    for (aid, s, mesh), rep in sorted(v2.items()):
+        if mesh != "16x16":
+            continue
+        c = cell_from_report(aid, s, mesh, rep["chips"], rep,
+                             rep["model_flops"])
+        cells.append(c)
+        print(f"| {aid} | {s} | {c.t_compute * 1e3:.1f} | "
+              f"{c.t_memory * 1e3:.1f} | {c.t_collective * 1e3:.1f} | "
+              f"{c.dominant} | {c.useful_ratio:.2f} | "
+              f"{c.roofline_fraction:.1%} |")
+    if cells:
+        worst = min(cells, key=lambda c: c.roofline_fraction)
+        coll = max(cells, key=lambda c: c.t_collective / max(c.bound_time,
+                                                             1e-12))
+        print(f"\nworst roofline fraction: {worst.arch}/{worst.shape} "
+              f"({worst.roofline_fraction:.2%})")
+        print(f"most collective-bound: {coll.arch}/{coll.shape} "
+              f"(t_coll share {coll.t_collective / coll.bound_time:.0%})")
+
+    print("\n## Perf iterations\n")
+    for p in sorted(glob.glob("runs/perf/*.jsonl")):
+        print(f"### {os.path.basename(p)}")
+        print("| tag | t_comp | t_mem | t_coll | bound | roofline | "
+              "peak GB |")
+        print("|---|---|---|---|---|---|---|")
+        for line in open(p):
+            r = json.loads(line)
+            print(f"| {r['tag']} | {r['t_compute_ms']:.1f} | "
+                  f"{r['t_memory_ms']:.1f} | {r['t_collective_ms']:.1f} | "
+                  f"{r['dominant']} | {r['roofline_fraction']:.1%} | "
+                  f"{r['peak_bytes_gb']:.1f} |")
+        print()
+
+
+if __name__ == "__main__":
+    main()

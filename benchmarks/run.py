@@ -1,0 +1,41 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows.  Figure mapping:
+#   Fig 3 -> bench_runtime_breakdown   (flow turn-around time)
+#   Fig 4 -> bench_gantt               (resource-occupancy Gantt)
+#   Fig 5 -> bench_accuracy            (virtual model vs physical HW)
+#   Fig 6/7 -> bench_roofline_vgg      (per-layer roofline, DilatedVGG)
+#   assignment roofline table -> bench_roofline_cells (40-cell grid)
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (bench_accuracy, bench_gantt,
+                            bench_roofline_cells, bench_roofline_vgg,
+                            bench_runtime_breakdown)
+
+    suites = [
+        ("runtime_breakdown", bench_runtime_breakdown),
+        ("gantt", bench_gantt),
+        ("accuracy", bench_accuracy),
+        ("roofline_vgg", bench_roofline_vgg),
+        ("roofline_cells", bench_roofline_cells),
+    ]
+    rows = []
+    for name, mod in suites:
+        try:
+            rows.extend(mod.run())
+        except Exception as e:  # keep the harness robust; report failures
+            import traceback
+
+            traceback.print_exc()
+            rows.append((f"{name}_FAILED", 0.0, str(e)[:120]))
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Batched serving example (deliverable b): continuous batching with slot
+reuse over the decode kernel path.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    serve_main(["--arch", "qwen1.5-0.5b", "--smoke", "--requests", "8",
+                "--slots", "4", "--prompt-len", "12", "--max-new", "24",
+                "--max-len", "96"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end training driver (deliverable b): train a ~100M-param model
+for a few hundred steps on the synthetic pipeline, with checkpointing and
+a mid-run simulated failure + restart (fault-tolerance demonstration).
+
+Run:  PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+
+Note: this container is a single CPU core — the default model here is a
+~10M-param qwen1.5-family config so the example finishes in minutes; pass
+--full100m for the ~100M-param variant (same code path, longer wall time).
+"""
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.config import AttentionConfig, ModelConfig, OptimizerConfig
+from repro.launch.train import main as train_main
+
+
+def model_100m():
+    return ModelConfig(
+        name="repro-100m", family="dense", num_layers=12, d_model=768,
+        d_ff=2048, vocab_size=32768,
+        attention=AttentionConfig(num_heads=12, num_kv_heads=4, head_dim=64),
+        act="swiglu", param_dtype="float32", compute_dtype="float32")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--full100m", action="store_true")
+    p.add_argument("--ckpt", default="/tmp/repro_e2e_ckpt")
+    args = p.parse_args()
+
+    # register a custom config on the fly through the registry
+    from repro.core import config as C
+    from repro.models import api
+
+    if args.full100m:
+        cfg = model_100m()
+    else:
+        cfg = dataclasses.replace(
+            model_100m(), num_layers=4, d_model=256, d_ff=768,
+            vocab_size=4096,
+            attention=AttentionConfig(num_heads=4, num_kv_heads=2,
+                                      head_dim=64))
+
+    @C.register_arch("repro-e2e")
+    def _spec():
+        return C.ArchSpec(arch_id="repro-e2e", model=cfg, smoke=cfg,
+                          shapes=())
+
+    print(f"training {cfg.name}: {api.param_count(cfg):,} params")
+    half = args.steps // 2
+    # phase 1: train to the midpoint, checkpointing
+    losses1 = train_main(["--arch", "repro-e2e", "--smoke",
+                          "--steps", str(half), "--batch", "8",
+                          "--seq", "256", "--ckpt-every", "50",
+                          "--ckpt-dir", args.ckpt, "--log-every", "25"])
+    print(f"\n--- simulated node failure at step {half}; "
+          f"restarting from checkpoint ---\n")
+    # phase 2: a 'new process' resumes from the latest checkpoint
+    losses2 = train_main(["--arch", "repro-e2e", "--smoke",
+                          "--steps", str(args.steps), "--batch", "8",
+                          "--seq", "256", "--ckpt-every", "50",
+                          "--ckpt-dir", args.ckpt, "--resume",
+                          "--log-every", "25"])
+    print(f"\nloss trajectory: {losses1[0]:.3f} -> {losses1[-1]:.3f} "
+          f"(failure) -> {losses2[-1]:.3f}")
+    assert losses2[-1] < losses1[0], "model did not learn"
+    print("OK: survived failure, loss decreased end-to-end")
+
+
+if __name__ == "__main__":
+    main()

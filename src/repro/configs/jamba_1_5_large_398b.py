@@ -1,0 +1,51 @@
+"""jamba-1.5-large-398b [arXiv:2403.19887; hf].
+
+72L d_model=8192; Mamba:attention 7:1 interleave (one attention layer per
+8, at offset 4), MoE 16e top-2 on every 2nd layer (offset 1); GQA kv=8,
+d_ff=24576; vocab=65536.  398B total / ~94B active.
+"""
+from repro.core.config import (ArchSpec, AttentionConfig, MoEConfig,
+                               ModelConfig, SSMConfig, register_arch)
+
+FULL = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    d_ff=24_576,
+    vocab_size=65_536,
+    attention=AttentionConfig(kind="gqa", num_heads=64, num_kv_heads=8,
+                              head_dim=128),
+    moe=MoEConfig(num_experts=16, num_experts_per_tok=2, d_ff_expert=24_576,
+                  moe_every=2, moe_offset=1, d_ff_dense=24_576),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    attn_every=8,
+    act="swiglu",
+)
+
+SMOKE = ModelConfig(
+    name="jamba-smoke",
+    family="hybrid",
+    num_layers=8,                      # one full period: attn@4, MoE on odds
+    d_model=64,
+    d_ff=128,
+    vocab_size=512,
+    attention=AttentionConfig(kind="gqa", num_heads=4, num_kv_heads=2,
+                              head_dim=16),
+    moe=MoEConfig(num_experts=4, num_experts_per_tok=2, d_ff_expert=128,
+                  moe_every=2, moe_offset=1, d_ff_dense=128),
+    ssm=SSMConfig(d_state=8, d_conv=4, expand=2),
+    attn_every=8,
+    act="swiglu",
+)
+
+
+@register_arch("jamba-1.5-large-398b")
+def spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="jamba-1.5-large-398b",
+        model=FULL,
+        smoke=SMOKE,
+        shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+        source="arXiv:2403.19887",
+    )

@@ -1,0 +1,43 @@
+"""mistral-large-123b [hf:mistralai/Mistral-Large-Instruct-2407; unverified].
+
+88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768.
+"""
+from repro.core.config import (ArchSpec, AttentionConfig, ModelConfig,
+                               register_arch)
+
+FULL = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    num_layers=88,
+    d_model=12_288,
+    d_ff=28_672,
+    vocab_size=32_768,
+    attention=AttentionConfig(kind="gqa", num_heads=96, num_kv_heads=8,
+                              head_dim=128, rope_theta=1_000_000.0),
+    act="swiglu",
+)
+
+SMOKE = ModelConfig(
+    name="mistral-large-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    d_ff=128,
+    vocab_size=512,
+    attention=AttentionConfig(kind="gqa", num_heads=4, num_kv_heads=2,
+                              head_dim=16),
+    act="swiglu",
+)
+
+
+@register_arch("mistral-large-123b")
+def spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="mistral-large-123b",
+        model=FULL,
+        smoke=SMOKE,
+        shapes=("train_4k", "prefill_32k", "decode_32k"),
+        skip_shapes=("long_500k",),
+        skip_reason="pure full-attention arch (assignment rule)",
+        source="hf:mistralai/Mistral-Large-Instruct-2407",
+    )

@@ -1,0 +1,127 @@
+"""Three-term roofline model (assignment §Roofline + the paper's Fig 6/7).
+
+  compute term    = HLO_FLOPs   / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes   / (chips * HBM_bw)
+  collective term = coll_bytes  / (chips * link_bw)
+
+FLOPs/bytes are *global* (whole program over all chips), so each term is a
+lower-bound execution time; the dominant term is the bottleneck.  Also
+reports MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) and the useful-FLOP
+ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.hw import (TPU_V5E_HBM_BW, TPU_V5E_ICI_BW,
+                           TPU_V5E_PEAK_FLOPS)
+
+
+@dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                  # global HLO FLOPs per step
+    hbm_bytes: float              # global HLO bytes per step (estimate)
+    collective_bytes: float       # global collective bytes per step
+    model_flops: float            # 6*N*D / 2*N*D
+    bytes_per_device: float = 0.0 # peak live bytes per device (memory_analysis)
+    collective_breakdown: Dict[str, float] = field(default_factory=dict)
+    note: str = ""
+
+    peak_flops: float = TPU_V5E_PEAK_FLOPS
+    hbm_bw: float = TPU_V5E_HBM_BW
+    link_bw: float = TPU_V5E_ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * self.peak_flops)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * self.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * self.link_bw)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline the bound time achieves: how
+        close the *bottleneck* lets us get to peak MFU."""
+        if self.bound_time <= 0:
+            return 0.0
+        return (self.model_flops / (self.chips * self.peak_flops)) \
+            / self.bound_time
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops, "hlo_flops": self.flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_breakdown": self.collective_breakdown,
+            "note": self.note,
+        }
+
+
+def cell_from_report(arch: str, shape: str, mesh: str, chips: int,
+                     hlo_report: Dict, model_flops: float,
+                     note: str = "") -> RooflineCell:
+    """Build a cell from a dry-run artifact (analyze_compiled dict).
+
+    The dry-run lowers the per-device SPMD program on the full mesh; the HLO
+    is the per-device program, so FLOPs/bytes are per-device — multiply by
+    chips for the global terms used here.
+    """
+    # prefer the TPU-adjusted collective payload (f32 all-reduces of bf16
+    # dot outputs are a CPU-legalization artifact; bf16 on the target)
+    coll = hlo_report.get("collective_bytes_tpu_adjusted",
+                          hlo_report["collective_bytes"])
+    return RooflineCell(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        flops=hlo_report["flops"] * chips,
+        hbm_bytes=hlo_report["hbm_bytes"] * chips,
+        collective_bytes=coll * chips,
+        model_flops=model_flops,
+        bytes_per_device=hlo_report.get("peak_bytes", 0.0),
+        collective_breakdown=hlo_report.get("collective_breakdown", {}),
+        note=note)
+
+
+def format_table(cells) -> str:
+    hdr = (f"{'arch':26s} {'shape':12s} {'mesh':10s} "
+           f"{'t_comp(ms)':>10s} {'t_mem(ms)':>10s} {'t_coll(ms)':>10s} "
+           f"{'bound':>10s} {'useful':>7s} {'roofl%':>7s}  note")
+    lines = [hdr, "-" * len(hdr)]
+    for c in cells:
+        lines.append(
+            f"{c.arch:26s} {c.shape:12s} {c.mesh:10s} "
+            f"{c.t_compute * 1e3:10.2f} {c.t_memory * 1e3:10.2f} "
+            f"{c.t_collective * 1e3:10.2f} {c.dominant:>10s} "
+            f"{c.useful_ratio:7.2f} {c.roofline_fraction * 100:6.1f}%  "
+            f"{c.note}")
+    return "\n".join(lines)

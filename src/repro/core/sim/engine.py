@@ -1,0 +1,148 @@
+"""Discrete-event simulation engine (the SystemC / Platform Architect analog).
+
+Executes a hardware-adapted task graph on named FIFO resources while
+preserving causality — the property the paper argues distinguishes
+simulation from statistical estimation: a DMA that a compute task depends
+on *blocks* it, and two collectives sharing a link serialize.
+
+Semantics:
+  * a task becomes READY when all dependencies completed;
+  * each resource runs one task at a time, FIFO in ready order
+    (tie-broken by task id for determinism);
+  * task duration is pre-annotated by the virtual hardware models
+    (repro.core.taskgraph.compiler).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class Task:
+    tid: int
+    name: str
+    layer: str                  # grouping key for per-layer stats
+    resource: str               # e.g. "nce", "dma0", "ici_x"
+    duration: float             # seconds
+    deps: Tuple[int, ...] = ()
+    kind: str = "compute"       # compute | dma | collective | launch | host
+    nbytes: int = 0
+    flops: int = 0
+
+
+@dataclass
+class TaskRecord:
+    task: Task
+    start: float
+    end: float
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    records: List[TaskRecord]
+    resource_busy: Dict[str, float]
+    layer_time: Dict[str, Tuple[float, float]]   # layer -> (start, end)
+
+    def utilization(self, resource: str) -> float:
+        return (self.resource_busy.get(resource, 0.0) / self.makespan
+                if self.makespan > 0 else 0.0)
+
+    def layer_durations(self) -> Dict[str, float]:
+        return {k: e - s for k, (s, e) in self.layer_time.items()}
+
+
+class Simulator:
+    """Event-driven list scheduler over FIFO resources."""
+
+    def __init__(self, tasks: List[Task]):
+        self.tasks = {t.tid: t for t in tasks}
+        if len(self.tasks) != len(tasks):
+            raise ValueError("duplicate task ids")
+        self._validate(tasks)
+
+    def _validate(self, tasks: List[Task]) -> None:
+        ids = set(self.tasks)
+        for t in tasks:
+            for d in t.deps:
+                if d not in ids:
+                    raise ValueError(f"task {t.tid} depends on unknown {d}")
+
+    def run(self) -> SimResult:
+        tasks = self.tasks
+        n_deps = {tid: len(t.deps) for tid, t in tasks.items()}
+        dependents: Dict[int, List[int]] = {tid: [] for tid in tasks}
+        for t in tasks.values():
+            for d in t.deps:
+                dependents[d].append(t.tid)
+
+        # per-resource FIFO queue of ready tasks: (ready_time, tid)
+        queues: Dict[str, List[Tuple[float, int]]] = {}
+        res_free: Dict[str, float] = {}
+        res_busy: Dict[str, float] = {}
+        records: List[TaskRecord] = []
+        # event heap: (time, seq, kind, payload); kinds: 'done'
+        events: List[Tuple[float, int, str, int]] = []
+        seq = 0
+        completed = 0
+        running: Dict[str, Optional[int]] = {}
+
+        def enqueue(tid: int, t_ready: float):
+            t = tasks[tid]
+            q = queues.setdefault(t.resource, [])
+            heapq.heappush(q, (t_ready, tid))
+            try_start(t.resource)
+
+        def try_start(resource: str):
+            nonlocal seq
+            if running.get(resource) is not None:
+                return
+            q = queues.get(resource)
+            if not q:
+                return
+            t_ready, tid = heapq.heappop(q)
+            t = tasks[tid]
+            start = max(t_ready, res_free.get(resource, 0.0))
+            end = start + t.duration
+            running[resource] = tid
+            res_free[resource] = end
+            res_busy[resource] = res_busy.get(resource, 0.0) + t.duration
+            records.append(TaskRecord(t, start, end))
+            seq += 1
+            heapq.heappush(events, (end, seq, "done", tid))
+
+        now = 0.0
+        for tid, t in tasks.items():
+            if n_deps[tid] == 0:
+                enqueue(tid, 0.0)
+
+        while events:
+            now, _, _, tid = heapq.heappop(events)
+            t = tasks[tid]
+            running[t.resource] = None
+            completed += 1
+            for dep_tid in dependents[tid]:
+                n_deps[dep_tid] -= 1
+                if n_deps[dep_tid] == 0:
+                    enqueue(dep_tid, now)
+            try_start(t.resource)
+
+        if completed != len(tasks):
+            stuck = [tid for tid, n in n_deps.items() if n > 0]
+            raise RuntimeError(
+                f"deadlock/cycle: {len(stuck)} tasks never ran, e.g. "
+                f"{[tasks[t].name for t in stuck[:5]]}")
+
+        layer_time: Dict[str, Tuple[float, float]] = {}
+        for r in records:
+            lay = r.task.layer
+            if lay in layer_time:
+                s, e = layer_time[lay]
+                layer_time[lay] = (min(s, r.start), max(e, r.end))
+            else:
+                layer_time[lay] = (r.start, r.end)
+
+        return SimResult(makespan=now, records=records,
+                         resource_busy=res_busy, layer_time=layer_time)

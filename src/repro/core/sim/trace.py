@@ -1,0 +1,59 @@
+"""Gantt-chart export: Chrome trace-event JSON (loadable in Perfetto UI /
+chrome://tracing) + an ASCII Gantt for terminals — the paper's Figure 4.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+from repro.core.sim.engine import SimResult
+
+
+def chrome_trace(result: SimResult, path: Optional[str] = None) -> str:
+    """Emit Chrome trace-event JSON; one 'thread' per resource."""
+    resources = sorted({r.task.resource for r in result.records})
+    tid_of = {res: i for i, res in enumerate(resources)}
+    events: List[Dict] = []
+    for i, res in enumerate(resources):
+        events.append({"ph": "M", "pid": 0, "tid": i,
+                       "name": "thread_name", "args": {"name": res}})
+    for rec in result.records:
+        events.append({
+            "ph": "X", "pid": 0, "tid": tid_of[rec.task.resource],
+            "name": rec.task.name,
+            "cat": rec.task.kind,
+            "ts": rec.start * 1e6,            # microseconds
+            "dur": max(rec.end - rec.start, 1e-9) * 1e6,
+            "args": {"layer": rec.task.layer, "bytes": rec.task.nbytes,
+                     "flops": rec.task.flops},
+        })
+    text = json.dumps({"traceEvents": events, "displayTimeUnit": "ms"})
+    if path:
+        with open(path, "w") as f:
+            f.write(text)
+    return text
+
+
+def ascii_gantt(result: SimResult, width: int = 100,
+                max_rows: int = 24) -> str:
+    """Terminal Gantt chart: one row per resource, '#' = busy."""
+    if not result.records or result.makespan <= 0:
+        return "(empty)"
+    resources = sorted({r.task.resource for r in result.records})[:max_rows]
+    scale = width / result.makespan
+    lines = [f"t=0 {'':{width - 12}} t={result.makespan * 1e3:.3f} ms"]
+    for res in resources:
+        row = [" "] * width
+        for rec in result.records:
+            if rec.task.resource != res:
+                continue
+            a = min(width - 1, int(rec.start * scale))
+            b = min(width, max(a + 1, int(rec.end * scale)))
+            ch = {"compute": "#", "dma": "=", "collective": "~",
+                  "launch": ".", "host": "."}.get(rec.task.kind, "#")
+            for i in range(a, b):
+                row[i] = ch
+        util = result.utilization(res)
+        lines.append(f"{res:>12s} |{''.join(row)}| {util * 100:5.1f}%")
+    lines.append(f"{'':>12s}  #=compute  ==dma  ~=collective")
+    return "\n".join(lines)

@@ -1,0 +1,481 @@
+"""Builders: (ModelConfig x ShapeConfig x mesh) -> per-device LayerOp graph.
+
+This is the AVSM "deep learning compiler" front end: it applies the sharding
+plan (mirroring ``repro.sharding``'s divisibility rules) to derive the
+per-device shard of every operation, and inserts the collectives the plan
+implies (Megatron-style TP all-reduces, MoE all-to-alls, FSDP weight
+all-gathers, gradient reduce-scatters).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.config import ModelConfig, ShapeConfig
+from repro.core.taskgraph.ops import (LayerOp, attention_op, collective_op,
+                                      elementwise_op, matmul_op, scan_op)
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """How the builders shard the program onto the mesh."""
+
+    data: int = 16               # batch-parallel ways (pod*data axes)
+    model: int = 16              # tensor/expert/sequence-parallel ways
+    pods: int = 1
+    fsdp: bool = True            # params+optimizer sharded over data axis
+    seq_parallel: bool = False   # shard sequence on model axis (long ctx)
+    overlap_grad_comm: bool = True
+    bytes_per_el: int = 2        # bf16
+    grad_compression: int = 1    # divisor on grad collective payload (int8=2)
+    remat: str = "dots"          # none | dots | full — backward recompute
+
+    @property
+    def dp_total(self) -> int:
+        return self.data * self.pods
+
+
+def _div(x: int, ways: int) -> int:
+    """Shard size with divisibility fallback (replicate if not divisible)."""
+    return x // ways if ways > 1 and x % ways == 0 else x
+
+
+def _ceil_div(x: int, ways: int) -> int:
+    """Padded shard size (GSPMD pads uneven shards, e.g. 40 heads / 16)."""
+    return -(-x // ways) if ways > 1 else x
+
+
+def _tp(x: int, plan: ShardPlan) -> int:
+    return _div(x, plan.model)
+
+
+class OpList:
+    def __init__(self):
+        self.ops: List[LayerOp] = []
+
+    def add(self, op: LayerOp):
+        self.ops.append(op)
+
+    def extend(self, ops: List[LayerOp]):
+        self.ops.extend(ops)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward ops
+# ---------------------------------------------------------------------------
+
+
+def _attn_layer_ops(cfg: ModelConfig, lay: str, b_l: int, s_q: int, s_kv: int,
+                    plan: ShardPlan, mode: str) -> List[LayerOp]:
+    a = cfg.attention
+    d = cfg.d_model
+    bpe = plan.bytes_per_el
+    t = b_l * s_q                      # tokens on this device
+    ops: List[LayerOp] = []
+    heads_l = _ceil_div(a.num_heads, plan.model)
+    kvh_l = _ceil_div(a.num_kv_heads, plan.model)
+
+    ops.append(elementwise_op(f"{lay}/ln1", lay, t * d * bpe, t * d * bpe,
+                              flops_per_el=6))
+    if a.kind == "mla":
+        qk_dim = a.qk_nope_head_dim + a.qk_rope_head_dim
+        if a.q_lora_rank:
+            ops.append(matmul_op(f"{lay}/wq_a", lay, t, d, a.q_lora_rank, bpe))
+            ops.append(matmul_op(f"{lay}/wq_b", lay, t, a.q_lora_rank,
+                                 heads_l * qk_dim, bpe))
+        else:
+            ops.append(matmul_op(f"{lay}/wq", lay, t, d, heads_l * qk_dim, bpe))
+        ops.append(matmul_op(f"{lay}/wkv_a", lay, t, d,
+                             a.kv_lora_rank + a.qk_rope_head_dim, bpe))
+        ops.append(matmul_op(f"{lay}/wkv_b", lay, t, a.kv_lora_rank,
+                             heads_l * (a.qk_nope_head_dim + a.v_head_dim),
+                             bpe))
+        ops.append(attention_op(f"{lay}/attn", lay, heads_l, s_q, s_kv,
+                                qk_dim, a.v_head_dim,
+                                causal=(mode != "decode"), batch=b_l,
+                                bytes_per_el=bpe))
+        ops.append(matmul_op(f"{lay}/wo", lay, t, heads_l * a.v_head_dim,
+                             d, bpe))
+    else:
+        hd = a.head_dim
+        ops.append(matmul_op(f"{lay}/wq", lay, t, d, heads_l * hd, bpe))
+        ops.append(matmul_op(f"{lay}/wk", lay, t, d, kvh_l * hd, bpe))
+        ops.append(matmul_op(f"{lay}/wv", lay, t, d, kvh_l * hd, bpe))
+        ops.append(attention_op(f"{lay}/attn", lay, heads_l, s_q, s_kv,
+                                hd, hd, causal=(mode != "decode"), batch=b_l,
+                                bytes_per_el=bpe))
+        ops.append(matmul_op(f"{lay}/wo", lay, t, heads_l * hd, d, bpe))
+    # Megatron-TP g: partial sums of the output projection
+    if plan.model > 1:
+        ops.append(collective_op(f"{lay}/attn_ar", lay, "all_reduce",
+                                 t * d * bpe, "model", plan.model))
+    return ops
+
+
+def _ffn_layer_ops(cfg: ModelConfig, lay: str, t: int, plan: ShardPlan,
+                   d_ff: int) -> List[LayerOp]:
+    d = cfg.d_model
+    bpe = plan.bytes_per_el
+    f_l = _tp(d_ff, plan)
+    n_mats = 3 if cfg.act == "swiglu" else 2
+    ops = [elementwise_op(f"{lay}/ln2", lay, t * d * bpe, t * d * bpe, 6)]
+    ops.append(matmul_op(f"{lay}/ffn_up", lay, t, d, f_l * (n_mats - 1), bpe))
+    ops.append(elementwise_op(f"{lay}/ffn_act", lay, t * f_l * bpe,
+                              t * f_l * bpe, 4))
+    ops.append(matmul_op(f"{lay}/ffn_down", lay, t, f_l, d, bpe))
+    if plan.model > 1:
+        ops.append(collective_op(f"{lay}/ffn_ar", lay, "all_reduce",
+                                 t * d * bpe, "model", plan.model))
+    return ops
+
+
+def _moe_layer_ops(cfg: ModelConfig, lay: str, t: int, plan: ShardPlan,
+                   ) -> List[LayerOp]:
+    m = cfg.moe
+    d = cfg.d_model
+    bpe = plan.bytes_per_el
+    e_l = max(1, _div(m.num_experts, plan.model))          # experts/device
+    k = m.num_experts_per_tok
+    ep_ways = m.num_experts // e_l                          # EP sharding ways
+    # token*choice volume this device's experts receive (balanced routing)
+    t_routed = max(1, t * k // ep_ways)
+    f = m.d_ff_expert
+    n_mats = 3 if cfg.act == "swiglu" else 2
+    ops = [elementwise_op(f"{lay}/ln2", lay, t * d * bpe, t * d * bpe, 6)]
+    ops.append(matmul_op(f"{lay}/router", lay, t, d, m.num_experts, 4))
+    ops.append(elementwise_op(f"{lay}/route_topk", lay,
+                              t * m.num_experts * 4, t * k * 4, 8,
+                              bytes_per_el=4))
+    if plan.model > 1:
+        ops.append(collective_op(f"{lay}/moe_dispatch", lay, "all_to_all",
+                                 t_routed * d * bpe, "model", plan.model))
+    # expert matmuls: this device holds e_l experts, receives ~t_routed toks
+    ops.append(matmul_op(f"{lay}/experts_up", lay, t_routed, d,
+                         f * (n_mats - 1), bpe,
+                         flops_scale=1.0))
+    ops.append(elementwise_op(f"{lay}/experts_act", lay, t_routed * f * bpe,
+                              t_routed * f * bpe, 4))
+    ops.append(matmul_op(f"{lay}/experts_down", lay, t_routed, f, d, bpe))
+    if plan.model > 1:
+        ops.append(collective_op(f"{lay}/moe_combine", lay, "all_to_all",
+                                 t_routed * d * bpe, "model", plan.model))
+    if m.num_shared_experts:
+        f_sh = _tp(m.d_ff_shared or f * m.num_shared_experts, plan)
+        ops.append(matmul_op(f"{lay}/shared_up", lay, t, d,
+                             f_sh * (n_mats - 1), bpe))
+        ops.append(matmul_op(f"{lay}/shared_down", lay, t, f_sh, d, bpe))
+    return ops
+
+
+def _ssm_layer_ops(cfg: ModelConfig, lay: str, b_l: int, s: int,
+                   plan: ShardPlan, mode: str) -> List[LayerOp]:
+    ss = cfg.ssm
+    d = cfg.d_model
+    bpe = plan.bytes_per_el
+    di = ss.expand * d
+    di_l = _tp(di, plan)
+    ds = ss.d_state
+    dtr = ss.resolved_dt_rank(d)
+    t = b_l * s
+    ops = [elementwise_op(f"{lay}/ln1", lay, t * d * bpe, t * d * bpe, 6)]
+    ops.append(matmul_op(f"{lay}/in_proj", lay, t, d, 2 * di_l, bpe))
+    ops.append(elementwise_op(f"{lay}/conv1d", lay, t * di_l * bpe,
+                              t * di_l * bpe, 2 * ss.d_conv))
+    ops.append(matmul_op(f"{lay}/x_proj", lay, t, di_l, dtr + 2 * ds, bpe))
+    ops.append(matmul_op(f"{lay}/dt_proj", lay, t, dtr, di_l, bpe))
+    # selective scan: 9 flops/state-el (discretise, recur, project)
+    chunks = max(1, s // 256) if mode != "decode" else 1
+    ops.append(scan_op(f"{lay}/sel_scan", lay,
+                       flops=9.0 * t * di_l * ds,
+                       in_bytes=t * di_l * bpe + 2 * t * ds * bpe,
+                       out_bytes=t * di_l * bpe, seq_chunks=chunks))
+    ops.append(matmul_op(f"{lay}/out_proj", lay, t, di_l, d, bpe))
+    if plan.model > 1:
+        ops.append(collective_op(f"{lay}/ssm_ar", lay, "all_reduce",
+                                 t * d * bpe, "model", plan.model))
+    return ops
+
+
+def _rwkv_layer_ops(cfg: ModelConfig, lay: str, b_l: int, s: int,
+                    plan: ShardPlan, mode: str) -> List[LayerOp]:
+    r = cfg.rwkv
+    d = cfg.d_model
+    bpe = plan.bytes_per_el
+    d_l = _tp(d, plan)
+    t = b_l * s
+    hd = r.head_dim
+    h_l = max(1, d_l // hd)
+    ops = [elementwise_op(f"{lay}/ln1", lay, t * d * bpe, t * d * bpe, 6)]
+    ops.append(matmul_op(f"{lay}/ddlerp", lay, t, d, 5 * r.mix_lora, bpe))
+    for nm in ("wr", "wk", "wv", "wg"):
+        ops.append(matmul_op(f"{lay}/{nm}", lay, t, d, d_l, bpe))
+    ops.append(matmul_op(f"{lay}/w_lora", lay, t, d, r.decay_lora, bpe))
+    # chunked WKV: ~2*(c + 2*hd) flops per (token, channel); c=32
+    chunk = 32
+    chunks = max(1, s // chunk) if mode != "decode" else 1
+    ops.append(scan_op(f"{lay}/wkv", lay,
+                       flops=2.0 * t * h_l * hd * (chunk + 2 * hd),
+                       in_bytes=4 * t * d_l * bpe,
+                       out_bytes=t * d_l * bpe, seq_chunks=chunks,
+                       matrix=True))
+    ops.append(matmul_op(f"{lay}/wo", lay, t, d_l, d, bpe))
+    # channel mix
+    f_l = _tp(cfg.d_ff, plan)
+    ops.append(matmul_op(f"{lay}/cm_k", lay, t, d, f_l, bpe))
+    ops.append(matmul_op(f"{lay}/cm_v", lay, t, f_l, d, bpe))
+    ops.append(matmul_op(f"{lay}/cm_r", lay, t, d, d_l, bpe))
+    if plan.model > 1:
+        ops.append(collective_op(f"{lay}/rwkv_ar", lay, "all_reduce",
+                                 t * d * bpe, "model", plan.model))
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Whole-step builders
+# ---------------------------------------------------------------------------
+
+
+def _decode_cache_ops(cfg: ModelConfig, lay: str, kind: str, b_l: int,
+                      s_ctx: int, plan: ShardPlan) -> List[LayerOp]:
+    """Decode reads the whole per-device KV/state cache once per step."""
+    a = cfg.attention
+    bpe = plan.bytes_per_el
+    ops: List[LayerOp] = []
+    if kind == "attn":
+        if a is not None and a.kind == "mla":
+            per_tok = a.kv_lora_rank + a.qk_rope_head_dim
+            heads_l = _tp(a.num_heads, plan)
+            cache_b = b_l * _div(s_ctx, plan.model if plan.seq_parallel else 1) \
+                * per_tok * bpe
+            flops = 2.0 * b_l * heads_l * s_ctx * (a.kv_lora_rank +
+                                                   a.qk_rope_head_dim +
+                                                   a.kv_lora_rank)
+        else:
+            kvh_l = _ceil_div(a.num_kv_heads, plan.model)
+            s_l = _div(s_ctx, plan.model) if plan.seq_parallel else s_ctx
+            cache_b = 2 * b_l * kvh_l * s_l * a.head_dim * bpe
+            heads_l = _ceil_div(a.num_heads, plan.model)
+            flops = 4.0 * b_l * heads_l * s_l * a.head_dim
+        ops.append(LayerOp(name=f"{lay}/kv_read", layer=lay, kind="attention",
+                           flops=flops, in_bytes=int(cache_b),
+                           out_bytes=b_l * cfg.d_model * bpe,
+                           dims=(1, a.head_dim if a else 64, s_ctx),
+                           matrix=True))
+        if plan.seq_parallel and plan.model > 1:
+            # combine partial softmax stats across sequence shards
+            ops.append(collective_op(f"{lay}/softmax_comb", lay, "all_reduce",
+                                     b_l * cfg.d_model * bpe, "model",
+                                     plan.model))
+    return ops
+
+
+def lm_step_ops(cfg: ModelConfig, shape: ShapeConfig, plan: ShardPlan,
+                ) -> List[LayerOp]:
+    """Per-device LayerOp graph for one step of the given shape cell."""
+    bpe = plan.bytes_per_el
+    mode = shape.mode
+    B, S = shape.global_batch, shape.seq_len
+    b_l = max(1, _div(B, plan.dp_total))
+    if mode == "decode":
+        s_q = 1
+        s_kv = S
+    else:
+        s_q = _div(S, plan.model) if plan.seq_parallel else S
+        s_kv = S
+    t = b_l * s_q
+
+    d = cfg.d_model
+    out = OpList()
+    v_l = _ceil_div(cfg.vocab_size, plan.model)   # GSPMD pads uneven vocab
+
+    # --- embedding ---
+    out.add(LayerOp(name="embed/gather", layer="embed", kind="embed",
+                    flops=0, in_bytes=t * bpe * 2, out_bytes=t * d * bpe,
+                    matrix=False))
+
+    # --- blocks ---
+    mixers = cfg.layer_kinds()
+    ffns = cfg.ffn_kinds()
+    enc_layers = cfg.encoder_layers if cfg.family in ("encdec", "audio") else 0
+    if enc_layers:
+        # enc-dec shape convention: S/2 encoder frames + S/2 decoder tokens.
+        # At decode the encoder output is cached: only the decoder runs.
+        if mode != "decode":
+            s_enc = max(1, s_q // 2)
+            t_enc = b_l * s_enc
+            for i in range(enc_layers):
+                lay = f"enc{i}"
+                out.extend(_attn_layer_ops(cfg, lay, b_l, s_enc, s_enc,
+                                           plan, "train"))
+                out.extend(_ffn_layer_ops(cfg, lay, t_enc, plan, cfg.d_ff))
+            s_q_dec = max(1, s_q // 2)
+            s_kv_dec = s_q_dec
+        else:
+            s_q_dec, s_kv_dec = 1, max(1, S // 2)
+        t = b_l * s_q_dec
+    else:
+        s_q_dec, s_kv_dec = s_q, s_kv
+
+    dense_ff = (cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.d_ff_dense)
+                else cfg.d_ff)
+    for i, (mx, ff) in enumerate(zip(mixers, ffns)):
+        lay = f"layer{i}"
+        if mode == "decode":
+            if mx == "attn":
+                out.extend(_attn_proj_decode_ops(cfg, lay, b_l, plan))
+                out.extend(_decode_cache_ops(cfg, lay, "attn", b_l,
+                                             s_kv_dec, plan))
+            elif mx == "ssm":
+                out.extend(_ssm_layer_ops(cfg, lay, b_l, 1, plan, mode))
+            elif mx == "rwkv":
+                out.extend(_rwkv_layer_ops(cfg, lay, b_l, 1, plan, mode))
+            if ff == "moe":
+                out.extend(_moe_layer_ops(cfg, lay, b_l, plan))
+            elif ff == "dense":
+                out.extend(_ffn_layer_ops(cfg, lay, b_l, plan, dense_ff))
+            # rwkv channel mix is included in _rwkv_layer_ops
+        else:
+            if mx == "attn":
+                out.extend(_attn_layer_ops(cfg, lay, b_l, s_q_dec, s_kv_dec,
+                                           plan, mode))
+            elif mx == "ssm":
+                out.extend(_ssm_layer_ops(cfg, lay, b_l, s_q_dec, plan, mode))
+            elif mx == "rwkv":
+                out.extend(_rwkv_layer_ops(cfg, lay, b_l, s_q_dec, plan, mode))
+            if ff == "moe":
+                out.extend(_moe_layer_ops(cfg, lay, t, plan))
+            elif ff == "dense":
+                out.extend(_ffn_layer_ops(cfg, lay, t, plan, dense_ff))
+
+    # --- head ---
+    t_head = t if mode != "decode" else b_l
+    out.add(matmul_op("head/logits", "head", t_head, d, v_l, bpe))
+    if plan.model > 1:
+        # vocab-sharded logits: softmax/xent needs a cross-shard reduction
+        out.add(collective_op("head/logits_ar", "head", "all_reduce",
+                              t_head * 8, "model", plan.model))
+    if mode == "train":
+        out.add(elementwise_op("head/softmax_xent", "head",
+                               t_head * cfg.vocab_size * 2,
+                               t_head * 4, 6))
+        out.extend(_backward_ops(out.ops, cfg, plan))
+        out.extend(_optimizer_ops(cfg, plan))
+    return out.ops
+
+
+def _attn_proj_decode_ops(cfg: ModelConfig, lay: str, b_l: int,
+                          plan: ShardPlan) -> List[LayerOp]:
+    a = cfg.attention
+    bpe = plan.bytes_per_el
+    d = cfg.d_model
+    heads_l = _ceil_div(a.num_heads, plan.model)
+    ops = []
+    if a.kind == "mla":
+        qk = a.qk_nope_head_dim + a.qk_rope_head_dim
+        ops.append(matmul_op(f"{lay}/q_proj", lay, b_l,
+                             a.q_lora_rank or d, heads_l * qk, bpe))
+        ops.append(matmul_op(f"{lay}/kv_a", lay, b_l, d,
+                             a.kv_lora_rank + a.qk_rope_head_dim, bpe))
+        ops.append(matmul_op(f"{lay}/wo", lay, b_l,
+                             heads_l * a.v_head_dim, d, bpe))
+    else:
+        hd = a.head_dim
+        kvh_l = _ceil_div(a.num_kv_heads, plan.model)
+        ops.append(matmul_op(f"{lay}/wq", lay, b_l, d, heads_l * hd, bpe))
+        ops.append(matmul_op(f"{lay}/wk", lay, b_l, d, kvh_l * hd, bpe))
+        ops.append(matmul_op(f"{lay}/wv", lay, b_l, d, kvh_l * hd, bpe))
+        ops.append(matmul_op(f"{lay}/wo", lay, b_l, heads_l * hd, d, bpe))
+    if plan.model > 1:
+        ops.append(collective_op(f"{lay}/attn_ar", lay, "all_reduce",
+                                 b_l * d * bpe, "model", plan.model))
+    return ops
+
+
+def _backward_ops(fwd_ops: List[LayerOp], cfg: ModelConfig,
+                  plan: ShardPlan) -> List[LayerOp]:
+    """Backward pass: 2x forward matmul FLOPs (dgrad+wgrad), recompute per
+    remat policy, and per-layer gradient reduce-scatter over the data axis."""
+    bwd: List[LayerOp] = []
+    recompute = {"none": 0.0, "dots": 0.35, "full": 1.0}[plan.remat]
+    layer_weight_bytes: Dict[str, int] = {}
+    for op in reversed(fwd_ops):
+        if op.kind == "collective":
+            bwd.append(collective_op(op.name + "_bwd", op.layer + "_bwd",
+                                     op.coll.kind, op.coll.payload,
+                                     op.coll.axis, op.coll.axis_size))
+            continue
+        scale = 2.0 + recompute if op.kind in ("matmul", "attention", "conv") \
+            else 1.0 + recompute
+        bwd.append(LayerOp(
+            name=op.name + "_bwd", layer=op.layer + "_bwd", kind=op.kind,
+            flops=op.flops * scale,
+            weight_bytes=op.weight_bytes * 2,       # read W for dgrad, write dW
+            in_bytes=op.in_bytes + op.out_bytes,
+            out_bytes=op.in_bytes,
+            dims=op.dims, matrix=op.matrix, seq_chunks=op.seq_chunks))
+        layer_weight_bytes[op.layer] = (layer_weight_bytes.get(op.layer, 0)
+                                        + op.weight_bytes)
+    # gradient reduction over the data axis (per layer, overlappable)
+    if plan.dp_total > 1:
+        for lay, wb in layer_weight_bytes.items():
+            if wb == 0:
+                continue
+            payload = wb // plan.grad_compression
+            kind = "reduce_scatter" if plan.fsdp else "all_reduce"
+            bwd.append(collective_op(f"{lay}/grad_rs", f"{lay}_bwd", kind,
+                                     payload, "data", plan.dp_total))
+    return bwd
+
+
+def _optimizer_ops(cfg: ModelConfig, plan: ShardPlan) -> List[LayerOp]:
+    """AdamW update: read param+m+v+grad, write param+m+v (f32 states)."""
+    from repro.models import api
+    n = api.param_count(cfg)
+    shard = plan.dp_total * plan.model if plan.fsdp else plan.model
+    n_l = n // max(1, shard)
+    nbytes = n_l * (2 + 4 + 4 + 2)      # bf16 param, f32 m, f32 v, bf16 grad
+    return [LayerOp(name="opt/adamw", layer="optimizer", kind="optimizer",
+                    flops=12.0 * n_l, in_bytes=nbytes,
+                    out_bytes=n_l * (2 + 4 + 4), matrix=False)]
+
+
+# ---------------------------------------------------------------------------
+# ConvNet (DilatedVGG) builder — single-chip AVSM (the paper's Fig 2 system)
+# ---------------------------------------------------------------------------
+
+
+def convnet_ops(cfg: ModelConfig, batch: int = 1,
+                bytes_per_el: int = 2) -> List[LayerOp]:
+    net = cfg.convnet
+    h, w = net.in_hw
+    ops: List[LayerOp] = []
+    for lay in net.layers:
+        if lay.kind in ("conv", "dense"):
+            flops = 2.0 * batch * h * w * lay.in_ch * lay.out_ch \
+                * lay.kernel * lay.kernel
+            ops.append(LayerOp(
+                name=lay.name, layer=lay.name, kind="conv", flops=flops,
+                weight_bytes=lay.kernel ** 2 * lay.in_ch * lay.out_ch
+                * bytes_per_el,
+                in_bytes=batch * h * w * lay.in_ch * bytes_per_el,
+                out_bytes=batch * (h // lay.stride) * (w // lay.stride)
+                * lay.out_ch * bytes_per_el,
+                dims=(batch * h * w, lay.in_ch * lay.kernel ** 2, lay.out_ch),
+                matrix=True))
+            h, w = h // lay.stride, w // lay.stride
+        elif lay.kind == "pool":
+            ops.append(elementwise_op(
+                lay.name, lay.name,
+                batch * h * w * lay.in_ch * bytes_per_el,
+                batch * (h // lay.stride) * (w // lay.stride) * lay.in_ch
+                * bytes_per_el, 1, bytes_per_el))
+            h, w = h // lay.stride, w // lay.stride
+        elif lay.kind == "upsample":
+            ops.append(elementwise_op(
+                lay.name, lay.name,
+                batch * h * w * lay.in_ch * bytes_per_el,
+                batch * h * lay.stride * w * lay.stride * lay.out_ch
+                * bytes_per_el, 4, bytes_per_el))
+            h, w = h * lay.stride, w * lay.stride
+    return ops

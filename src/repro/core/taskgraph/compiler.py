@@ -1,0 +1,182 @@
+"""AVSM compiler back end: LayerOps -> hardware-adapted task graph.
+
+Mirrors the paper's flow: the compiler "considers the memory hierarchy, the
+on-chip memory sizes and the supported operations" of the target — every op
+is tiled so a tile's working set fits the on-chip memory (VMEM/BRAM) with
+double buffering, and each tile becomes DMA-in -> compute -> DMA-out tasks
+on the virtual hardware models.  Collectives become per-hop link tasks
+(ring algorithms), so the DES sees link contention and overlap causally.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional
+
+from repro.core.hw import SystemDescription
+from repro.core.sim.engine import Task
+from repro.core.taskgraph.ops import LayerOp
+
+
+@dataclass(frozen=True)
+class CompilePlan:
+    """Back-end knobs (hillclimb surface of the AVSM)."""
+
+    dtype: str = "bfloat16"
+    vmem_fill: float = 0.45          # fraction of VMEM per tile buffer
+    double_buffer: int = 2           # DMA prefetch depth (tiles)
+    max_tiles_per_op: int = 16       # aggregate beyond this (sim granularity)
+    bidirectional_ici: bool = True   # ring uses both directions
+    overlap_grad_comm: bool = True   # grad collectives off the critical path
+    weights_resident: bool = False   # pin weights on-chip (paper's NCE mode)
+
+
+@dataclass
+class CompiledGraph:
+    tasks: List[Task]
+    ops: List[LayerOp]
+    system: SystemDescription
+    plan: CompilePlan
+
+    @property
+    def total_flops(self) -> float:
+        return sum(o.flops for o in self.ops)
+
+    @property
+    def total_hbm_bytes(self) -> float:
+        return sum(o.total_bytes for o in self.ops if o.kind != "collective")
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(o.coll.payload for o in self.ops if o.coll is not None)
+
+
+def _mxu_efficiency(op: LayerOp, align: int) -> float:
+    """Pad-to-align efficiency for matrix ops (paper: 'arrangement of the
+    multiplier array')."""
+    if not op.dims:
+        return 1.0
+    eff = 1.0
+    for dim in op.dims:
+        if dim <= 0:
+            continue
+        padded = math.ceil(dim / align) * align
+        eff *= dim / padded
+    return max(eff, 0.05)
+
+
+def compile_ops(ops: List[LayerOp], system: SystemDescription,
+                plan: Optional[CompilePlan] = None) -> CompiledGraph:
+    plan = plan or CompilePlan()
+    chip = system.chip
+    eng = chip.compute
+    mem = chip.memory
+    vmem_budget = max(1, int(chip.onchip.capacity * plan.vmem_fill))
+
+    tasks: List[Task] = []
+    tid = 0
+
+    def new_task(**kw) -> Task:
+        nonlocal tid
+        t = Task(tid=tid, **kw)
+        tasks.append(t)
+        tid += 1
+        return t
+
+    # tail compute task of the previous op (data dependency chain) and the
+    # last grad-producing compute per layer (for overlap-aware collectives)
+    prev_tail: Optional[Task] = None
+    barrier_tail: Optional[Task] = None   # for non-overlapped collectives
+
+    for op in ops:
+        if op.kind == "collective":
+            c = op.coll
+            n = c.axis_size
+            if n <= 1 or c.payload <= 0:
+                continue
+            link_bw = chip.link.bandwidth * (2 if plan.bidirectional_ici
+                                             else 1)
+            if c.axis == "pod":
+                link_bw = system.dcn_bandwidth
+            if c.kind == "all_reduce":
+                steps, step_bytes = 2 * (n - 1), c.payload / n
+            elif c.kind in ("all_gather", "reduce_scatter"):
+                steps, step_bytes = n - 1, c.payload / n
+            elif c.kind == "all_to_all":
+                steps, step_bytes = n - 1, c.payload / n
+            else:  # permute
+                steps, step_bytes = 1, c.payload
+            dep = prev_tail if plan.overlap_grad_comm or \
+                not op.name.endswith("grad_rs") else barrier_tail
+            prev = dep
+            for s in range(steps):
+                t = new_task(
+                    name=f"{op.name}/hop{s}", layer=op.layer,
+                    resource=f"ici_{c.axis}",
+                    duration=step_bytes / link_bw + chip.link.latency,
+                    deps=(prev.tid,) if prev is not None else (),
+                    kind="collective", nbytes=int(step_bytes))
+                prev = t
+            # collectives producing activations gate the next op
+            if not op.name.endswith(("grad_rs", "grad_rs_bwd")):
+                prev_tail = prev
+            continue
+
+        # ---- tiled compute op ----
+        eff = _mxu_efficiency(op, eng.align) if op.matrix else 1.0
+        flops_rate = eng.flops_for(plan.dtype, matrix=op.matrix)
+        working = max(op.total_bytes, 1)
+        n_tiles = max(1, math.ceil(working / vmem_budget))
+        n_tiles = max(n_tiles, op.seq_chunks)
+        agg = 1
+        if n_tiles > plan.max_tiles_per_op and op.seq_chunks <= 1:
+            agg = math.ceil(n_tiles / plan.max_tiles_per_op)
+            n_tiles = math.ceil(n_tiles / agg)
+
+        w_share = (0 if plan.weights_resident
+                   else op.weight_bytes / n_tiles)
+        in_share = op.in_bytes / n_tiles
+        out_share = op.out_bytes / n_tiles
+        comp_dur = (op.flops / n_tiles) / (flops_rate * eff) \
+            + eng.launch_overhead
+
+        producer_tail = prev_tail
+        compute_tasks: List[Task] = []
+        for i in range(n_tiles):
+            deps_w: List[int] = []
+            # double-buffer constraint: DMA i waits for compute i - depth
+            if i >= plan.double_buffer and compute_tasks:
+                deps_w.append(compute_tasks[i - plan.double_buffer].tid)
+            dma_deps = list(deps_w)
+            if producer_tail is not None:
+                dma_deps.append(producer_tail.tid)
+            dma_res = f"dma{i % mem.num_dma_engines}"
+            t_in = None
+            if w_share + in_share > 0:
+                t_in = new_task(
+                    name=f"{op.name}/t{i}/dma_in", layer=op.layer,
+                    resource=dma_res,
+                    duration=(w_share + in_share) / mem.bandwidth
+                    + mem.latency,
+                    deps=tuple(dma_deps), kind="dma",
+                    nbytes=int(w_share + in_share))
+            comp_deps = [t_in.tid] if t_in is not None else list(dma_deps)
+            if op.seq_chunks > 1 and compute_tasks:
+                comp_deps.append(compute_tasks[-1].tid)   # recurrence chain
+            t_c = new_task(
+                name=f"{op.name}/t{i}/compute", layer=op.layer,
+                resource="nce" if op.matrix else "vpu",
+                duration=comp_dur, deps=tuple(comp_deps),
+                kind="compute", flops=int(op.flops / n_tiles),
+                nbytes=int(w_share + in_share + out_share))
+            compute_tasks.append(t_c)
+            if out_share > 0:
+                new_task(
+                    name=f"{op.name}/t{i}/dma_out", layer=op.layer,
+                    resource=dma_res,
+                    duration=out_share / mem.bandwidth + mem.latency,
+                    deps=(t_c.tid,), kind="dma", nbytes=int(out_share))
+        prev_tail = compute_tasks[-1]
+        barrier_tail = compute_tasks[-1]
+
+    return CompiledGraph(tasks=tasks, ops=list(ops), system=system, plan=plan)

@@ -1,0 +1,97 @@
+"""Layer-op IR — the "DNN graph" the AVSM compiler consumes.
+
+A ``LayerOp`` is one logical operation of the per-device SPMD program with
+its compute/memory/communication footprint already resolved to *this
+device's shard* (the builders in ``builders.py`` apply the sharding plan).
+The AVSM compiler (``compiler.py``) tiles these against the on-chip memory
+of a virtual hardware model and emits DMA/compute/collective tasks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class CollectiveSpec:
+    kind: str            # all_reduce | all_gather | reduce_scatter |
+    #                      all_to_all | permute
+    payload: int         # bytes per participating device
+    axis: str            # mesh axis name ("data" | "model" | "pod")
+    axis_size: int
+
+
+@dataclass
+class LayerOp:
+    name: str            # e.g. "layer12/ffn_up"
+    layer: str           # grouping key, e.g. "layer12"
+    kind: str            # matmul | conv | attention | scan | elementwise |
+    #                      embed | collective | optimizer
+    flops: float = 0.0   # per-device FLOPs
+    weight_bytes: int = 0
+    in_bytes: int = 0
+    out_bytes: int = 0
+    # matmul/conv dims (per-device) for MXU-alignment efficiency modelling
+    dims: Tuple[int, ...] = ()
+    matrix: bool = True          # MXU (matrix) vs VPU (vector) engine
+    seq_chunks: int = 1          # >1 => sequential recurrence chain
+    coll: Optional[CollectiveSpec] = None
+
+    @property
+    def total_bytes(self) -> int:
+        return self.weight_bytes + self.in_bytes + self.out_bytes
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.total_bytes, 1)
+
+
+def matmul_op(name: str, layer: str, m: int, k: int, n: int,
+              bytes_per_el: int = 2, weight_resident: bool = False,
+              flops_scale: float = 1.0) -> LayerOp:
+    """A (m,k) x (k,n) matmul; weight_resident skips the weight DMA
+    (weights pinned in on-chip memory — not the TPU default)."""
+    return LayerOp(
+        name=name, layer=layer, kind="matmul",
+        flops=2.0 * m * k * n * flops_scale,
+        weight_bytes=0 if weight_resident else k * n * bytes_per_el,
+        in_bytes=m * k * bytes_per_el,
+        out_bytes=m * n * bytes_per_el,
+        dims=(m, k, n), matrix=True)
+
+
+def elementwise_op(name: str, layer: str, nbytes_in: int, nbytes_out: int,
+                   flops_per_el: float = 2.0, bytes_per_el: int = 2) -> LayerOp:
+    n_el = nbytes_in / bytes_per_el
+    return LayerOp(name=name, layer=layer, kind="elementwise",
+                   flops=flops_per_el * n_el, in_bytes=int(nbytes_in),
+                   out_bytes=int(nbytes_out), matrix=False)
+
+
+def attention_op(name: str, layer: str, heads: int, sq: int, sk: int,
+                 hd: int, vd: int, causal: bool, batch: int,
+                 bytes_per_el: int = 2) -> LayerOp:
+    """Flash-style attention core (QK^T + PV), per device."""
+    frac = 0.5 if (causal and sq == sk) else 1.0
+    flops = 2.0 * batch * heads * sq * sk * (hd + vd) * frac
+    qb = batch * heads * sq * hd * bytes_per_el
+    kb = batch * heads * sk * hd * bytes_per_el
+    vb = batch * heads * sk * vd * bytes_per_el
+    ob = batch * heads * sq * vd * bytes_per_el
+    return LayerOp(name=name, layer=layer, kind="attention", flops=flops,
+                   in_bytes=qb + kb + vb, out_bytes=ob,
+                   dims=(sq, hd, sk), matrix=True)
+
+
+def scan_op(name: str, layer: str, flops: float, in_bytes: int,
+            out_bytes: int, seq_chunks: int, matrix: bool = False) -> LayerOp:
+    return LayerOp(name=name, layer=layer, kind="scan", flops=flops,
+                   in_bytes=in_bytes, out_bytes=out_bytes,
+                   seq_chunks=max(1, seq_chunks), matrix=matrix)
+
+
+def collective_op(name: str, layer: str, kind: str, payload: int,
+                  axis: str, axis_size: int) -> LayerOp:
+    return LayerOp(name=name, layer=layer, kind="collective",
+                   coll=CollectiveSpec(kind=kind, payload=int(payload),
+                                       axis=axis, axis_size=axis_size))

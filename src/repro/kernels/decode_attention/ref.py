@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash-decode."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q: (B,Hq,hd); k,v: (B,Hkv,S,hd); kv_len scalar."""
+    B, Hq, hd = q.shape
+    _, Hkv, S, _ = k.shape
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, hd).astype(jnp.float32)
+    s = jnp.einsum("bngd,bnsd->bngs", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    mask = jnp.arange(S)[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngs,bnsd->bngd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, hd).astype(q.dtype)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """q: (B, Hq, Sq, hd); k, v: (B, Hkv, Sk, hd)."""
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, Sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bngqd,bnkd->bngqk", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    if causal:
+        q_pos = q_offset + jnp.arange(Sq)
+        k_pos = jnp.arange(Sk)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bngqk,bnkd->bngqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, hd).astype(q.dtype)

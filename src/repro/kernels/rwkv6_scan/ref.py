@@ -1,0 +1,29 @@
+"""Pure-jnp sequential oracle for the RWKV-6 WKV recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, logw, u, state0):
+    """Sequential reference.  r,k,v,logw: (N,S,hd); u: (N,hd);
+    state0: (N,hd,hd).  y_t = r_t (S_{t-1} + diag(u) k_t^T v_t);
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t.
+    """
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                 # (N,hd) each
+        kv = kt[:, :, None] * vt[:, None, :]             # (N,hd,hd)
+        y = jnp.einsum("nk,nkv->nv", rt, s + uf[:, :, None] * kv)
+        s_new = wt[:, :, None] * s + kv
+        return s_new, y
+
+    xs = (rf.transpose(1, 0, 2), kf.transpose(1, 0, 2),
+          vf.transpose(1, 0, 2), wf.transpose(1, 0, 2))
+    s_fin, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), s_fin

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel for the Mamba selective scan (chunked).
+
+Grid (batch, d_inner_blocks, chunks) with the chunk axis sequential: the
+(di_block x d_state) hidden state is carried in VMEM scratch.  Within a
+chunk the recurrence h_t = da_t * h_{t-1} + dbu_t is evaluated with an
+associative scan over the chunk axis — identical math to the XLA twin in
+repro.models.ssm.selective_scan_chunked.  Blocking over d_inner keeps the
+(chunk, di_block, d_state) discretised tensors inside VMEM for d_inner up
+to 16384 (jamba).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                y_ref, hout_ref, h_scr):
+    c_idx = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)          # (c, dib)
+    dt = dt_ref[0].astype(jnp.float32)        # (c, dib)
+    A = a_ref[...].astype(jnp.float32)        # (dib, ds)
+    B = b_ref[0].astype(jnp.float32)          # (c, ds)
+    C = c_ref[0].astype(jnp.float32)          # (c, ds)
+    D = d_ref[...].astype(jnp.float32)        # (1, dib)
+
+    da = jnp.exp(dt[:, :, None] * (-jnp.exp(A))[None])   # (c, dib, ds)
+    dbu = (dt * u)[:, :, None] * B[:, None, :]           # (c, dib, ds)
+
+    def comb(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(comb, (da, dbu), axis=0)
+    h_t = a_cum * h_scr[...][None] + b_cum               # (c, dib, ds)
+    y = jnp.einsum("cds,cs->cd", h_t, C) + u * D
+    y_ref[0] = y.astype(y_ref.dtype)
+    h_scr[...] = h_t[-1]
+
+    @pl.when(c_idx == nc - 1)
+    def _finish():
+        hout_ref[0] = h_scr[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block_di", "interpret"))
+def ssm_scan(u, dt, A, B, C, D, h0, *, chunk: int = 64,
+             block_di: int = 512, interpret: bool = False):
+    """u, dt: (Bz, S, di); A: (di, ds); B, C: (Bz, S, ds); D: (di,);
+    h0: (Bz, di, ds) f32.  Returns (y (Bz,S,di) f32, h (Bz,di,ds) f32)."""
+    Bz, S, di = u.shape
+    ds = A.shape[-1]
+    chunk = min(chunk, S)
+    block_di = min(block_di, di)
+    nc = -(-S // chunk)
+    ndi = -(-di // block_di)
+    assert di % block_di == 0, "d_inner must divide block_di"
+    pad = nc * chunk - S
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    D2 = D.reshape(1, di)
+
+    y, h = pl.pallas_call(
+        _ssm_kernel,
+        grid=(Bz, ndi, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_di), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, block_di), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((block_di, ds), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, block_di), lambda b, d, c: (0, d)),
+            pl.BlockSpec((1, block_di, ds), lambda b, d, c: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_di), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, block_di, ds), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bz, nc * chunk, di), jnp.float32),
+            jax.ShapeDtypeStruct((Bz, di, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_di, ds), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(u, dt, A, B, C, D2, h0)
+    return y[:, :S], h

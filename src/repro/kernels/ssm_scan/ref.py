@@ -1,0 +1,28 @@
+"""Pure-jnp sequential oracle for the Mamba selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(u, dt, A, B, C, D, h0):
+    """Sequential reference.  Shapes as repro.kernels.ssm_scan.kernel."""
+    uf = u.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = -jnp.exp(A.astype(jnp.float32))
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+
+    def step(h, inp):
+        ut, dtt, bt, ct = inp
+        da = jnp.exp(dtt[:, :, None] * Af[None])          # (Bz,di,ds)
+        dbu = (dtt * ut)[:, :, None] * bt[:, None, :]
+        h_new = da * h + dbu
+        y = jnp.einsum("bds,bs->bd", h_new, ct) + ut * Df[None]
+        return h_new, y
+
+    xs = (uf.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+          Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    h_fin, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), h_fin

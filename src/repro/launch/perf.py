@@ -1,0 +1,153 @@
+"""Perf-iteration harness (§Perf): hypothesis -> change -> re-lower ->
+measure, on dry-run artifacts.
+
+Each iteration re-runs one (arch x shape) cell with a knob changed and
+reports the three roofline terms + the top HBM/FLOP contributors, appending
+to runs/perf/<cell>.jsonl so EXPERIMENTS.md §Perf can show the full path.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch qwen2.5-14b \
+        --shape train_4k --tag sp_on --seq-parallel 1 --remat dots
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.core.config import LM_SHAPES, OptimizerConfig, get_arch
+from repro.core.hlo.analysis import analyze_compiled, top_contributors
+from repro.core.hw import (TPU_V5E_HBM_BW, TPU_V5E_ICI_BW,
+                           TPU_V5E_PEAK_FLOPS)
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as steps_lib
+from repro.models import api
+from repro.optim import adamw
+from repro.sharding import activation_rules
+
+
+def run_cell(arch_id: str, shape_name: str, *, remat: str = "full",
+             seq_parallel=None, capacity_factor=None, multi_pod=False,
+             tag: str = "baseline", show_top: int = 8) -> dict:
+    spec = get_arch(arch_id)
+    cfg = spec.model
+    if capacity_factor is not None and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         capacity_factor=capacity_factor))
+    shape = LM_SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    if seq_parallel is None:
+        seq_parallel = shape.mode == "decode"
+
+    params_shapes = api.param_shapes(cfg)
+    inputs = api.input_specs(cfg, shape)
+    t0 = time.perf_counter()
+    with activation_rules(mesh, seq_parallel=seq_parallel):
+        if shape.mode == "train":
+            opt_cfg = OptimizerConfig()
+            opt_shapes = jax.eval_shape(
+                lambda: adamw.init_opt_state(
+                    jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                        s.shape, s.dtype), params_shapes), opt_cfg))
+            sh = mesh_lib.shardings_for(cfg, shape, mesh, params_shapes,
+                                        opt_shapes, inputs,
+                                        seq_parallel=seq_parallel)
+            step_fn, _ = steps_lib.step_for_shape(cfg, shape, opt_cfg,
+                                                  remat=remat)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(sh["params"], sh["opt_state"],
+                                           sh["batch"]),
+                             out_shardings=(sh["params"], sh["opt_state"],
+                                            None),
+                             donate_argnums=(0, 1))
+            compiled = jitted.lower(params_shapes, opt_shapes,
+                                    inputs).compile()
+        elif shape.mode == "prefill":
+            sh = mesh_lib.shardings_for(cfg, shape, mesh, params_shapes,
+                                        None, inputs,
+                                        seq_parallel=seq_parallel)
+            step_fn, _ = steps_lib.step_for_shape(cfg, shape)
+            compiled = jax.jit(step_fn,
+                               in_shardings=(sh["params"], sh["batch"])
+                               ).lower(params_shapes, inputs).compile()
+        else:
+            sh = mesh_lib.shardings_for(cfg, shape, mesh, params_shapes,
+                                        None, inputs,
+                                        seq_parallel=seq_parallel)
+            step_fn, _ = steps_lib.step_for_shape(cfg, shape)
+            compiled = jax.jit(
+                step_fn,
+                in_shardings=(sh["params"], sh["state"], sh["tokens"],
+                              sh["pos"]),
+                out_shardings=(None, sh["state"]),
+                donate_argnums=(1,)).lower(
+                    params_shapes, inputs["state"], inputs["tokens"],
+                    inputs["pos"]).compile()
+    wall = time.perf_counter() - t0
+
+    rep = analyze_compiled(compiled)
+    chips = mesh.devices.size
+    t_c = rep["flops"] / TPU_V5E_PEAK_FLOPS
+    t_m = rep["hbm_bytes"] / TPU_V5E_HBM_BW
+    # TPU-adjusted: f32 collective payloads are CPU dot-legalization
+    # artifacts for bf16 models (bf16 on the real target)
+    t_i = rep.get("collective_bytes_tpu_adjusted",
+                  rep["collective_bytes"]) / TPU_V5E_ICI_BW
+    t_i_raw = rep["collective_bytes"] / TPU_V5E_ICI_BW
+    mf = api.model_flops(cfg, shape)
+    out = {
+        "tag": tag, "arch": arch_id, "shape": shape_name,
+        "mesh": mesh_lib.mesh_name(mesh), "remat": remat,
+        "seq_parallel": seq_parallel, "capacity_factor": capacity_factor,
+        "t_compute_ms": t_c * 1e3, "t_memory_ms": t_m * 1e3,
+        "t_collective_ms": t_i * 1e3,
+        "t_collective_raw_ms": t_i_raw * 1e3,
+        "bound_ms": max(t_c, t_m, t_i) * 1e3,
+        "dominant": max(("compute", t_c), ("memory", t_m),
+                        ("collective", t_i), key=lambda kv: kv[1])[0],
+        "useful_ratio": mf / chips / max(rep["flops"], 1),
+        "peak_bytes_gb": rep.get("peak_bytes", 0) / 1e9,
+        "roofline_fraction": (mf / (chips * TPU_V5E_PEAK_FLOPS))
+        / max(t_c, t_m, t_i),
+        "compile_s": wall,
+        "collective_breakdown": rep["collective_breakdown"],
+    }
+    print(f"[{tag}] {arch_id}/{shape_name}  t_comp={t_c * 1e3:.1f}ms  "
+          f"t_mem={t_m * 1e3:.1f}ms  t_coll={t_i * 1e3:.1f}ms  "
+          f"bound={out['dominant']}  roofline={out['roofline_fraction']:.1%} "
+          f"peak_mem={out['peak_bytes_gb']:.1f}GB")
+    if show_top:
+        print("  top HBM contributors (per device, x trips):")
+        for val, mult, comp, opc, name in top_contributors(
+                compiled.as_text(), show_top, "bytes"):
+            print(f"    {val / 1e9:9.2f}GB x{mult:3d} {opc:12s} {name[:70]}")
+    os.makedirs("runs/perf", exist_ok=True)
+    with open(f"runs/perf/{arch_id}_{shape_name}.jsonl", "a") as f:
+        f.write(json.dumps(out) + "\n")
+    return out
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--tag", default="baseline")
+    p.add_argument("--remat", default="full")
+    p.add_argument("--seq-parallel", type=int, default=-1)
+    p.add_argument("--capacity-factor", type=float, default=None)
+    p.add_argument("--multi-pod", action="store_true")
+    args = p.parse_args(argv)
+    run_cell(args.arch, args.shape, remat=args.remat,
+             seq_parallel=None if args.seq_parallel < 0
+             else bool(args.seq_parallel),
+             capacity_factor=args.capacity_factor,
+             multi_pod=args.multi_pod, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Step functions (train / prefill / decode) — the units the launcher jits
+and the dry-run lowers.
+
+``make_train_step``/``make_serve_step`` close over (cfg, train cfg) and are
+pure: state in, state out, donate-able.  Sharding comes from in_shardings /
+out_shardings computed by ``repro.launch.mesh.shardings_for``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, OptimizerConfig, ShapeConfig
+from repro.models import api
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    remat: str = "dots") -> Callable:
+    def train_step(params, opt_state, batch):
+        def loss_of(p):
+            loss, metrics = api.loss_fn(p, cfg, batch, remat=remat) \
+                if cfg.family != "convnet" else api.loss_fn(p, cfg, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw.adamw_update(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        return api.prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """One decode step: new token against an existing cache."""
+
+    def serve_step(params, state, tokens, pos):
+        return api.decode_step(params, cfg, state, tokens, pos)
+
+    return serve_step
+
+
+def step_for_shape(cfg: ModelConfig, shape: ShapeConfig,
+                   opt_cfg: Optional[OptimizerConfig] = None,
+                   remat: str = "dots") -> Tuple[Callable, str]:
+    """Returns (step_fn, kind) for a shape cell.
+
+    train  -> train_step(params, opt_state, batch)
+    prefill-> prefill_step(params, batch)
+    decode -> serve_step(params, state, tokens, pos)
+    """
+    if shape.mode == "train":
+        return make_train_step(cfg, opt_cfg or OptimizerConfig(),
+                               remat=remat), "train"
+    if shape.mode == "prefill":
+        return make_prefill_step(cfg), "prefill"
+    return make_serve_step(cfg), "decode"

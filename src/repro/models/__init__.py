@@ -1,0 +1,2 @@
+"""Model zoo: dense/MoE/MLA transformers, RWKV6, Mamba, hybrids, enc-dec,
+VLM backbones and the paper's DilatedVGG."""

@@ -1,0 +1,173 @@
+"""Unified model API: family dispatch + input specs + analytical FLOPs.
+
+Every launcher, test and benchmark goes through this module:
+
+  init_params(key, cfg)                 -> param pytree
+  loss_fn(params, cfg, batch)           -> (scalar, metrics)
+  forward(params, cfg, batch)           -> (logits, aux)
+  prefill(params, cfg, batch)           -> (logits, cache)
+  decode_step(params, cfg, state, tokens, pos) -> (logits, state)
+  init_decode_state(cfg, batch, max_len)-> ShapeDtypeStruct pytree
+  input_specs(cfg, shape)               -> dict[str, ShapeDtypeStruct]
+  param_count(cfg, active_only=False)   -> int
+  model_flops(cfg, shape)               -> 6*N*D (or 6*N_active*D)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig, ShapeConfig
+from repro.models import dilated_vgg as DVGG
+from repro.models import encdec as ED
+from repro.models import layers as L
+from repro.models import lm as LM
+
+Params = Dict[str, Any]
+
+_LM_FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm")
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family in _LM_FAMILIES:
+        return LM
+    if cfg.family in ("encdec", "audio"):
+        return ED
+    if cfg.family == "convnet":
+        return DVGG
+    raise ValueError(cfg.family)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    return _mod(cfg).init_params(key, cfg)
+
+
+def param_shapes(cfg: ModelConfig) -> Params:
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+def forward(params, cfg: ModelConfig, batch, **kw):
+    return _mod(cfg).forward(params, cfg, batch, **kw)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, **kw):
+    return _mod(cfg).loss_fn(params, cfg, batch, **kw)
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    return _mod(cfg).prefill(params, cfg, batch)
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens, pos):
+    return _mod(cfg).decode_step(params, cfg, state, tokens, pos)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    return _mod(cfg).init_decode_state(cfg, batch, max_len)
+
+
+def allocate_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    spec = init_decode_state(cfg, batch, max_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; never allocates)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Inputs for the step function selected by ``shape.mode``.
+
+    train/prefill -> batch dict;  decode -> {tokens, pos, state}.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    emb_dt = L.dtype_of(cfg.compute_dtype)
+
+    if cfg.family == "convnet":
+        net = cfg.convnet
+        h, w = net.in_hw
+        return {"image": jax.ShapeDtypeStruct((B, h, w, net.in_ch), emb_dt),
+                "labels": jax.ShapeDtypeStruct((B, h, w), i32)}
+
+    if cfg.family in ("encdec", "audio"):
+        s_enc, s_dec = S // 2, S // 2
+        if shape.mode in ("train", "prefill"):
+            return {
+                "frames": jax.ShapeDtypeStruct((B, s_enc, cfg.d_model), emb_dt),
+                "tokens": jax.ShapeDtypeStruct((B, s_dec), i32),
+            }
+        state = init_decode_state(cfg, B, s_dec)
+        return {"tokens": jax.ShapeDtypeStruct((B,), i32),
+                "pos": jax.ShapeDtypeStruct((), i32),
+                "state": state}
+
+    if shape.mode in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        s_text = S
+        if cfg.frontend and cfg.frontend.kind != "none":
+            npre = min(cfg.frontend.num_prefix, S // 2)
+            s_text = S - npre
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, npre, cfg.d_model), emb_dt)
+        batch["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        return batch
+
+    # decode: one new token against a cache of S positions
+    state = init_decode_state(cfg, B, S)
+    return {"tokens": jax.ShapeDtypeStruct((B,), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+            "state": state}
+
+
+# ---------------------------------------------------------------------------
+# Analytical parameter / FLOP counts
+# ---------------------------------------------------------------------------
+
+
+def _leaf_sizes_with_paths(tree, prefix=""):
+    out = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.extend(_leaf_sizes_with_paths(v, f"{prefix}/{k}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.extend(_leaf_sizes_with_paths(v, f"{prefix}/{i}"))
+    else:
+        out.append((prefix, int(np.prod(tree.shape))))
+    return out
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = param_shapes(cfg)
+    total = 0
+    for path, n in _leaf_sizes_with_paths(shapes):
+        if active_only and cfg.moe is not None and "ffn_moe/w_" in path:
+            # routed experts: only top-k of E are active per token
+            n = n * cfg.moe.num_experts_per_tok // cfg.moe.num_experts
+        total += n
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for the step.
+
+    train: D = tokens processed (fwd+bwd = 6 N per token)
+    prefill: 2 N per token (fwd only)
+    decode: 2 N per generated token (D = batch tokens).
+    """
+    if cfg.family == "convnet":
+        return float("nan")
+    n_active = param_count(cfg, active_only=True)
+    seq = shape.seq_len
+    if cfg.family in ("encdec", "audio"):
+        # shape convention: S/2 encoder frames + S/2 decoder tokens; each
+        # stack (roughly half of N) sees S/2 tokens => N * S/2 overall.
+        seq = seq // 2
+    tokens = shape.global_batch * (1 if shape.mode == "decode" else seq)
+    per_token = 6 * n_active if shape.mode == "train" else 2 * n_active
+    return float(per_token) * float(tokens)

@@ -1,0 +1,79 @@
+"""DilatedVGG (Yu & Koltun 2015, as used by the paper's FPGA prototype).
+
+VGG-16-style front end with the pool4/pool5 stages removed and dilation
+introduced instead, a 'dense1' 1x1 stage, and bilinear upscaling — matching
+the layer names in the paper's Figures 5-7 (conv1_1 ... conv4_5, Dense1,
+Upscaling).  Functional jnp implementation for smoke tests; the AVSM task
+graph is generated from the same ConvNetConfig (repro.core.taskgraph).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ConvLayerConfig, ConvNetConfig, ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    net = cfg.convnet
+    dt = L.dtype_of(cfg.param_dtype)
+    p: Params = {}
+    keys = jax.random.split(key, len(net.layers))
+    for k, lay in zip(keys, net.layers):
+        if lay.kind in ("conv", "dense"):
+            fan_in = lay.kernel * lay.kernel * lay.in_ch
+            p[lay.name] = {
+                "w": (jax.random.normal(k, (lay.kernel, lay.kernel,
+                                            lay.in_ch, lay.out_ch))
+                      * (2.0 / fan_in) ** 0.5).astype(dt),
+                "b": jnp.zeros((lay.out_ch,), dt),
+            }
+    return p
+
+
+def _conv(x, w, b, stride: int, dilation: int):
+    y = jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype),
+        window_strides=(stride, stride),
+        padding="SAME",
+        rhs_dilation=(dilation, dilation),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32)
+    return (y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def forward(p: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            **_) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    net = cfg.convnet
+    x = batch["image"].astype(L.dtype_of(cfg.compute_dtype))
+    for lay in net.layers:
+        if lay.kind in ("conv", "dense"):
+            x = _conv(x, p[lay.name]["w"], p[lay.name]["b"],
+                      lay.stride, lay.dilation)
+            x = jax.nn.relu(x.astype(jnp.float32)).astype(x.dtype)
+        elif lay.kind == "pool":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, lay.kernel, lay.kernel, 1),
+                (1, lay.stride, lay.stride, 1), "SAME")
+        elif lay.kind == "upsample":
+            B, H, W, C = x.shape
+            x = jax.image.resize(x, (B, H * lay.stride, W * lay.stride, C),
+                                 "bilinear").astype(x.dtype)
+        else:
+            raise ValueError(lay.kind)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch, **_):
+    logits, aux = forward(p, cfg, batch)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, {"loss": loss, "aux": aux, "total": loss}

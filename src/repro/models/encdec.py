@@ -1,0 +1,202 @@
+"""Encoder-decoder transformer (seamless-m4t backbone: audio family).
+
+Encoder consumes precomputed frame embeddings (modality frontend is a STUB
+per the assignment) through bidirectional attention blocks; the decoder is a
+causal LM stack whose blocks are augmented with cross-attention over the
+encoder output.  Decode shapes lower ``serve_step`` on the decoder.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models import attention as ATT
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def _cross_init(key, cfg: ModelConfig) -> Params:
+    dt = L.dtype_of(cfg.param_dtype)
+    p = ATT.init_gqa(key, cfg)
+    p["norm"] = L.init_norm(cfg.d_model, cfg.norm, dt)
+    return p
+
+
+def _cross_apply(p: Params, x: jnp.ndarray, kv: Tuple[jnp.ndarray, jnp.ndarray],
+                 cfg: ModelConfig) -> jnp.ndarray:
+    """Cross attention; kv = (k, v) precomputed from encoder output."""
+    a = cfg.attention
+    cd = L.dtype_of(cfg.compute_dtype)
+    B_, S, _ = x.shape
+    h = L.apply_norm(p["norm"], x, cfg.norm_eps)
+    q = L.linear(p["wq"], h, cd).reshape(B_, S, a.num_heads, a.head_dim)
+    q = q.transpose(0, 2, 1, 3)
+    k, v = kv
+    out = L.attention(q, k, v, causal=False)
+    out = out.transpose(0, 2, 1, 3).reshape(B_, S, a.num_heads * a.head_dim)
+    return x + L.linear(p["wo"], out, cd).astype(x.dtype)
+
+
+def cross_kv(p: Params, enc_out: jnp.ndarray, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output (cached once)."""
+    a = cfg.attention
+    cd = L.dtype_of(cfg.compute_dtype)
+    B_, S, _ = enc_out.shape
+    k = L.linear(p["wk"], enc_out, cd).reshape(B_, S, a.num_kv_heads, a.head_dim)
+    v = L.linear(p["wv"], enc_out, cd).reshape(B_, S, a.num_kv_heads, a.head_dim)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    dt = L.dtype_of(cfg.param_dtype)
+    enc_cfg = cfg  # same width/heads per the assigned config
+    n_enc = cfg.encoder_layers or cfg.num_layers
+
+    def enc_block(k):
+        return B.init_block(k, cfg, "attn", "dense")
+
+    def dec_block(k):
+        p = B.init_block(k, cfg, "attn", "dense")
+        p["cross"] = _cross_init(jax.random.fold_in(k, 7), cfg)
+        return p
+
+    return {
+        "embed": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "enc_in_norm": L.init_norm(cfg.d_model, cfg.norm, dt),
+        "encoder": jax.vmap(enc_block)(jax.random.split(ks[1], n_enc)),
+        "enc_norm": L.init_norm(cfg.d_model, cfg.norm, dt),
+        "decoder": jax.vmap(dec_block)(jax.random.split(ks[2], cfg.num_layers)),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm, dt),
+        "lm_head": L.init_linear(ks[3], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def encode(p: Params, cfg: ModelConfig, frames: jnp.ndarray,
+           remat: str = "dots") -> jnp.ndarray:
+    cd = L.dtype_of(cfg.compute_dtype)
+    x = L.apply_norm(p["enc_in_norm"], frames.astype(cd), cfg.norm_eps)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    def body(x, blk):
+        x, _, _ = B.apply_block(blk, x, cfg, "attn", "dense",
+                                mode="train", causal=False)
+        return x, None
+
+    body_fn = B._remat_wrap(body, remat)
+    x, _ = jax.lax.scan(body_fn, x, p["encoder"])
+    return L.apply_norm(p["enc_norm"], x, cfg.norm_eps)
+
+
+def _decode_stack(p: Params, cfg: ModelConfig, x, enc_out, *, mode: str,
+                  cache=None, pos=None, remat: str = "dots"):
+    """Decoder stack with cross-attention; returns (x, new_cache)."""
+
+    def body(carry, scanned):
+        x = carry
+        blk, blk_cache = scanned
+        c_in = None if blk_cache is None else blk_cache
+        x, c, _ = B.apply_block(blk, x, cfg, "attn", "dense", mode=mode,
+                                cache=c_in, pos=pos, causal=True)
+        kv = cross_kv(blk["cross"], enc_out, cfg)
+        x = _cross_apply(blk["cross"], x, kv, cfg)
+        return x, c
+
+    body_fn = B._remat_wrap(body, remat if mode == "train" else "none")
+    x, caches = jax.lax.scan(body_fn, x, (p["decoder"], cache))
+    return x, caches
+
+
+def forward(p: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray], *,
+            mode: str = "train", remat: str = "dots"):
+    cd = L.dtype_of(cfg.compute_dtype)
+    enc_out = encode(p, cfg, batch["frames"], remat)
+    x = L.embed(p["embed"], batch["tokens"], cd)
+    x, _ = _decode_stack(p, cfg, x, enc_out, mode="train", remat=remat)
+    x = L.apply_norm(p["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("...d,dv->...v", x.astype(cd),
+                        p["lm_head"]["w"].astype(cd),
+                        preferred_element_type=jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch, *, remat: str = "dots"):
+    logits, aux = forward(p, cfg, batch, remat=remat)
+    targets = batch["tokens"][:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, {"loss": loss, "aux": aux, "total": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache = {"self": stacked kv cache, "cross_kv": precomputed,}
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    a = cfg.attention
+    cd = L.dtype_of(cfg.compute_dtype)
+    n_dec = cfg.num_layers
+    enc_len = max_len  # encoder context as long as decoder history
+    self_spec = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_dec,) + s.shape, s.dtype),
+        ATT.gqa_cache_spec(cfg, batch, max_len))
+    kv_shape = (n_dec, batch, a.num_kv_heads, enc_len, a.head_dim)
+    return {
+        "self": self_spec,
+        "cross_k": jax.ShapeDtypeStruct(kv_shape, cd),
+        "cross_v": jax.ShapeDtypeStruct(kv_shape, cd),
+    }
+
+
+def prefill(p: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    cd = L.dtype_of(cfg.compute_dtype)
+    enc_out = encode(p, cfg, batch["frames"], remat="none")
+    x = L.embed(p["embed"], batch["tokens"], cd)
+
+    def body(x, blk):
+        x, c, _ = B.apply_block(blk, x, cfg, "attn", "dense",
+                                mode="prefill", causal=True)
+        kv = cross_kv(blk["cross"], enc_out, cfg)
+        x = _cross_apply(blk["cross"], x, kv, cfg)
+        return x, (c["attn"], kv)
+
+    x, (self_caches, cross_kvs) = jax.lax.scan(body, x, p["decoder"])
+    x = L.apply_norm(p["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(cd),
+                        p["lm_head"]["w"].astype(cd),
+                        preferred_element_type=jnp.float32)
+    state = {"self": self_caches,
+             "cross_k": cross_kvs[0], "cross_v": cross_kvs[1]}
+    return logits, state
+
+
+def decode_step(p: Params, cfg: ModelConfig, state: Params,
+                tokens: jnp.ndarray, pos: jnp.ndarray):
+    cd = L.dtype_of(cfg.compute_dtype)
+    x = L.embed(p["embed"], tokens[:, None], cd)
+
+    def body(x, scanned):
+        blk, self_c, ck, cv = scanned
+        x, c, _ = B.apply_block(blk, x, cfg, "attn", "dense", mode="decode",
+                                cache={"attn": self_c}, pos=pos, causal=True)
+        x = _cross_apply(blk["cross"], x, (ck, cv), cfg)
+        return x, c["attn"]
+
+    x, self_caches = jax.lax.scan(
+        body, x, (p["decoder"], state["self"], state["cross_k"],
+                  state["cross_v"]))
+    x = L.apply_norm(p["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(cd),
+                        p["lm_head"]["w"].astype(cd),
+                        preferred_element_type=jnp.float32)
+    new_state = dict(state)
+    new_state["self"] = self_caches
+    return logits, new_state

@@ -1,0 +1,237 @@
+"""RWKV-6 ("Finch", arXiv:2404.05892) time-mix and channel-mix blocks.
+
+Attention-free: the WKV recurrence keeps a per-head (d_k x d_v) state with
+*data-dependent per-channel decay*.  Sequence processing uses a chunked
+formulation (scan over chunks, closed-form intra-chunk contribution) that is
+numerically safe: every exponent is a *difference* of cumulative log-decays
+within one chunk, hence <= 0.  The Pallas kernel (repro/kernels/rwkv6_scan)
+implements the same chunking; this file is the XLA twin / reference.
+
+Cache layout (decode):
+  {"shift_t": (B, D), "shift_c": (B, D), "wkv": (B, H, dk, dv) f32}
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models import layers as L
+from repro.sharding import constrain
+
+Params = Dict[str, Any]
+
+STREAMS = ("w", "k", "v", "r", "g")
+
+
+def num_heads_of(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv.head_dim
+
+
+def init_time_mix(key, cfg: ModelConfig) -> Params:
+    r = cfg.rwkv
+    dt = L.dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    H, hd = num_heads_of(cfg), r.head_dim
+    ks = jax.random.split(key, 16)
+    p: Params = {
+        "mu_base": (jax.random.uniform(ks[0], (d,)) * 0.1).astype(dt),
+        "lora_base_a": (jax.random.normal(ks[1], (d, r.mix_lora * 5)) * 0.01).astype(dt),
+        "lora_base_b": (jax.random.normal(ks[2], (5, r.mix_lora, d)) * 0.01).astype(dt),
+        "w0": (-6.0 + jax.random.uniform(ks[3], (d,)) * 2.0).astype(jnp.float32),
+        "w_lora_a": (jax.random.normal(ks[4], (d, r.decay_lora)) * 0.01).astype(dt),
+        "w_lora_b": (jax.random.normal(ks[5], (r.decay_lora, d)) * 0.01).astype(dt),
+        "u": (jax.random.normal(ks[6], (H, hd)) * 0.1).astype(jnp.float32),
+        "wr": L.init_linear(ks[7], d, d, dt),
+        "wk": L.init_linear(ks[8], d, d, dt),
+        "wv": L.init_linear(ks[9], d, d, dt),
+        "wg": L.init_linear(ks[10], d, d, dt),
+        "wo": L.init_linear(ks[11], d, d, dt),
+        "ln_x": L.init_norm(d, "layernorm", jnp.float32),
+    }
+    for i, s in enumerate(STREAMS):
+        p[f"mu_{s}"] = (jax.random.uniform(ks[12 + i % 4], (d,)) * 0.1).astype(dt)
+    return p
+
+
+def rwkv_cache_spec(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    H, hd = num_heads_of(cfg), cfg.rwkv.head_dim
+    return {
+        "shift_t": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        "shift_c": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        "wkv": jax.ShapeDtypeStruct((batch, H, hd, hd), jnp.float32),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Return x_{t-1} stream. x: (B,S,D); prev: (B,D) last token of context."""
+    if x.shape[1] == 1 and prev is not None:
+        return prev[:, None, :].astype(x.dtype)
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev.astype(x.dtype))
+    return shifted
+
+
+def _ddlerp(p: Params, x: jnp.ndarray, xx: jnp.ndarray, cd) -> Dict[str, jnp.ndarray]:
+    """Data-dependent lerp producing the five mixed streams."""
+    base = x + xx * (p["mu_base"].astype(cd))
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", base,
+                               p["lora_base_a"].astype(cd)))
+    R = p["lora_base_b"].shape[1]
+    out = {}
+    for i, s in enumerate(STREAMS):
+        li = lora[..., i * R:(i + 1) * R] if lora.shape[-1] == 5 * R else lora
+        delta = jnp.einsum("bsr,rd->bsd", li, p["lora_base_b"][i].astype(cd))
+        out[s] = x + xx * (p[f"mu_{s}"].astype(cd) + delta)
+    return out
+
+
+def wkv_chunked(r, k, v, logw, u, state0, chunk: int = 16):
+    """Chunked WKV recurrence.
+
+    r,k,v: (B,H,S,hd);  logw: (B,H,S,hd) per-channel log-decay (<0);
+    u: (H,hd) bonus;  state0: (B,H,hd,hd) or None.
+    Returns (out: (B,H,S,hd), state: (B,H,hd,hd)).  All f32.
+    """
+    B, H, S, hd = r.shape
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+
+    def pf(x, val=0.0):
+        return jnp.pad(x.astype(jnp.float32),
+                       ((0, 0), (0, 0), (0, pad), (0, 0)),
+                       constant_values=val)
+
+    rf, kf, vf = pf(r), pf(k), pf(v)
+    lw = pf(logw)  # padded decays log(1)=0 -> harmless (k,v are 0 there)
+    rf = rf.reshape(B, H, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    kf = kf.reshape(B, H, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vf = vf.reshape(B, H, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    lw = lw.reshape(B, H, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+
+    s0 = (jnp.zeros((B, H, hd, hd), jnp.float32)
+          if state0 is None else state0.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    @jax.checkpoint
+    def chunk_step(s, inp):
+        # remat: the (c,c,hd) pairwise-decay tensors must not be saved per
+        # chunk for backward.
+        rc, kc, vc, lwc = inp                       # (B,H,c,hd)
+        cum = jnp.cumsum(lwc, axis=2)               # inclusive logW
+        cum_ex = cum - lwc                          # exclusive logW (W_{t-1})
+        # intra-chunk pairwise: exponent cum_ex[t] - cum[i] <= 0 for i < t
+        diff = cum_ex[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,H,t,i,hd)
+        decay = jnp.exp(jnp.minimum(diff, 0.0))
+        A = jnp.einsum("bhtik,bhtk,bhik->bhti", decay, rc, kc)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        A = jnp.where(tri[None, None], A, 0.0)
+        # bonus diagonal
+        Au = jnp.einsum("bhtk,bhtk->bht", rc * uf[None, :, None, :], kc)
+        out = jnp.einsum("bhti,bhiv->bhtv", A, vc)
+        out += Au[..., None] * vc
+        # cross-chunk: r_t decayed from chunk start
+        out += jnp.einsum("bhtk,bhkv->bhtv", rc * jnp.exp(cum_ex), s)
+        # state update: decays from i to end of chunk
+        wlast = cum[:, :, -1:, :]                   # logW_c
+        kdec = kc * jnp.exp(wlast - cum)            # exponent <= 0
+        s_new = s * jnp.exp(wlast.squeeze(2))[:, :, :, None] + \
+            jnp.einsum("bhik,bhiv->bhkv", kdec, vc)
+        return s_new, out
+
+    s_fin, outs = jax.lax.scan(chunk_step, s0, (rf, kf, vf, lw))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, nc * chunk, hd)[:, :, :S]
+    return out, s_fin
+
+
+def apply_time_mix(p: Params, x: jnp.ndarray, cfg: ModelConfig, *, mode: str,
+                   cache: Optional[Params] = None,
+                   ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    cd = L.dtype_of(cfg.compute_dtype)
+    B, S, D = x.shape
+    H, hd = num_heads_of(cfg), cfg.rwkv.head_dim
+
+    prev = cache["shift_t"] if cache is not None else None
+    xx = _token_shift(x, prev) - x
+    st = _ddlerp(p, x, xx, cd)
+
+    r = L.linear(p["wr"], st["r"], cd).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = L.linear(p["wk"], st["k"], cd).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = L.linear(p["wv"], st["v"], cd).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(L.linear(p["wg"], st["g"], cd).astype(jnp.float32))
+
+    # data-dependent decay, log-space, clamped for chunk-safe exponents
+    wl = jnp.tanh(jnp.einsum("bsd,dr->bsr", st["w"], p["w_lora_a"].astype(cd)))
+    wl = jnp.einsum("bsr,rd->bsd", wl, p["w_lora_b"].astype(cd))
+    logw = -jnp.exp(jnp.clip(p["w0"][None, None, :] +
+                             wl.astype(jnp.float32), -10.0, 1.5))
+    logw = jnp.clip(logw, -8.0, -1e-6)
+    logw = logw.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+
+    state0 = cache["wkv"] if cache is not None else None
+    if mode == "decode" and S == 1:
+        # single-step closed form
+        s_prev = state0.astype(jnp.float32)
+        r1 = r[:, :, 0].astype(jnp.float32)
+        k1 = k[:, :, 0].astype(jnp.float32)
+        v1 = v[:, :, 0].astype(jnp.float32)
+        kv = k1[..., :, None] * v1[..., None, :]        # (B,H,dk,dv)
+        out = jnp.einsum("bhk,bhkv->bhv", r1,
+                         s_prev + p["u"].astype(jnp.float32)[None, :, :, None] * kv)
+        s_new = jnp.exp(logw[:, :, 0])[..., None] * s_prev + kv
+        out = out[:, :, None, :]                        # (B,H,1,dv)
+        wkv_out, s_fin = out, s_new
+    else:
+        wkv_out, s_fin = wkv_chunked(r, k, v, logw, p["u"], state0)
+
+    y = wkv_out.transpose(0, 2, 1, 3).reshape(B, S, D)
+    y = L.apply_norm(p["ln_x"], y.astype(jnp.float32))
+    y = (y * g).astype(cd)
+    y = L.linear(p["wo"], y, cd)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"shift_t": x[:, -1].astype(jnp.float32), "wkv": s_fin}
+    return constrain(y, ("batch", "seq", "embed")), new_cache
+
+
+def init_channel_mix(key, cfg: ModelConfig) -> Params:
+    dt = L.dtype_of(cfg.param_dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": (jax.random.uniform(ks[0], (d,)) * 0.1).astype(dt),
+        "mu_r": (jax.random.uniform(ks[1], (d,)) * 0.1).astype(dt),
+        "wk": L.init_linear(ks[0], d, f, dt),
+        # named w_down so the sharding rules treat it as the row-parallel
+        # (f -> d) projection: its contraction dim must match wk's output
+        # sharding on the model axis, else GSPMD all-gathers the full hidden
+        "w_down": L.init_linear(ks[1], f, d, dt),
+        "wr": L.init_linear(ks[2], d, d, dt),
+    }
+
+
+def apply_channel_mix(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                      mode: str, cache: Optional[Params] = None,
+                      ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    cd = L.dtype_of(cfg.compute_dtype)
+    prev = cache["shift_c"] if cache is not None else None
+    xx = _token_shift(x, prev) - x
+    xk = x + xx * p["mu_k"].astype(cd)
+    xr = x + xx * p["mu_r"].astype(cd)
+    h = L.linear(p["wk"], xk, cd)
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(cd)
+    h = constrain(h, ("batch", "seq", "mlp"))
+    v = L.linear(p["w_down"], h, cd)
+    r = jax.nn.sigmoid(L.linear(p["wr"], xr, cd).astype(jnp.float32))
+    y = (r * v.astype(jnp.float32)).astype(cd)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"shift_c": x[:, -1].astype(jnp.float32)}
+    return constrain(y, ("batch", "seq", "embed")), new_cache

@@ -1,0 +1,183 @@
+"""Mamba selective-SSM mixer (used standalone and inside the Jamba hybrid).
+
+Sequence processing uses a *chunked* selective scan: `lax.scan` over chunks
+of the sequence with an associative scan inside each chunk — O(chunk) live
+memory for the (B, c, d_inner, d_state) discretised tensors instead of
+O(S).  The Pallas kernel (repro/kernels/ssm_scan) implements the same
+chunking on TPU; this file is the XLA-native twin and the numeric reference.
+
+Cache layout (decode):
+  {"conv": (B, d_conv-1, d_inner) f32, "state": (B, d_inner, d_state) f32}
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models import layers as L
+from repro.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def d_inner_of(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def init_ssm(key, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    dt = L.dtype_of(cfg.param_dtype)
+    d, di = cfg.d_model, d_inner_of(cfg)
+    dtr = s.resolved_dt_rank(cfg.d_model)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation for A
+    a_init = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :],
+                      (di, 1))
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[4], (di,)) * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001))
+    inv_softplus = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": L.init_linear(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, di)) /
+                   math.sqrt(s.d_conv)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": L.init_linear(ks[2], di, dtr + 2 * s.d_state, dt),
+        "dt_proj": {**L.init_linear(ks[3], dtr, di, dt,
+                                    scale=dtr ** -0.5),
+                    "b": inv_softplus.astype(dt)},
+        "A_log": jnp.log(a_init),                       # (di, ds) f32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": L.init_linear(ks[5], di, d, dt),
+    }
+
+
+def ssm_cache_spec(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    s = cfg.ssm
+    di = d_inner_of(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, di), jnp.float32),
+        "state": jax.ShapeDtypeStruct((batch, di, s.d_state), jnp.float32),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prev: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv.  x: (B,S,di), w: (K,di).  prev: (B,K-1,di)."""
+    K = w.shape[0]
+    if prev is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(K))
+    return y + b[None, None, :]
+
+
+def selective_scan_chunked(u: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                           Bmat: jnp.ndarray, Cmat: jnp.ndarray,
+                           D: jnp.ndarray,
+                           h0: Optional[jnp.ndarray] = None,
+                           chunk: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """u, dt: (B,S,di); A: (di,ds); Bmat, Cmat: (B,S,ds); D: (di,).
+
+    Returns (y: (B,S,di), h_final: (B,di,ds)); all math in f32.
+    """
+    Bsz, S, di = u.shape
+    ds = A.shape[-1]
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    uf = jnp.pad(u.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    dtf = jnp.pad(dt.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    Bf = jnp.pad(Bmat.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    Cf = jnp.pad(Cmat.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+
+    uf = uf.reshape(Bsz, nc, chunk, di)
+    dtf = dtf.reshape(Bsz, nc, chunk, di)
+    Bf = Bf.reshape(Bsz, nc, chunk, ds)
+    Cf = Cf.reshape(Bsz, nc, chunk, ds)
+
+    h_init = (jnp.zeros((Bsz, di, ds), jnp.float32)
+              if h0 is None else h0.astype(jnp.float32))
+
+    @jax.checkpoint
+    def chunk_step(h, inp):
+        # remat: recompute da/dbu/cumulatives in backward — without this the
+        # scan saves (B,c,di,ds) residuals per chunk = O(S*di*ds) memory.
+        uc, dtc, bc, cc = inp          # (B,c,di) (B,c,di) (B,c,ds) (B,c,ds)
+        da = jnp.exp(dtc[..., None] * (-jnp.exp(A))[None, None])  # (B,c,di,ds)
+        dbu = (dtc * uc)[..., None] * bc[:, :, None, :]           # (B,c,di,ds)
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(comb, (da, dbu), axis=1)
+        h_t = a_cum * h[:, None] + b_cum                          # (B,c,di,ds)
+        y = jnp.einsum("bcds,bcs->bcd", h_t, cc)
+        h_new = h_t[:, -1]
+        return h_new, y
+
+    xs = (uf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2, 3),
+          Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3))
+    h_fin, ys = jax.lax.scan(chunk_step, h_init, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, nc * chunk, di)[:, :S]
+    y = y + u.astype(jnp.float32) * D[None, None, :]
+    return y, h_fin
+
+
+def apply_ssm(p: Params, x: jnp.ndarray, cfg: ModelConfig, *, mode: str,
+              cache: Optional[Params] = None, pos=None,
+              ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x: (B,S,D)."""
+    s = cfg.ssm
+    cd = L.dtype_of(cfg.compute_dtype)
+    B, S, D = x.shape
+    di = d_inner_of(cfg)
+    dtr = s.resolved_dt_rank(cfg.d_model)
+
+    xz = L.linear(p["in_proj"], x, cd)
+    u, z = xz[..., :di], xz[..., di:]
+    u = constrain(u, ("batch", "seq", "mlp"))
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        conv_prev = cache["conv"]
+        u_conv = _causal_conv(u, p["conv_w"].astype(cd), p["conv_b"].astype(cd),
+                              prev=conv_prev)
+        new_conv = jnp.concatenate(
+            [conv_prev[:, 1:], u.astype(jnp.float32)], axis=1)
+    else:
+        u_conv = _causal_conv(u, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+        new_conv = None
+        if mode == "prefill":
+            K = s.d_conv
+            tail = jnp.pad(u, ((0, 0), (max(0, K - 1 - S), 0), (0, 0)))
+            new_conv = tail[:, -(K - 1):].astype(jnp.float32)
+
+    u_act = jax.nn.silu(u_conv.astype(jnp.float32)).astype(cd)
+
+    xdb = L.linear(p["x_proj"], u_act, cd)
+    dt_in = xdb[..., :dtr]
+    Bmat = xdb[..., dtr:dtr + s.d_state]
+    Cmat = xdb[..., dtr + s.d_state:]
+    dt_full = jax.nn.softplus(
+        L.linear(p["dt_proj"], dt_in, cd).astype(jnp.float32))
+
+    h0 = cache["state"] if (mode == "decode" and cache is not None) else None
+    y, h_fin = selective_scan_chunked(
+        u_act, dt_full, p["A_log"].astype(jnp.float32), Bmat, Cmat,
+        p["D"], h0=h0)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(cd)
+    out = L.linear(p["out_proj"], y, cd)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"conv": new_conv, "state": h_fin}
+    return constrain(out, ("batch", "seq", "embed")), new_cache

@@ -1,0 +1,26 @@
+import os
+import sys
+
+# Tests run on the single real CPU device; ONLY the dry-run uses the
+# 512-device placeholder (set inside repro.launch.dryrun, never globally).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import pytest
+
+
+def smoke_f32(spec):
+    """Reduced config with f32 (CPU executes f32 dots only)."""
+    cfg = spec.smoke
+    repl = {"param_dtype": "float32", "compute_dtype": "float32"}
+    if cfg.moe is not None:
+        repl["moe"] = dataclasses.replace(cfg.moe, capacity_factor=-1.0)
+    return dataclasses.replace(cfg, **repl)
+
+
+@pytest.fixture
+def rng():
+    import jax
+
+    return jax.random.key(0)

@@ -1,0 +1,94 @@
+"""AVSM end-to-end: paper-shaped outputs on the paper's own workload —
+DilatedVGG on the Virtex-7 NCE system description (Fig 2/5/6/7 analogs)."""
+import json
+
+import pytest
+
+from repro.core.avsm.model import build_avsm
+from repro.core.config import get_arch
+from repro.core.hw import (SystemDescription, get_system, tpu_v5e_pod,
+                           virtex7_nce_system)
+from repro.core.sim.trace import ascii_gantt, chrome_trace
+from repro.core.taskgraph.builders import ShardPlan, convnet_ops, lm_step_ops
+
+
+@pytest.fixture(scope="module")
+def vgg_report():
+    cfg = get_arch("dilated-vgg").model
+    avsm = build_avsm(convnet_ops(cfg), virtex7_nce_system())
+    return avsm.simulate()
+
+
+def test_vgg_step_time_plausible(vgg_report):
+    # paper's prototype: ~1 TFLOP/s NCE on a ~1.5 TFLOP net => O(seconds)
+    assert 0.1 < vgg_report.step_time < 30.0
+
+
+def test_conv4_layers_compute_bound(vgg_report):
+    """Paper Fig 6/7: Conv4_0–Conv4_5 sit near the compute roof."""
+    conv4 = [l for l in vgg_report.layers if l.name.startswith("conv4")]
+    assert len(conv4) == 6
+    assert all(l.bound == "compute" for l in conv4)
+
+
+def test_upscaling_not_compute_bound(vgg_report):
+    """Paper: Dense1/Upscaling are neither compute- nor fully BW-bound."""
+    ups = [l for l in vgg_report.layers if l.name == "upscaling"]
+    assert ups and ups[0].bound != "compute"
+
+
+def test_nce_utilization_high(vgg_report):
+    assert vgg_report.nce_util > 0.5
+
+
+def test_system_description_json_roundtrip():
+    sys = tpu_v5e_pod()
+    text = sys.to_json()
+    back = SystemDescription.from_json(text)
+    assert back.chip.compute.matrix_flops == sys.chip.compute.matrix_flops
+    assert back.torus == sys.torus
+
+
+def test_what_if_frequency_sweep_monotone():
+    """Paper's top-down use: required-frequency assessment."""
+    cfg = get_arch("dilated-vgg").model
+    avsm = build_avsm(convnet_ops(cfg), virtex7_nce_system())
+    times = []
+    for mult in (0.5, 1.0, 2.0, 4.0):
+        rep = avsm.what_if(
+            matrix_flops=32 * 64 * 250e6 * 2 * mult).simulate()
+        times.append(rep.step_time)
+    assert all(a >= b - 1e-9 for a, b in zip(times, times[1:]))
+
+
+def test_gantt_exports(tmp_path, vgg_report):
+    p = tmp_path / "g.json"
+    chrome_trace(vgg_report.sim_result, str(p))
+    data = json.loads(p.read_text())
+    names = {e.get("args", {}).get("layer") for e in data["traceEvents"]
+             if e.get("ph") == "X"}
+    assert "conv4_0" in names
+    text = ascii_gantt(vgg_report.sim_result)
+    assert "nce" in text
+
+
+def test_lm_cell_bound_classification():
+    """Decode is memory/collective-bound, train is compute-heavier."""
+    from repro.core.config import LM_SHAPES
+
+    plan = ShardPlan()
+    spec = get_arch("qwen2.5-14b")
+    sys = tpu_v5e_pod()
+    train = build_avsm(lm_step_ops(spec.model, LM_SHAPES["train_4k"], plan),
+                       sys).simulate()
+    dec = build_avsm(lm_step_ops(spec.model, LM_SHAPES["decode_32k"], plan),
+                     sys).simulate()
+    assert train.nce_util > dec.nce_util
+    assert train.step_time > dec.step_time
+
+
+def test_get_system_registry():
+    for name in ("tpu_v5e_pod", "virtex7_nce", "container_cpu"):
+        assert get_system(name).chip.compute.matrix_flops > 0
+    with pytest.raises(KeyError):
+        get_system("nope")

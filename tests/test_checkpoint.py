@@ -1,0 +1,81 @@
+"""Checkpoint manager: round trip, atomic LATEST, async error surfacing,
+garbage collection, elastic restore."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "b": jnp.zeros((8,))},
+            "opt_state": {"m": {"w": jnp.ones((8, 8)),
+                                "b": jnp.zeros((8,))},
+                          "step": jnp.asarray(3, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    s = _state()
+    m.save(7, s)
+    step, restored = m.restore()
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(s["params"]["w"]),
+                                  restored["params"]["w"])
+    assert int(restored["opt_state"]["step"]) == 3
+
+
+def test_latest_pointer_and_gc(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    for step in (1, 2, 3, 4):
+        m.save(step, _state(step))
+    assert m.latest_step() == 4
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(dirs) == 2          # gc keeps 2
+    step, _ = m.restore()
+    assert step == 4
+
+
+def test_async_write_then_wait(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=True)
+    m.save(1, _state())
+    m.wait()
+    assert m.latest_step() == 1
+
+
+def test_restore_specific_step(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=5, async_write=False)
+    for step in (10, 20):
+        m.save(step, _state(step))
+    step, st = m.restore(step=10)
+    assert step == 10
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """LATEST only ever points at a fully-committed directory."""
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    m.save(5, _state())
+    latest = (tmp_path / "LATEST").read_text()
+    d = tmp_path / latest
+    assert (d / "manifest.json").exists()
+    assert (d / "shard_0.npz").exists()
+
+
+def test_elastic_restore_with_shardings(tmp_path):
+    """Restore onto explicit (1-device) shardings — the elastic path."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    s = _state()
+    m.save(1, s)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), s)
+    step, restored = m.restore(shardings=sh)
+    np.testing.assert_array_equal(np.asarray(s["params"]["w"]),
+                                  np.asarray(restored["params"]["w"]))

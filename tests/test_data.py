@@ -1,0 +1,50 @@
+"""Data pipeline: determinism, host-disjointness, resume semantics."""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import (DataConfig, PrefetchIterator,
+                                 SyntheticTokenPipeline)
+
+
+CFG = DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=42)
+
+
+def test_deterministic():
+    a = SyntheticTokenPipeline(CFG).batch_at(5)
+    b = SyntheticTokenPipeline(CFG).batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_steps_differ():
+    p = SyntheticTokenPipeline(CFG)
+    assert not np.array_equal(p.batch_at(0)["tokens"],
+                              p.batch_at(1)["tokens"])
+
+
+def test_hosts_disjoint_streams():
+    a = SyntheticTokenPipeline(CFG, host_index=0, host_count=2).batch_at(0)
+    b = SyntheticTokenPipeline(CFG, host_index=1, host_count=2).batch_at(0)
+    assert a["tokens"].shape == (4, 32)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_learnable_structure():
+    p = SyntheticTokenPipeline(CFG)
+    toks = p.batch_at(0)["tokens"]
+    succ = p._succ
+    hit = np.mean(toks[:, 1:] == succ[toks[:, :-1]])
+    assert hit > 0.5           # bigram structure present
+
+
+def test_prefetch_resume():
+    p = SyntheticTokenPipeline(CFG)
+    it = PrefetchIterator(p, start_step=7)
+    step, batch = next(it)
+    it.close()
+    assert step == 7
+    np.testing.assert_array_equal(batch["tokens"], p.batch_at(7)["tokens"])
+
+
+def test_vocab_bounds():
+    toks = SyntheticTokenPipeline(CFG).batch_at(3)["tokens"]
+    assert toks.min() >= 0 and toks.max() < CFG.vocab_size

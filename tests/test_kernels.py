@@ -1,0 +1,176 @@
+"""Per-kernel allclose tests: interpret-mode Pallas vs pure-jnp oracle,
+swept over shapes/dtypes (assignment requirement) + hypothesis sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                decode_attention_ref)
+from repro.kernels.flash_attention.ops import attention_ref, flash_attention
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan, rwkv6_scan_ref
+from repro.kernels.ssm_scan.ops import ssm_scan, ssm_scan_ref
+
+ATOL = {jnp.float32: 3e-5, jnp.bfloat16: 3e-2}
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,hd,causal", [
+    (2, 4, 2, 128, 128, 64, True),
+    (1, 8, 8, 257, 257, 64, True),
+    (2, 4, 1, 64, 320, 128, False),
+    (1, 2, 2, 1, 200, 64, False),
+    (1, 16, 4, 96, 96, 128, True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, Hq, Hkv, Sq, Sk, hd, causal, dtype):
+    kq, kk, kv = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(kq, (B, Hq, Sq, hd), dtype)
+    k = jax.random.normal(kk, (B, Hkv, Sk, hd), dtype)
+    v = jax.random.normal(kv, (B, Hkv, Sk, hd), dtype)
+    off = Sk - Sq if causal else 0
+    out = flash_attention(q, k, v, causal=causal, q_offset=off,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=ATOL[dtype], rtol=1e-2)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,hd,kvlen", [
+    (2, 8, 2, 1024, 64, 777),
+    (1, 4, 4, 512, 128, 512),
+    (2, 16, 1, 300, 64, 1),
+    (3, 6, 3, 64, 64, 33),
+])
+def test_decode_attention(B, Hq, Hkv, S, hd, kvlen):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    out = decode_attention(q, k, v, jnp.int32(kvlen), interpret=True)
+    ref = decode_attention_ref(q, k, v, kvlen)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@pytest.mark.parametrize("N,S,hd", [(4, 64, 16), (2, 100, 64), (1, 33, 32)])
+def test_rwkv6_scan(N, S, hd):
+    ks = jax.random.split(jax.random.key(1), 6)
+    r = jax.random.normal(ks[0], (N, S, hd))
+    k = jax.random.normal(ks[1], (N, S, hd))
+    v = jax.random.normal(ks[2], (N, S, hd))
+    logw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (N, S, hd)) * 0.5 - 1),
+                    -8.0, -1e-6)
+    u = jax.random.normal(ks[4], (N, hd)) * 0.1
+    s0 = jax.random.normal(ks[5], (N, hd, hd)) * 0.1
+    out, st = rwkv6_scan(r, k, v, logw, u, s0, interpret=True)
+    refo, refs = rwkv6_scan_ref(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refo), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(refs), atol=1e-3)
+
+
+@pytest.mark.parametrize("Bz,S,di,ds,bdi", [
+    (2, 64, 128, 16, 64), (1, 100, 64, 8, 64), (2, 37, 256, 16, 128),
+])
+def test_ssm_scan(Bz, S, di, ds, bdi):
+    ks = jax.random.split(jax.random.key(2), 6)
+    u = jax.random.normal(ks[0], (Bz, S, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, S, di)) - 1)
+    A = jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None],
+                         (di, 1)))
+    B = jax.random.normal(ks[2], (Bz, S, ds))
+    C = jax.random.normal(ks[3], (Bz, S, ds))
+    D = jax.random.normal(ks[4], (di,))
+    h0 = jax.random.normal(ks[5], (Bz, di, ds)) * 0.1
+    y, h = ssm_scan(u, dt, A, B, C, D, h0, block_di=bdi, interpret=True)
+    ry, rh = ssm_scan_ref(u, dt, A, B, C, D, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ry), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(rh), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property sweeps
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.integers(1, 80), sk=st.integers(1, 120),
+       hq=st.sampled_from([1, 2, 4, 8]), group=st.sampled_from([1, 2, 4]),
+       hd=st.sampled_from([16, 32, 64]))
+def test_flash_attention_property(sq, sk, hq, group, hd):
+    """For arbitrary shapes, flash == reference (causal with offset so every
+    query sees >=1 key)."""
+    hkv = max(1, hq // group)
+    hq = hkv * group
+    kq, kk, kv = jax.random.split(jax.random.key(sq * 1000 + sk), 3)
+    q = jax.random.normal(kq, (1, hq, sq, hd))
+    k = jax.random.normal(kk, (1, hkv, sk, hd))
+    v = jax.random.normal(kv, (1, hkv, sk, hd))
+    causal = sk >= sq
+    off = sk - sq if causal else 0
+    out = flash_attention(q, k, v, causal=causal, q_offset=off,
+                          block_q=32, block_k=32, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.integers(1, 70), hd=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 100))
+def test_rwkv6_scan_property(s, hd, seed):
+    ks = jax.random.split(jax.random.key(seed), 6)
+    N = 2
+    r = jax.random.normal(ks[0], (N, s, hd))
+    k = jax.random.normal(ks[1], (N, s, hd))
+    v = jax.random.normal(ks[2], (N, s, hd))
+    logw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (N, s, hd))),
+                    -8.0, -1e-6)
+    u = jax.random.normal(ks[4], (N, hd)) * 0.1
+    s0 = jnp.zeros((N, hd, hd))
+    out, st_ = rwkv6_scan(r, k, v, logw, u, s0, interpret=True)
+    refo, refs = rwkv6_scan_ref(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refo), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(refs), atol=2e-3)
+
+
+def test_model_wkv_matches_kernel_ref():
+    """The XLA twin inside the RWKV6 model equals the kernel oracle."""
+    from repro.models.rwkv6 import wkv_chunked
+
+    ks = jax.random.split(jax.random.key(5), 6)
+    B, H, S, hd = 2, 3, 50, 16
+    r = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, H, S, hd))
+    v = jax.random.normal(ks[2], (B, H, S, hd))
+    logw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (B, H, S, hd))),
+                    -8.0, -1e-6)
+    u = jax.random.normal(ks[4], (H, hd)) * 0.1
+    s0 = jax.random.normal(ks[5], (B, H, hd, hd)) * 0.1
+    out, st_ = wkv_chunked(r, k, v, logw, u, s0)
+    ro, rs = rwkv6_scan_ref(r.reshape(B * H, S, hd), k.reshape(B * H, S, hd),
+                            v.reshape(B * H, S, hd),
+                            logw.reshape(B * H, S, hd),
+                            jnp.tile(u, (B, 1)), s0.reshape(B * H, hd, hd))
+    np.testing.assert_allclose(np.asarray(out.reshape(B * H, S, hd)),
+                               np.asarray(ro), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_.reshape(B * H, hd, hd)),
+                               np.asarray(rs), atol=1e-3)
+
+
+def test_model_ssm_matches_kernel_ref():
+    from repro.models.ssm import selective_scan_chunked
+
+    ks = jax.random.split(jax.random.key(6), 6)
+    Bz, S, di, ds = 2, 40, 32, 8
+    u = jax.random.normal(ks[0], (Bz, S, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, S, di)))
+    A = jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None],
+                         (di, 1)))
+    B = jax.random.normal(ks[2], (Bz, S, ds))
+    C = jax.random.normal(ks[3], (Bz, S, ds))
+    D = jax.random.normal(ks[4], (di,))
+    h0 = jax.random.normal(ks[5], (Bz, di, ds)) * 0.1
+    y, h = selective_scan_chunked(u, dt, A, B, C, D, h0=h0, chunk=16)
+    ry, rh = ssm_scan_ref(u, dt, A, B, C, D, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ry), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(rh), atol=1e-3)

@@ -1,0 +1,70 @@
+"""Fault-tolerance runtime: failure detection, straggler policy, elastic
+mesh planning."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.supervisor import (MitigationAction, Supervisor,
+                                      SupervisorConfig, mitigate_stragglers,
+                                      plan_elastic_mesh)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_failure_detection():
+    clock = FakeClock()
+    sup = Supervisor(4, SupervisorConfig(failure_timeout=5.0), clock=clock)
+    for w in range(4):
+        sup.heartbeat(w, step=1, step_time=1.0)
+    clock.t = 3.0
+    for w in (0, 1, 2):
+        sup.heartbeat(w, step=2, step_time=1.0)
+    clock.t = 7.0
+    for w in (0, 1, 2):
+        sup.heartbeat(w, step=3, step_time=1.0)
+    out = sup.check()
+    assert out["failed"] == [3]
+    assert sup.alive_count() == 3
+
+
+def test_straggler_detection_needs_patience():
+    clock = FakeClock()
+    cfg = SupervisorConfig(straggler_factor=1.5, straggler_patience=3)
+    sup = Supervisor(4, cfg, clock=clock)
+    for step in range(1, 6):
+        clock.t = float(step)
+        for w in range(4):
+            sup.heartbeat(w, step, step_time=3.0 if w == 2 else 1.0)
+        out = sup.check()
+        if step < 3:
+            assert out["stragglers"] == []
+    assert 2 in out["stragglers"]
+
+
+def test_mitigation_policy():
+    assert mitigate_stragglers([], False).kind == "none"
+    assert mitigate_stragglers([1], False).kind == "rebalance"
+    assert mitigate_stragglers([1], True).kind == "evict_and_remesh"
+
+
+def test_elastic_plan_keeps_batch():
+    plan = plan_elastic_mesh(alive_devices=192, model_parallel=16,
+                             global_batch=256)
+    assert plan["model"] == 16
+    assert plan["data"] * plan["model"] <= 192
+    assert 256 % (plan["data"] * plan["grad_accum"]) == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(alive=st.integers(1, 512), mp=st.sampled_from([1, 2, 4, 8, 16]),
+       batch=st.sampled_from([32, 64, 128, 256, 512]))
+def test_elastic_plan_properties(alive, mp, batch):
+    plan = plan_elastic_mesh(alive, mp, batch)
+    assert 1 <= plan["devices_used"] <= alive
+    assert plan["data"] * plan["model"] == plan["devices_used"]
+    assert batch % (plan["data"] * plan["grad_accum"]) == 0

@@ -1,0 +1,76 @@
+"""Sharding rules: divisibility fallbacks, strict vs relaxed modes,
+param-rule coverage for every arch's parameter tree."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as sh
+from repro.core.config import get_arch, list_archs
+from repro.models import api
+
+
+SIZES = {"data": 16, "model": 16}
+
+
+def test_resolve_strict_vs_relaxed():
+    used = set()
+    # 40 heads / 16: relaxed shards (padded), strict does not
+    assert sh._resolve_axis("heads", 40, SIZES, set(), strict=False) == "model"
+    assert sh._resolve_axis("heads", 40, SIZES, set(), strict=True) is None
+    assert sh._resolve_axis("heads", 32, SIZES, set(), strict=True) == "model"
+    # too small to shard at all
+    assert sh._resolve_axis("heads", 8, SIZES, set(), strict=False) is None
+
+
+def test_axis_used_once():
+    used = set()
+    a = sh._resolve_axis("heads", 32, SIZES, used)
+    b = sh._resolve_axis("mlp", 32, SIZES, used)      # model already used
+    assert a == "model" and b is None
+
+
+def test_param_rules_basic():
+    spec = sh._param_spec("/stack/periods/sub0/attn/wq/w", (24, 1024, 2048),
+                          SIZES)
+    assert spec == P(None, "data", "model")
+    spec = sh._param_spec("/embed/table", (49155, 1024), SIZES)
+    assert spec == P(None, "data")       # odd vocab falls back
+    spec = sh._param_spec("/embed/table", (65536, 1024), SIZES)
+    assert spec == P("model", "data")
+    spec = sh._param_spec("/stack/periods/sub0/ffn_moe/w_up", (24, 32, 1024, 512),
+                          SIZES)
+    assert spec == P(None, "model", "data", None)
+
+
+@pytest.mark.parametrize("arch", [a for a in list_archs()
+                                  if a != "dilated-vgg"])
+def test_param_specs_cover_all_leaves(arch):
+    """Every param leaf gets a valid spec with no repeated mesh axis and
+    strict divisibility on every sharded dim."""
+    shapes = api.param_shapes(get_arch(arch).model)
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, f"{prefix}/{k}")
+            return
+        spec = sh._param_spec(prefix, tuple(tree.shape), SIZES)
+        axes = [a for a in spec if a is not None]
+        assert len(axes) == len(set(axes)), (prefix, spec)
+        for dim, ax in zip(tree.shape, spec):
+            if ax is not None:
+                assert dim % SIZES[ax] == 0, (prefix, spec, tree.shape)
+
+    walk(shapes)
+
+
+def test_state_rules():
+    class Leaf:
+        def __init__(self, shape):
+            self.shape = shape
+
+    mesh = jax.make_mesh((1,), ("data",))
+    # rank handling: leading stack dims padded with None
+    spec = sh._state_spec("/periods/sub0/attn/k", (9, 8, 8, 1024, 128), mesh)
+    assert len(spec) == 5

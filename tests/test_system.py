@@ -1,0 +1,61 @@
+"""End-to-end behaviour tests: train loop learns, checkpoint/restart
+resumes exactly, serving completes requests."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def test_train_loop_learns(tmp_path):
+    from repro.launch.train import main
+
+    losses = main(["--arch", "qwen1.5-0.5b", "--smoke", "--steps", "40",
+                   "--batch", "4", "--seq", "64", "--ckpt-every", "1000",
+                   "--ckpt-dir", str(tmp_path), "--log-every", "100"])
+    assert len(losses) == 40
+    assert np.isfinite(losses).all()
+    # synthetic bigram structure is learnable: loss must drop
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05
+
+
+def test_train_resume_is_exact(tmp_path):
+    from repro.launch.train import main
+
+    d1 = str(tmp_path / "a")
+    # one uninterrupted 20-step run
+    full = main(["--arch", "qwen1.5-0.5b", "--smoke", "--steps", "20",
+                 "--batch", "2", "--seq", "32", "--ckpt-every", "10",
+                 "--ckpt-dir", d1, "--log-every", "100"])
+    # interrupted at 10, resumed to 20
+    d2 = str(tmp_path / "b")
+    main(["--arch", "qwen1.5-0.5b", "--smoke", "--steps", "10",
+          "--batch", "2", "--seq", "32", "--ckpt-every", "10",
+          "--ckpt-dir", d2, "--log-every", "100"])
+    resumed = main(["--arch", "qwen1.5-0.5b", "--smoke", "--steps", "20",
+                    "--batch", "2", "--seq", "32", "--ckpt-every", "10",
+                    "--ckpt-dir", d2, "--resume", "--log-every", "100"])
+    # deterministic data pipeline + exact state restore => identical tail
+    np.testing.assert_allclose(resumed[-1], full[-1], rtol=1e-4)
+
+
+def test_serve_completes_all_requests():
+    from repro.launch.serve import main
+
+    reqs = main(["--arch", "qwen1.5-0.5b", "--smoke", "--requests", "5",
+                 "--slots", "2", "--prompt-len", "4", "--max-new", "8",
+                 "--max-len", "32"])
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 8 for r in reqs)
+
+
+def test_grad_compression_still_learns(tmp_path):
+    from repro.launch.train import main
+
+    losses = main(["--arch", "qwen1.5-0.5b", "--smoke", "--steps", "30",
+                   "--batch", "4", "--seq", "64", "--ckpt-every", "1000",
+                   "--ckpt-dir", str(tmp_path), "--log-every", "100",
+                   "--grad-compression", "int8_ef"])
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.03

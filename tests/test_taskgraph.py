@@ -1,0 +1,109 @@
+"""AVSM compiler invariants: FLOP/byte conservation under tiling, VMEM
+respect, collective hop math, what-if monotonicity."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.config import LM_SHAPES, get_arch
+from repro.core.hw import tpu_v5e_pod, virtex7_nce_system
+from repro.core.avsm.model import build_avsm
+from repro.core.taskgraph.builders import ShardPlan, convnet_ops, lm_step_ops
+from repro.core.taskgraph.compiler import CompilePlan, compile_ops
+from repro.core.taskgraph.ops import collective_op, matmul_op
+
+
+def test_tiling_conserves_flops_and_bytes():
+    op = matmul_op("m", "L", 4096, 8192, 4096)
+    sys = tpu_v5e_pod()
+    g = compile_ops([op], sys)
+    flops = sum(t.flops for t in g.tasks if t.kind == "compute")
+    assert flops == pytest.approx(op.flops, rel=0.01)
+    dma_in = sum(t.nbytes for t in g.tasks
+                 if t.kind == "dma" and "dma_in" in t.name)
+    assert dma_in == pytest.approx(op.weight_bytes + op.in_bytes, rel=0.01)
+
+
+def test_tiles_fit_vmem():
+    op = matmul_op("m", "L", 65536, 8192, 8192)     # 3.2 GB working set
+    sys = tpu_v5e_pod()
+    plan = CompilePlan(max_tiles_per_op=10_000)
+    g = compile_ops([op], sys, plan)
+    budget = sys.chip.onchip.capacity * plan.vmem_fill
+    for t in g.tasks:
+        if t.kind == "dma" and "dma_in" in t.name:
+            assert t.nbytes <= budget * 1.01
+
+
+def test_collective_ring_math():
+    sys = tpu_v5e_pod()
+    payload = 1 << 30
+    for kind, steps_expect in [("all_reduce", 30), ("all_gather", 15),
+                               ("reduce_scatter", 15), ("permute", 1)]:
+        g = compile_ops([collective_op("c", "L", kind, payload, "model", 16)],
+                        sys)
+        hops = [t for t in g.tasks if t.kind == "collective"]
+        assert len(hops) == steps_expect
+        link_bw = sys.chip.link.bandwidth * 2      # bidirectional
+        per_step = payload if kind == "permute" else payload / 16
+        total = sum(t.duration for t in hops)
+        expect = steps_expect * (per_step / link_bw + sys.chip.link.latency)
+        assert total == pytest.approx(expect, rel=1e-6)
+
+
+def test_scan_op_serializes():
+    from repro.core.taskgraph.ops import scan_op
+
+    op = scan_op("s", "L", flops=1e9, in_bytes=1 << 20, out_bytes=1 << 20,
+                 seq_chunks=8)
+    g = compile_ops([op], tpu_v5e_pod())
+    comps = [t for t in g.tasks if t.kind == "compute"]
+    assert len(comps) == 8
+    # each chunk depends on the previous one
+    for a, b in zip(comps, comps[1:]):
+        assert a.tid in b.deps
+
+
+def test_what_if_faster_compute_is_not_slower():
+    cfg = get_arch("dilated-vgg").model
+    avsm = build_avsm(convnet_ops(cfg), virtex7_nce_system())
+    base = avsm.simulate().step_time
+    faster = avsm.what_if(matrix_flops=10e12).simulate().step_time
+    slower = avsm.what_if(matrix_flops=0.1e12).simulate().step_time
+    assert faster <= base * 1.001
+    assert slower >= base * 0.999
+
+
+def test_what_if_bandwidth_direction():
+    cfg = get_arch("dilated-vgg").model
+    avsm = build_avsm(convnet_ops(cfg), virtex7_nce_system())
+    base = avsm.simulate().step_time
+    more_bw = avsm.what_if(mem_bandwidth=1e12).simulate().step_time
+    assert more_bw <= base * 1.001
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(64, 8192), k=st.integers(64, 8192),
+       n=st.integers(64, 8192))
+def test_matmul_time_lower_bounds(m, k, n):
+    """Simulated matmul time >= both roofline terms."""
+    sys = tpu_v5e_pod()
+    op = matmul_op("m", "L", m, k, n)
+    rep = build_avsm([op], sys).simulate()
+    chip = sys.chip
+    t_comp = op.flops / chip.compute.matrix_flops
+    t_mem = op.total_bytes / chip.memory.bandwidth
+    assert rep.step_time >= max(t_comp, t_mem) * 0.99
+
+
+def test_lm_builder_all_cells_positive():
+    plan = ShardPlan()
+    for arch in ["granite-moe-1b-a400m", "qwen2.5-14b", "rwkv6-1.6b",
+                 "jamba-1.5-large-398b", "seamless-m4t-large-v2"]:
+        spec = get_arch(arch)
+        for s in spec.shapes:
+            if s in spec.skip_shapes:
+                continue
+            ops = lm_step_ops(spec.model, LM_SHAPES[s], plan)
+            assert sum(o.flops for o in ops) > 0, (arch, s)
+            assert all(o.flops >= 0 and o.total_bytes >= 0 for o in ops)
