@@ -12,7 +12,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def main() -> None:
-    from benchmarks import (bench_accuracy, bench_gantt,
+    from benchmarks import (bench_accuracy, bench_dse, bench_gantt,
                             bench_roofline_cells, bench_roofline_vgg,
                             bench_runtime_breakdown)
 
@@ -22,6 +22,7 @@ def main() -> None:
         ("accuracy", bench_accuracy),
         ("roofline_vgg", bench_roofline_vgg),
         ("roofline_cells", bench_roofline_cells),
+        ("dse", bench_dse),
     ]
     rows = []
     for name, mod in suites:

@@ -1,23 +1,27 @@
 """Design-space exploration with virtual models (paper Fig 1 right path).
 
 Sweeps hardware parameters of a TPU-v5e-class chip for a pod-scale
-deepseek-v2 training step and reports which knob actually moves each
-bottleneck — the paper's bottom-up + top-down methodology at 256-chip
-scale:
+deepseek-v2 training step through the :class:`DesignSpaceExplorer`:
 
   * bottom-up: given these physical annotations, what step time results?
+    Every sweep point re-annotates the cached task graph (O(n_tasks))
+    instead of recompiling — the paper's click-of-a-button loop.
+  * pruned escalation: chip variants are ranked with the µs-fast roofline
+    backend and only the promising ones are confirmed by the causal DES.
   * top-down: what ICI bandwidth would make the MoE all-to-all disappear
-    from the critical path?
+    from the critical path?  (bisection over the fast what-if path)
 
 Run:  PYTHONPATH=src python examples/design_space_exploration.py
 """
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.avsm.model import build_avsm
+from repro.core.avsm.model import AVSM, annotate_system
 from repro.core.config import LM_SHAPES, get_arch
+from repro.core.dse import DesignSpaceExplorer
 from repro.core.hw import tpu_v5e_pod
 from repro.core.taskgraph.builders import ShardPlan, lm_step_ops
 
@@ -25,35 +29,55 @@ from repro.core.taskgraph.builders import ShardPlan, lm_step_ops
 def main():
     spec = get_arch("deepseek-v2-236b")
     ops = lm_step_ops(spec.model, LM_SHAPES["train_4k"], ShardPlan())
-    system = tpu_v5e_pod()
-    avsm = build_avsm(ops, system)
-    base = avsm.simulate()
-    print(f"baseline: {base.summary()}")
+    base = tpu_v5e_pod()
+    dse = DesignSpaceExplorer({"deepseek_train": ops})
+
+    rep = AVSM(system=base, graph=dse.compiled("deepseek_train", base)) \
+        .simulate()
+    print(f"baseline: {rep.summary()}")
 
     print("\n--- sweep: ICI link bandwidth (MoE all-to-all pressure) ---")
-    for bw in (25e9, 50e9, 100e9, 200e9, 400e9):
-        rep = avsm.what_if(link_bandwidth=bw).simulate()
-        print(f"  ici={bw / 1e9:5.0f} GB/s  step={rep.step_time * 1e3:9.1f} ms"
-              f"  ici_util={rep.ici_util:5.1%} nce_util={rep.nce_util:5.1%}")
+    for bw, r in dse.what_if_sweep("deepseek_train", base, "link_bandwidth",
+                                   (25e9, 50e9, 100e9, 200e9, 400e9)):
+        print(f"  ici={bw / 1e9:5.0f} GB/s  step={r.step_time * 1e3:9.1f} ms"
+              f"  ici_util={r.ici_util:5.1%} nce_util={r.nce_util:5.1%}")
 
     print("\n--- sweep: HBM bandwidth ---")
-    for bw in (409e9, 819e9, 1638e9, 3276e9):
-        rep = avsm.what_if(mem_bandwidth=bw).simulate()
-        print(f"  hbm={bw / 1e9:5.0f} GB/s  step={rep.step_time * 1e3:9.1f} ms"
-              f"  dma_util={rep.dma_util:5.1%}")
+    for bw, r in dse.what_if_sweep("deepseek_train", base, "mem_bandwidth",
+                                   (409e9, 819e9, 1638e9, 3276e9)):
+        print(f"  hbm={bw / 1e9:5.0f} GB/s  step={r.step_time * 1e3:9.1f} ms"
+              f"  dma_util={r.dma_util:5.1%}")
 
     print("\n--- sweep: MXU peak (compute roof) ---")
-    for fl in (99e12, 197e12, 394e12, 788e12):
-        rep = avsm.what_if(matrix_flops=fl).simulate()
-        print(f"  mxu={fl / 1e12:5.0f} TF/s  step={rep.step_time * 1e3:9.1f} ms"
-              f"  nce_util={rep.nce_util:5.1%}")
+    for fl, r in dse.what_if_sweep("deepseek_train", base, "matrix_flops",
+                                   (99e12, 197e12, 394e12, 788e12)):
+        print(f"  mxu={fl / 1e12:5.0f} TF/s  step={r.step_time * 1e3:9.1f} ms"
+              f"  nce_util={r.nce_util:5.1%}")
+
+    print("\n--- chip variants: roofline-prune -> DES-confirm ---")
+    variants = {
+        "v5e": base,
+        "2x_ici": annotate_system(base, link_bandwidth=100e9),
+        "2x_hbm": annotate_system(base, mem_bandwidth=1638e9),
+        "2x_mxu": annotate_system(base, matrix_flops=394e12),
+        "2x_all": annotate_system(base, link_bandwidth=100e9,
+                                  mem_bandwidth=1638e9, matrix_flops=394e12),
+    }
+    t0 = time.perf_counter()
+    confirmed = dse.explore(variants, keep=3)
+    wall = time.perf_counter() - t0
+    for r in confirmed:
+        print(f"  {r.system:8s} roofline={r.report.step_time * 1e3:8.1f} ms"
+              f"  des={r.confirmed.step_time * 1e3:8.1f} ms")
+    print(f"  ({len(variants)} points, {dse.stats['compiles']} compiles, "
+          f"{dse.stats['reannotations']} re-annotations, {wall:.1f}s)")
 
     print("\n--- top-down: required ICI bw for <5% collective share ---")
+    avsm = AVSM(system=base, graph=dse.compiled("deepseek_train", base))
     lo, hi = 25e9, 1600e9
     for _ in range(12):
         mid = (lo + hi) / 2
-        rep = avsm.what_if(link_bandwidth=mid).simulate()
-        share = rep.ici_util
+        share = avsm.what_if(link_bandwidth=mid).simulate().ici_util
         if share > 0.05:
             lo = mid
         else:

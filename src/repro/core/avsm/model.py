@@ -1,59 +1,82 @@
 """AVSM: Abstract Virtual System Model — the paper's core artifact.
 
 AVSM = virtual hardware models (SystemDescription) + hardware-adapted task
-graph (compiled LayerOps), executable by the DES.  The model-generation
-engine (`build_avsm`) is the analog of the paper's SystemC generation; the
+graph (compiled LayerOps), executable by any registered estimator backend
+(`repro.core.estimator`): ``roofline`` (closed-form), ``analytic`` (per-op
+stacking), ``des`` (causal simulation).  The model-generation engine
+(``build_avsm``) is the analog of the paper's SystemC generation; the
 what-if API re-annotates physical parameters (frequency, bandwidths) and
-regenerates without re-deriving the task graph — the paper's
-"click-of-a-button" design-space exploration.
+rescales the existing task graph in O(n_tasks) — without re-tiling or
+recompiling — the paper's "click-of-a-button" design-space exploration.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional
 
+from repro.core.estimator import EstimateReport, LayerReport, get_backend
 from repro.core.hw import SystemDescription
-from repro.core.sim.engine import SimResult, Simulator
-from repro.core.taskgraph.compiler import CompiledGraph, CompilePlan, compile_ops
+from repro.core.taskgraph.compiler import (CompiledGraph, CompilePlan,
+                                           compile_ops, reannotate)
 from repro.core.taskgraph.ops import LayerOp
 
+# AVSMReport is a view over the common estimator report: the DES backend
+# fills every field (including the SimResult for Gantt export); cheaper
+# backends fill the shared subset.  Kept as an alias for callers written
+# against the pre-estimator API.
+AVSMReport = EstimateReport
 
-@dataclass
-class LayerReport:
-    name: str
-    time: float                  # seconds (span in the schedule)
-    flops: float
-    hbm_bytes: float
-    coll_bytes: float
-    intensity: float             # flops / hbm byte
-    achieved_flops: float        # flops / time
-    bound: str                   # compute | memory | collective | latency
+__all__ = ["AVSM", "AVSMReport", "EstimateReport", "LayerReport",
+           "annotate_system", "build_avsm"]
+
+# what-if keys that only change service rates/latencies: handled by
+# re-annotating the existing task graph.  Keys outside this set (on-chip
+# capacity, alignment) change the tiling and force a recompile.
+_RATE_KEYS = frozenset({
+    "matrix_flops", "vector_flops", "launch_overhead", "mem_bandwidth",
+    "mem_latency", "link_bandwidth", "link_latency", "num_dma_engines",
+    "num_links", "dcn_bandwidth", "dcn_latency",
+})
 
 
-@dataclass
-class AVSMReport:
-    system: str
-    step_time: float             # seconds end-to-end
-    nce_util: float
-    dma_util: float
-    ici_util: float
-    layers: List[LayerReport]
-    build_seconds: float
-    sim_seconds: float
-    n_tasks: int
-    sim_result: Optional[SimResult] = None
-
-    def summary(self) -> str:
-        lines = [
-            f"AVSM[{self.system}] step={self.step_time * 1e3:.3f} ms  "
-            f"tasks={self.n_tasks}  build={self.build_seconds:.2f}s "
-            f"sim={self.sim_seconds:.2f}s",
-            f"  utilization: nce={self.nce_util:.1%} dma={self.dma_util:.1%} "
-            f"ici={self.ici_util:.1%}",
-        ]
-        return "\n".join(lines)
+def annotate_system(system: SystemDescription,
+                    **annotations) -> SystemDescription:
+    """Replace physical annotations (``_RATE_KEYS`` + ``vmem_capacity``) on
+    a system description — the shared builder for what-if variants."""
+    unknown = set(annotations) - _RATE_KEYS - {"vmem_capacity"}
+    if unknown:
+        raise KeyError(f"unknown what-if keys: {sorted(unknown)}")
+    chip = system.chip
+    compute = dataclasses.replace(
+        chip.compute,
+        matrix_flops=annotations.get("matrix_flops",
+                                     chip.compute.matrix_flops),
+        vector_flops=annotations.get("vector_flops",
+                                     chip.compute.vector_flops),
+        launch_overhead=annotations.get("launch_overhead",
+                                        chip.compute.launch_overhead))
+    memory = dataclasses.replace(
+        chip.memory,
+        bandwidth=annotations.get("mem_bandwidth", chip.memory.bandwidth),
+        latency=annotations.get("mem_latency", chip.memory.latency),
+        num_dma_engines=annotations.get("num_dma_engines",
+                                        chip.memory.num_dma_engines))
+    onchip = dataclasses.replace(
+        chip.onchip,
+        capacity=annotations.get("vmem_capacity", chip.onchip.capacity))
+    link = dataclasses.replace(
+        chip.link,
+        bandwidth=annotations.get("link_bandwidth", chip.link.bandwidth),
+        latency=annotations.get("link_latency", chip.link.latency))
+    return dataclasses.replace(
+        system,
+        chip=dataclasses.replace(
+            chip, compute=compute, memory=memory, onchip=onchip, link=link,
+            num_links=annotations.get("num_links", chip.num_links)),
+        dcn_bandwidth=annotations.get("dcn_bandwidth", system.dcn_bandwidth),
+        dcn_latency=annotations.get("dcn_latency", system.dcn_latency))
 
 
 @dataclass
@@ -62,89 +85,39 @@ class AVSM:
     graph: CompiledGraph
     build_seconds: float = 0.0
 
+    def estimate(self, backend: str = "des") -> EstimateReport:
+        """Run a registered estimator backend on the compiled graph.
+
+        ``backend``: ``roofline`` (closed-form bound), ``analytic``
+        (per-op latency stacking) or ``des`` (causal simulation).
+        """
+        return get_backend(backend).estimate(
+            self.graph, build_seconds=self.build_seconds)
+
     def simulate(self) -> AVSMReport:
-        t0 = time.perf_counter()
-        sim = Simulator(self.graph.tasks)
-        result = sim.run()
-        sim_s = time.perf_counter() - t0
-
-        chip = self.system.chip
-        # per-layer roofline classification
-        per_layer: Dict[str, Dict[str, float]] = {}
-        for op in self.graph.ops:
-            d = per_layer.setdefault(op.layer, {"flops": 0.0, "bytes": 0.0,
-                                                "coll": 0.0})
-            if op.coll is not None:
-                d["coll"] += op.coll.payload
-            else:
-                d["flops"] += op.flops
-                d["bytes"] += op.total_bytes
-        durations = result.layer_durations()
-        layers = []
-        peak = chip.compute.matrix_flops
-        bw = chip.memory.bandwidth
-        for name, vals in per_layer.items():
-            t = durations.get(name, 0.0)
-            t_c = vals["flops"] / peak
-            t_m = vals["bytes"] / bw
-            t_i = vals["coll"] / max(chip.link.bandwidth, 1.0)
-            dominant = max(("compute", t_c), ("memory", t_m),
-                           ("collective", t_i), key=lambda kv: kv[1])
-            bound = dominant[0]
-            if t > 0 and max(t_c, t_m, t_i) < 0.5 * t:
-                bound = "latency"
-            layers.append(LayerReport(
-                name=name, time=t, flops=vals["flops"],
-                hbm_bytes=vals["bytes"], coll_bytes=vals["coll"],
-                intensity=vals["flops"] / max(vals["bytes"], 1.0),
-                achieved_flops=vals["flops"] / t if t > 0 else 0.0,
-                bound=bound))
-
-        def util(prefix: str) -> float:
-            busy = sum(v for k, v in result.resource_busy.items()
-                       if k.startswith(prefix))
-            n = max(1, len([k for k in result.resource_busy
-                            if k.startswith(prefix)]))
-            return busy / (n * result.makespan) if result.makespan else 0.0
-
-        return AVSMReport(
-            system=self.system.name, step_time=result.makespan,
-            nce_util=util("nce"), dma_util=util("dma"), ici_util=util("ici"),
-            layers=layers, build_seconds=self.build_seconds,
-            sim_seconds=sim_s, n_tasks=len(self.graph.tasks),
-            sim_result=result)
+        """Highest-fidelity estimate (the DES backend)."""
+        return self.estimate("des")
 
     def what_if(self, **annotations) -> "AVSM":
         """Re-annotate physical parameters and regenerate the model.
 
-        Supported keys: matrix_flops, vector_flops, mem_bandwidth, link_bandwidth,
-        vmem_capacity, launch_overhead, num_dma_engines — the paper's top-down
-        requirement assessment ("what NCE frequency meets the target?").
+        Supported keys: matrix_flops, vector_flops, launch_overhead,
+        mem_bandwidth, mem_latency, link_bandwidth, link_latency,
+        num_dma_engines, num_links, dcn_bandwidth, dcn_latency,
+        vmem_capacity — the paper's top-down requirement assessment
+        ("what NCE frequency meets the target?").
+
+        Rate/latency/resource-count keys take the fast path: the existing
+        tiling is kept and task durations are rescaled in O(n_tasks).
+        ``vmem_capacity`` changes the tiling, so it falls back to a full
+        recompile.
         """
-        chip = self.system.chip
-        compute = dataclasses.replace(
-            chip.compute,
-            matrix_flops=annotations.get("matrix_flops",
-                                         chip.compute.matrix_flops),
-            vector_flops=annotations.get("vector_flops",
-                                         chip.compute.vector_flops),
-            launch_overhead=annotations.get("launch_overhead",
-                                            chip.compute.launch_overhead))
-        memory = dataclasses.replace(
-            chip.memory,
-            bandwidth=annotations.get("mem_bandwidth", chip.memory.bandwidth),
-            num_dma_engines=annotations.get("num_dma_engines",
-                                            chip.memory.num_dma_engines))
-        onchip = dataclasses.replace(
-            chip.onchip,
-            capacity=annotations.get("vmem_capacity", chip.onchip.capacity))
-        link = dataclasses.replace(
-            chip.link,
-            bandwidth=annotations.get("link_bandwidth", chip.link.bandwidth))
-        new_sys = dataclasses.replace(
-            self.system,
-            chip=dataclasses.replace(chip, compute=compute, memory=memory,
-                                     onchip=onchip, link=link))
+        new_sys = annotate_system(self.system, **annotations)
+        if set(annotations) <= _RATE_KEYS:
+            t0 = time.perf_counter()
+            graph = reannotate(self.graph, new_sys)
+            return AVSM(system=new_sys, graph=graph,
+                        build_seconds=time.perf_counter() - t0)
         return build_avsm(self.graph.ops, new_sys, self.graph.plan)
 
 

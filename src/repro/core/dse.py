@@ -1,0 +1,152 @@
+"""Fast what-if design-space exploration engine (paper Fig 1, right path).
+
+Sweeps ``systems x CompilePlans x workloads`` through the pluggable
+estimator backends with two accelerations:
+
+  * **compiled-graph caching** — the tiling of a task graph depends only on
+    the workload, the plan, and the *structural* chip parameters (on-chip
+    capacity, array alignment).  Sweep points that differ only in physical
+    annotations (frequencies, bandwidths, latencies, resource counts)
+    reuse the cached graph via ``reannotate`` in O(n_tasks) instead of
+    recompiling — the paper's "click-of-a-button" loop.
+  * **backend escalation** — estimate every point with a cheap backend
+    (``roofline`` by default), prune to the most promising candidates,
+    and confirm only those with the causal DES.
+
+Example::
+
+    dse = DesignSpaceExplorer({"vgg": convnet_ops(cfg)})
+    results = dse.sweep(systems={"a": sys_a, "b": sys_b})
+    best = dse.explore(systems, keep=4)[0]
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.estimator import EstimateReport, get_backend
+from repro.core.hw import SystemDescription
+from repro.core.taskgraph.compiler import (CompiledGraph, CompilePlan,
+                                           compile_ops, reannotate)
+from repro.core.taskgraph.ops import LayerOp
+
+
+@dataclass
+class SweepResult:
+    """One evaluated (workload, system, plan) point."""
+
+    workload: str
+    system: str
+    plan: CompilePlan
+    report: EstimateReport
+    confirmed: Optional[EstimateReport] = None   # DES escalation result
+
+    @property
+    def step_time(self) -> float:
+        return (self.confirmed or self.report).step_time
+
+
+def _structural_key(system: SystemDescription) -> Tuple:
+    """Chip parameters that change the *tiling* (anything else is handled
+    by re-annotation)."""
+    chip = system.chip
+    return (chip.onchip.capacity, chip.compute.align)
+
+
+class DesignSpaceExplorer:
+    """Sweeps named workloads over systems and plans with graph caching."""
+
+    def __init__(self, workloads: Mapping[str, List[LayerOp]]):
+        if not workloads:
+            raise ValueError("need at least one workload")
+        self.workloads = dict(workloads)
+        self._cache: Dict[Tuple, CompiledGraph] = {}
+        self.stats = {"compiles": 0, "reannotations": 0, "estimates": 0}
+
+    # ---- compiled-graph cache -------------------------------------------
+
+    def compiled(self, workload: str, system: SystemDescription,
+                 plan: Optional[CompilePlan] = None) -> CompiledGraph:
+        """Compiled graph for a sweep point, re-annotating a structurally
+        identical cached graph when possible."""
+        plan = plan or CompilePlan()
+        key = (workload, plan, _structural_key(system))
+        hit = self._cache.get(key)
+        if hit is None:
+            self.stats["compiles"] += 1
+            graph = compile_ops(self.workloads[workload], system, plan)
+            self._cache[key] = graph
+            return graph
+        if hit.system is system:
+            return hit
+        self.stats["reannotations"] += 1
+        return reannotate(hit, system)
+
+    # ---- sweeping --------------------------------------------------------
+
+    def sweep(self, systems: Mapping[str, SystemDescription],
+              plans: Optional[Sequence[CompilePlan]] = None,
+              workloads: Optional[Iterable[str]] = None,
+              backend: str = "roofline") -> List[SweepResult]:
+        """Estimate every (workload, system, plan) point with ``backend``,
+        sorted fastest-first."""
+        plans = list(plans) if plans else [CompilePlan()]
+        names = list(workloads) if workloads else list(self.workloads)
+        est = get_backend(backend)
+        out: List[SweepResult] = []
+        for w in names:
+            for sname, system in systems.items():
+                for plan in plans:
+                    graph = self.compiled(w, system, plan)
+                    self.stats["estimates"] += 1
+                    out.append(SweepResult(
+                        workload=w, system=sname, plan=plan,
+                        report=est.estimate(graph)))
+        out.sort(key=lambda r: r.step_time)
+        return out
+
+    def explore(self, systems: Mapping[str, SystemDescription],
+                plans: Optional[Sequence[CompilePlan]] = None,
+                workloads: Optional[Iterable[str]] = None,
+                prune_backend: str = "roofline",
+                confirm_backend: str = "des",
+                keep: int = 4) -> List[SweepResult]:
+        """Backend escalation: prune the sweep with a cheap backend, then
+        confirm the ``keep`` most promising points per workload with the
+        high-fidelity backend.  Returns confirmed points fastest-first."""
+        ranked = self.sweep(systems, plans, workloads, backend=prune_backend)
+        confirm = get_backend(confirm_backend)
+        survivors: List[SweepResult] = []
+        seen: Dict[str, int] = {}
+        for r in ranked:
+            if seen.get(r.workload, 0) >= keep:
+                continue
+            seen[r.workload] = seen.get(r.workload, 0) + 1
+            graph = self.compiled(r.workload, systems[r.system], r.plan)
+            self.stats["estimates"] += 1
+            r.confirmed = confirm.estimate(graph)
+            survivors.append(r)
+        survivors.sort(key=lambda r: r.step_time)
+        return survivors
+
+    # ---- what-if sweeps over one annotated parameter --------------------
+
+    def what_if_sweep(self, workload: str, base: SystemDescription,
+                      key: str, values: Sequence[float],
+                      plan: Optional[CompilePlan] = None,
+                      backend: str = "des") -> List[Tuple[float, EstimateReport]]:
+        """Sweep one physical annotation (e.g. ``link_bandwidth``) through
+        ``values`` on the fast re-annotation path."""
+        from repro.core.avsm.model import AVSM
+
+        plan = plan or CompilePlan()
+        graph = self.compiled(workload, base, plan)
+        avsm = AVSM(system=base, graph=graph)
+        out = []
+        for v in values:
+            rep = avsm.what_if(**{key: v}).estimate(backend)
+            self.stats["reannotations"] += 1
+            self.stats["estimates"] += 1
+            out.append((v, rep))
+        return out

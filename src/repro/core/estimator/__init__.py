@@ -1,0 +1,173 @@
+"""Unified estimator-backend architecture.
+
+The paper's methodology needs performance estimates at several points of
+the design flow, at different fidelity/cost trade-offs (ANNETTE makes the
+same argument for stacked/mixed models; SMAUG for one entry point across
+fidelity levels).  This package makes the estimation fidelity a pluggable
+axis: every backend consumes the same hardware-adapted
+:class:`~repro.core.taskgraph.compiler.CompiledGraph` and emits a common
+:class:`EstimateReport`.
+
+Registered backends (cheapest first):
+
+  * ``roofline`` — closed-form three-term bound (µs per estimate); no
+    queueing, no overheads: a lower bound used to prune sweeps.
+  * ``analytic`` — per-op latency stacking over the compiled tasks
+    (launch overheads + padding efficiency included, DMA/compute overlap
+    per op, link-occupancy lower bound); ~100µs per estimate.
+  * ``des``      — the causal discrete-event simulation on the
+    multi-server, bandwidth-shared resource model; exact contention.
+
+Usage::
+
+    graph = compile_ops(ops, system)
+    report = get_backend("roofline").estimate(graph)
+    confirmed = get_backend("des").estimate(graph)
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.sim.engine import SimResult
+from repro.core.taskgraph.compiler import CompiledGraph
+
+
+@dataclass
+class LayerReport:
+    name: str
+    time: float                  # seconds (span in the schedule)
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    intensity: float             # flops / hbm byte
+    achieved_flops: float        # flops / time
+    bound: str                   # compute | memory | collective | latency
+
+
+@dataclass
+class EstimateReport:
+    """Common output of every estimator backend.
+
+    ``AVSMReport`` (repro.core.avsm.model) is a view over this class: the
+    DES backend fills every field; cheaper backends leave ``sim_result``
+    empty and report model-derived utilizations.
+    """
+
+    system: str
+    backend: str
+    step_time: float             # seconds end-to-end
+    t_compute: float             # three-term breakdown (lower bounds)
+    t_memory: float
+    t_collective: float
+    nce_util: float
+    dma_util: float
+    ici_util: float
+    layers: List[LayerReport]
+    build_seconds: float
+    estimate_seconds: float
+    n_tasks: int
+    sim_result: Optional[SimResult] = None
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    # Backwards-compatible AVSM spelling.
+    @property
+    def sim_seconds(self) -> float:
+        return self.estimate_seconds
+
+    def summary(self) -> str:
+        lines = [
+            f"AVSM[{self.system}|{self.backend}] "
+            f"step={self.step_time * 1e3:.3f} ms  "
+            f"tasks={self.n_tasks}  build={self.build_seconds:.2f}s "
+            f"sim={self.estimate_seconds:.2f}s",
+            f"  utilization: nce={self.nce_util:.1%} dma={self.dma_util:.1%} "
+            f"ici={self.ici_util:.1%}",
+        ]
+        return "\n".join(lines)
+
+
+class EstimatorBackend(abc.ABC):
+    """One fidelity level of the estimation stack."""
+
+    name: str = "abstract"
+    fidelity: int = 0            # higher = more faithful, more expensive
+
+    @abc.abstractmethod
+    def estimate(self, graph: CompiledGraph,
+                 build_seconds: float = 0.0) -> EstimateReport:
+        """Estimate one step of ``graph`` on its system description."""
+
+
+_REGISTRY: Dict[str, Callable[[], EstimatorBackend]] = {}
+_INSTANCES: Dict[str, EstimatorBackend] = {}
+
+
+def register_backend(factory: Callable[[], EstimatorBackend]):
+    """Class decorator: register an EstimatorBackend under its ``name``."""
+    name = factory.name
+    if not isinstance(name, str) or not name:
+        raise ValueError("backend class must define a non-empty `name`")
+    _REGISTRY[name] = factory
+    return factory
+
+
+def get_backend(name: str) -> EstimatorBackend:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown estimator backend {name!r}; "
+            f"available: {available_backends()}")
+    if name not in _INSTANCES:
+        _INSTANCES[name] = _REGISTRY[name]()
+    return _INSTANCES[name]
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY, key=lambda n: _REGISTRY[n].fidelity)
+
+
+def layer_reports(graph: CompiledGraph,
+                  durations: Dict[str, float]) -> List[LayerReport]:
+    """Per-layer roofline classification shared by all backends."""
+    chip = graph.system.chip
+    per_layer: Dict[str, Dict[str, float]] = {}
+    for op in graph.ops:
+        d = per_layer.setdefault(op.layer, {"flops": 0.0, "bytes": 0.0,
+                                            "coll": 0.0})
+        if op.coll is not None:
+            d["coll"] += op.coll.payload
+        else:
+            d["flops"] += op.flops
+            d["bytes"] += op.total_bytes
+    peak = chip.compute.matrix_flops
+    bw = chip.memory.bandwidth
+    layers = []
+    for name, vals in per_layer.items():
+        t = durations.get(name, 0.0)
+        t_c = vals["flops"] / peak
+        t_m = vals["bytes"] / bw
+        t_i = vals["coll"] / max(chip.link.bandwidth, 1.0)
+        dominant = max(("compute", t_c), ("memory", t_m),
+                       ("collective", t_i), key=lambda kv: kv[1])
+        bound = dominant[0]
+        if t > 0 and max(t_c, t_m, t_i) < 0.5 * t:
+            bound = "latency"
+        layers.append(LayerReport(
+            name=name, time=t, flops=vals["flops"],
+            hbm_bytes=vals["bytes"], coll_bytes=vals["coll"],
+            intensity=vals["flops"] / max(vals["bytes"], 1.0),
+            achieved_flops=vals["flops"] / t if t > 0 else 0.0,
+            bound=bound))
+    return layers
+
+
+# Import for side effect: registers the built-in backends.
+from repro.core.estimator import analytic as _analytic   # noqa: E402,F401
+from repro.core.estimator import des as _des             # noqa: E402,F401
+from repro.core.estimator import roofline as _roofline   # noqa: E402,F401

@@ -1,0 +1,93 @@
+"""Analytic backend: per-op latency stacking (ANNETTE-style mixed model).
+
+Walks the compiled tasks (so launch overheads, padding efficiency, and the
+tiling are all included — the same annotations the DES sees) but replaces
+event-driven contention with a two-bound stack:
+
+  * per op: DMA and compute are double-buffered, so the op's latency is
+    ``max(Σ dma, Σ compute) + one pipeline-fill DMA``;
+  * activation collectives gate the next op (serial); gradient collectives
+    marked overlappable ride the link concurrently with compute;
+  * the step is ``max(serial critical path, per-link occupancy)``.
+
+~100x cheaper than the DES, typically within a few percent on graphs
+without heavy cross-resource contention.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from repro.core.estimator import (EstimateReport, EstimatorBackend,
+                                  layer_reports, register_backend)
+from repro.core.taskgraph.compiler import CompiledGraph
+
+
+@register_backend
+class AnalyticBackend(EstimatorBackend):
+    name = "analytic"
+    fidelity = 1
+
+    def estimate(self, graph: CompiledGraph,
+                 build_seconds: float = 0.0) -> EstimateReport:
+        t0 = time.perf_counter()
+        # accumulate per-op compute/dma time and per-resource link time
+        op_comp: Dict[int, float] = {}
+        op_dma: Dict[int, float] = {}
+        op_dma_first: Dict[int, float] = {}
+        op_coll: Dict[int, float] = {}
+        link_busy: Dict[str, float] = {}
+        t_c = t_m = t_i = 0.0
+        for t, dur in zip(graph.tasks, graph.durations):
+            if t.kind == "compute":
+                op_comp[t.op_id] = op_comp.get(t.op_id, 0.0) + dur
+                t_c += dur
+            elif t.kind == "dma":
+                op_dma[t.op_id] = op_dma.get(t.op_id, 0.0) + dur
+                op_dma_first.setdefault(t.op_id, dur)
+                t_m += dur
+            elif t.kind == "collective":
+                op_coll[t.op_id] = op_coll.get(t.op_id, 0.0) + dur
+                link_busy[t.resource] = (link_busy.get(t.resource, 0.0)
+                                         + dur)
+                t_i += dur
+
+        serial = 0.0
+        per_layer: Dict[str, float] = {}
+        overlappable = 0.0
+        for op_id, op in enumerate(graph.ops):
+            if op.coll is not None:
+                dt = op_coll.get(op_id, 0.0)
+                if graph.plan.overlap_grad_comm and \
+                        op.name.endswith(("grad_rs", "grad_rs_bwd")):
+                    overlappable += dt
+                else:
+                    serial += dt
+                    per_layer[op.layer] = per_layer.get(op.layer, 0.0) + dt
+                continue
+            comp = op_comp.get(op_id, 0.0)
+            dma = op_dma.get(op_id, 0.0)
+            # double-buffered: overlap DMA with compute, pay one fill
+            dt = max(comp, dma) + op_dma_first.get(op_id, 0.0)
+            serial += dt
+            per_layer[op.layer] = per_layer.get(op.layer, 0.0) + dt
+
+        # link occupancy bound: overlapped collectives still occupy the
+        # wire; a per-channel sum (scaled by channel width) bounds below
+        specs = graph.resources
+        occupancy = 0.0
+        for res, busy in link_busy.items():
+            width = specs[res].servers if res in specs else 1
+            occupancy = max(occupancy, busy / max(1, width))
+        step = max(serial, occupancy, overlappable)
+
+        return EstimateReport(
+            system=graph.system.name, backend=self.name, step_time=step,
+            t_compute=t_c, t_memory=t_m, t_collective=t_i,
+            nce_util=t_c / step if step > 0 else 0.0,
+            dma_util=t_m / step if step > 0 else 0.0,
+            ici_util=t_i / step if step > 0 else 0.0,
+            layers=layer_reports(graph, per_layer),
+            build_seconds=build_seconds,
+            estimate_seconds=time.perf_counter() - t0,
+            n_tasks=len(graph.tasks))

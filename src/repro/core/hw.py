@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import typing
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
@@ -115,13 +116,39 @@ class SystemDescription:
 
     @staticmethod
     def from_json(text: str) -> "SystemDescription":
-        import dacite
+        return load_dataclass(SystemDescription, json.loads(text))
 
-        return dacite.from_dict(
-            data_class=SystemDescription,
-            data=json.loads(text),
-            config=dacite.Config(cast=[tuple], strict=False),
-        )
+
+def _coerce(tp, val):
+    """Coerce a JSON value to the annotated field type (nested dataclasses,
+    tuples, numeric widening); unknown shapes pass through unchanged."""
+    if dataclasses.is_dataclass(tp):
+        return load_dataclass(tp, val)     # raises on non-dict values
+    origin = typing.get_origin(tp)
+    if origin is tuple and isinstance(val, (list, tuple)):
+        args = typing.get_args(tp)
+        elem = args[0] if args and args[-1] is Ellipsis else None
+        return tuple(_coerce(elem, v) if elem is not None else v for v in val)
+    if origin is dict and isinstance(val, dict):
+        return dict(val)
+    if tp is float and isinstance(val, int):
+        return float(val)
+    return val
+
+
+def load_dataclass(cls, data: Dict):
+    """Hand-rolled nested-dataclass loader (replaces the dacite dependency).
+
+    Ignores unknown keys and missing fields (defaults apply), recursing
+    into dataclass-typed fields — exactly the subset ``from_json`` needs.
+    """
+    if not isinstance(data, dict):
+        raise TypeError(f"expected a dict for {cls.__name__}, got "
+                        f"{type(data).__name__}")
+    hints = typing.get_type_hints(cls)
+    kwargs = {f.name: _coerce(hints[f.name], data[f.name])
+              for f in dataclasses.fields(cls) if f.name in data}
+    return cls(**kwargs)
 
 
 # ---------------------------------------------------------------------------

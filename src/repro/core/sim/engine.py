@@ -1,22 +1,49 @@
 """Discrete-event simulation engine (the SystemC / Platform Architect analog).
 
-Executes a hardware-adapted task graph on named FIFO resources while
-preserving causality — the property the paper argues distinguishes
-simulation from statistical estimation: a DMA that a compute task depends
-on *blocks* it, and two collectives sharing a link serialize.
+Executes a hardware-adapted task graph on named resources while preserving
+causality — the property the paper argues distinguishes simulation from
+statistical estimation: a DMA that a compute task depends on *blocks* it,
+and transfers sharing a link contend for its bandwidth.
 
-Semantics:
-  * a task becomes READY when all dependencies completed;
-  * each resource runs one task at a time, FIFO in ready order
-    (tie-broken by task id for determinism);
-  * task duration is pre-annotated by the virtual hardware models
-    (repro.core.taskgraph.compiler).
+Resources come in two flavours (:class:`ResourceSpec`):
+
+  * ``fifo``   — a ``servers``-wide FIFO station: up to ``servers`` tasks
+    run concurrently, each at full rate; excess tasks queue in ready order
+    (tie-broken by task id for determinism).  A single-server FIFO is the
+    classic exclusive resource.
+  * ``shared`` — a bandwidth-shared channel (generalized processor
+    sharing): every admitted task progresses at rate
+    ``min(1, servers / n_active)``, so total throughput never exceeds
+    ``servers`` times the annotated full rate.  Two collectives sharing an
+    ICI link each see half the bandwidth instead of strictly serializing.
+
+Task durations are pre-annotated at *full rate* by the virtual hardware
+models (repro.core.taskgraph.compiler); contention stretches them.
+Unknown resources default to a single-server FIFO, so plain task lists
+behave exactly as the original exclusive-resource engine.
 """
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
+
+from repro.core.taskgraph.anno import RateAnno
+
+
+@dataclass(frozen=True)
+class ResourceSpec:
+    """How a named resource serves tasks."""
+
+    name: str
+    servers: int = 1
+    mode: str = "fifo"           # fifo | shared
+
+    def __post_init__(self):
+        if self.servers < 1:
+            raise ValueError(f"resource {self.name}: servers must be >= 1")
+        if self.mode not in ("fifo", "shared"):
+            raise ValueError(f"resource {self.name}: unknown mode {self.mode}")
 
 
 @dataclass
@@ -24,12 +51,14 @@ class Task:
     tid: int
     name: str
     layer: str                  # grouping key for per-layer stats
-    resource: str               # e.g. "nce", "dma0", "ici_x"
-    duration: float             # seconds
+    resource: str               # e.g. "nce", "dma", "ici_model"
+    duration: float             # seconds at full rate
     deps: Tuple[int, ...] = ()
     kind: str = "compute"       # compute | dma | collective | launch | host
     nbytes: int = 0
     flops: int = 0
+    op_id: int = -1             # index of the originating LayerOp (-1: none)
+    anno: Optional[RateAnno] = None   # re-annotation rule (what-if fast path)
 
 
 @dataclass
@@ -54,13 +83,80 @@ class SimResult:
         return {k: e - s for k, (s, e) in self.layer_time.items()}
 
 
-class Simulator:
-    """Event-driven list scheduler over FIFO resources."""
+class _SharedChannel:
+    """Processor-sharing state for one ``shared`` resource.
 
-    def __init__(self, tasks: List[Task]):
+    ``remaining`` holds full-rate seconds of work left per active task;
+    real time stretches by ``n_active / servers`` whenever the channel is
+    oversubscribed.  ``epoch`` invalidates stale completion events.
+    """
+
+    __slots__ = ("servers", "remaining", "start", "last_t", "epoch")
+
+    def __init__(self, servers: int):
+        self.servers = servers
+        self.remaining: Dict[int, float] = {}
+        self.start: Dict[int, float] = {}
+        self.last_t = 0.0
+        self.epoch = 0
+
+    @property
+    def rate(self) -> float:
+        n = len(self.remaining)
+        return min(1.0, self.servers / n) if n else 1.0
+
+    def advance(self, now: float) -> None:
+        dt = now - self.last_t
+        if dt > 0 and self.remaining:
+            r = self.rate
+            for tid in self.remaining:
+                self.remaining[tid] -= dt * r
+        self.last_t = now
+
+    def admit(self, tid: int, work: float, now: float) -> None:
+        self.advance(now)
+        self.remaining[tid] = work
+        self.start[tid] = now
+
+    def next_completion(self, now: float) -> Optional[float]:
+        if not self.remaining:
+            return None
+        rem = min(self.remaining.values())
+        return now + max(rem, 0.0) / self.rate
+
+    def pop_done(self, now: float) -> List[int]:
+        """Task ids whose remaining work is (numerically) exhausted."""
+        self.advance(now)
+        if not self.remaining:
+            return []
+        rem_min = min(self.remaining.values())
+        done = sorted(tid for tid, rem in self.remaining.items()
+                      if rem <= rem_min + 1e-15 or rem <= 1e-18)
+        for tid in done:
+            del self.remaining[tid]
+        return done
+
+
+class Simulator:
+    """Event-driven scheduler over FIFO and bandwidth-shared resources."""
+
+    def __init__(self, tasks: List[Task],
+                 resources: Optional[Dict[str, ResourceSpec]] = None,
+                 durations=None):
+        """``durations`` optionally overrides each task's annotated duration
+        (aligned with ``tasks``); the what-if fast path re-annotates a graph
+        by swapping this array, leaving the Task objects untouched."""
         self.tasks = {t.tid: t for t in tasks}
         if len(self.tasks) != len(tasks):
             raise ValueError("duplicate task ids")
+        if durations is None:
+            self.durations = {t.tid: t.duration for t in tasks}
+        else:
+            if len(durations) != len(tasks):
+                raise ValueError("durations must align with tasks")
+            self.durations = {t.tid: float(d)
+                              for t, d in zip(tasks, durations)}
+        self.resources = dict(resources or {})
         self._validate(tasks)
 
     def _validate(self, tasks: List[Task]) -> None:
@@ -70,6 +166,9 @@ class Simulator:
                 if d not in ids:
                     raise ValueError(f"task {t.tid} depends on unknown {d}")
 
+    def _spec(self, resource: str) -> ResourceSpec:
+        return self.resources.get(resource) or ResourceSpec(name=resource)
+
     def run(self) -> SimResult:
         tasks = self.tasks
         n_deps = {tid: len(t.deps) for tid, t in tasks.items()}
@@ -78,56 +177,94 @@ class Simulator:
             for d in t.deps:
                 dependents[d].append(t.tid)
 
-        # per-resource FIFO queue of ready tasks: (ready_time, tid)
+        # per-FIFO-resource ready queue: (ready_time, tid)
         queues: Dict[str, List[Tuple[float, int]]] = {}
-        res_free: Dict[str, float] = {}
+        running: Dict[str, int] = {}          # fifo resource -> active count
+        channels: Dict[str, _SharedChannel] = {}
         res_busy: Dict[str, float] = {}
         records: List[TaskRecord] = []
-        # event heap: (time, seq, kind, payload); kinds: 'done'
-        events: List[Tuple[float, int, str, int]] = []
+        # event heap: (time, seq, kind, payload)
+        #   kind 'done'  — a fifo task finished (payload = tid)
+        #   kind 'chan'  — a shared channel may have completions
+        #                  (payload = (resource, epoch))
+        events: List[Tuple[float, int, str, object]] = []
         seq = 0
         completed = 0
-        running: Dict[str, Optional[int]] = {}
-
-        def enqueue(tid: int, t_ready: float):
-            t = tasks[tid]
-            q = queues.setdefault(t.resource, [])
-            heapq.heappush(q, (t_ready, tid))
-            try_start(t.resource)
-
-        def try_start(resource: str):
-            nonlocal seq
-            if running.get(resource) is not None:
-                return
-            q = queues.get(resource)
-            if not q:
-                return
-            t_ready, tid = heapq.heappop(q)
-            t = tasks[tid]
-            start = max(t_ready, res_free.get(resource, 0.0))
-            end = start + t.duration
-            running[resource] = tid
-            res_free[resource] = end
-            res_busy[resource] = res_busy.get(resource, 0.0) + t.duration
-            records.append(TaskRecord(t, start, end))
-            seq += 1
-            heapq.heappush(events, (end, seq, "done", tid))
-
         now = 0.0
-        for tid, t in tasks.items():
-            if n_deps[tid] == 0:
-                enqueue(tid, 0.0)
 
-        while events:
-            now, _, _, tid = heapq.heappop(events)
+        def push_event(t_ev: float, kind: str, payload) -> None:
+            nonlocal seq
+            seq += 1
+            heapq.heappush(events, (t_ev, seq, kind, payload))
+
+        def reschedule_channel(res: str) -> None:
+            ch = channels[res]
+            ch.epoch += 1
+            t_next = ch.next_completion(now)
+            if t_next is not None:
+                push_event(t_next, "chan", (res, ch.epoch))
+
+        durations = self.durations
+
+        def enqueue(tid: int, t_ready: float) -> None:
             t = tasks[tid]
-            running[t.resource] = None
+            spec = self._spec(t.resource)
+            if spec.mode == "shared":
+                ch = channels.get(t.resource)
+                if ch is None:
+                    ch = channels[t.resource] = _SharedChannel(spec.servers)
+                ch.admit(tid, durations[tid], t_ready)
+                reschedule_channel(t.resource)
+            else:
+                q = queues.setdefault(t.resource, [])
+                heapq.heappush(q, (t_ready, tid))
+                drain(t.resource)
+
+        def drain(resource: str) -> None:
+            spec = self._spec(resource)
+            q = queues.get(resource)
+            while q and running.get(resource, 0) < spec.servers:
+                t_ready, tid = heapq.heappop(q)
+                t = tasks[tid]
+                dur = durations[tid]
+                start = max(t_ready, now)
+                end = start + dur
+                running[resource] = running.get(resource, 0) + 1
+                res_busy[resource] = res_busy.get(resource, 0.0) + dur
+                records.append(TaskRecord(t, start, end))
+                push_event(end, "done", tid)
+
+        def complete(tid: int) -> None:
+            nonlocal completed
             completed += 1
             for dep_tid in dependents[tid]:
                 n_deps[dep_tid] -= 1
                 if n_deps[dep_tid] == 0:
                     enqueue(dep_tid, now)
-            try_start(t.resource)
+
+        for tid in tasks:
+            if n_deps[tid] == 0:
+                enqueue(tid, 0.0)
+
+        while events:
+            now, _, kind, payload = heapq.heappop(events)
+            if kind == "done":
+                tid = payload
+                t = tasks[tid]
+                running[t.resource] -= 1
+                complete(tid)
+                drain(t.resource)
+            else:  # 'chan'
+                res, epoch = payload
+                ch = channels[res]
+                if epoch != ch.epoch:
+                    continue                      # superseded by a re-plan
+                for tid in ch.pop_done(now):
+                    t = tasks[tid]
+                    res_busy[res] = res_busy.get(res, 0.0) + durations[tid]
+                    records.append(TaskRecord(t, ch.start.pop(tid), now))
+                    complete(tid)
+                reschedule_channel(res)
 
         if completed != len(tasks):
             stuck = [tid for tid, n in n_deps.items() if n > 0]
@@ -135,6 +272,7 @@ class Simulator:
                 f"deadlock/cycle: {len(stuck)} tasks never ran, e.g. "
                 f"{[tasks[t].name for t in stuck[:5]]}")
 
+        makespan = max((r.end for r in records), default=0.0)
         layer_time: Dict[str, Tuple[float, float]] = {}
         for r in records:
             lay = r.task.layer
@@ -144,5 +282,5 @@ class Simulator:
             else:
                 layer_time[lay] = (r.start, r.end)
 
-        return SimResult(makespan=now, records=records,
+        return SimResult(makespan=makespan, records=records,
                          resource_busy=res_busy, layer_time=layer_time)

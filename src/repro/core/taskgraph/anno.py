@@ -1,0 +1,27 @@
+"""Re-annotation rules for the what-if fast path.
+
+Every task the AVSM compiler emits carries a :class:`RateAnno` describing
+how its full-rate duration derives from the system description:
+
+    duration = work / rate_table[rate_key] + fixed_table[fixed_key]
+
+``work`` is fixed by the tiling (FLOPs adjusted for array-alignment
+efficiency, or bytes moved), so re-annotating physical parameters
+(frequencies, bandwidths, latencies) only requires rebuilding the two
+lookup tables and rescaling durations — no re-tiling, no graph rebuild.
+This is the paper's "click-of-a-button" exploration: O(n_tasks) per
+sweep point instead of a full recompile.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# rate keys: matrix | vector | mem | ici | dcn
+# fixed keys: launch | mem_lat | ici_lat | dcn_lat | none
+
+
+@dataclass(frozen=True)
+class RateAnno:
+    rate_key: str
+    work: float          # FLOPs/eff for compute, bytes for transfers
+    fixed_key: str = "none"

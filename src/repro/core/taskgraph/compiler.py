@@ -6,15 +6,28 @@ is tiled so a tile's working set fits the on-chip memory (VMEM/BRAM) with
 double buffering, and each tile becomes DMA-in -> compute -> DMA-out tasks
 on the virtual hardware models.  Collectives become per-hop link tasks
 (ring algorithms), so the DES sees link contention and overlap causally.
+
+Two artifacts make the what-if loop cheap:
+
+  * every task carries a :class:`~repro.core.taskgraph.anno.RateAnno`, so
+    :func:`reannotate` rescales durations from new physical annotations
+    (frequencies, bandwidths, latencies) in O(n_tasks) without re-tiling;
+  * the graph carries :class:`~repro.core.sim.engine.ResourceSpec`s derived
+    from the topology (``num_dma_engines`` DMA servers, ``num_links``-wide
+    bandwidth-shared ICI channels), so resource-count what-ifs are also
+    re-annotation, not recompilation.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.hw import SystemDescription
-from repro.core.sim.engine import Task
+from repro.core.sim.engine import ResourceSpec, Task
+from repro.core.taskgraph.anno import RateAnno
 from repro.core.taskgraph.ops import LayerOp
 
 
@@ -31,12 +44,50 @@ class CompilePlan:
     weights_resident: bool = False   # pin weights on-chip (paper's NCE mode)
 
 
+# Index order for the vectorized re-annotation arrays.
+RATE_KEYS = ("matrix", "vector", "mem", "ici", "dcn")
+FIXED_KEYS = ("launch", "mem_lat", "ici_lat", "dcn_lat", "none")
+
+
 @dataclass
 class CompiledGraph:
     tasks: List[Task]
     ops: List[LayerOp]
     system: SystemDescription
     plan: CompilePlan
+    resources: Dict[str, ResourceSpec] = field(default_factory=dict)
+    # (work, rate_idx, fixed_idx, durations) parallel to ``tasks`` — built
+    # lazily, shared across re-annotated copies (task order is identical).
+    _anno_arrays: Optional[Tuple[np.ndarray, ...]] = field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def durations(self) -> np.ndarray:
+        """Authoritative per-task durations, aligned with ``tasks``.
+
+        Estimator backends read this (not ``Task.duration``): a
+        re-annotated graph shares its Task objects with the source graph
+        and carries only a fresh duration array.
+        """
+        return self.anno_arrays()[3]
+
+    def anno_arrays(self) -> Tuple[np.ndarray, ...]:
+        if self._anno_arrays is None:
+            n = len(self.tasks)
+            work = np.empty(n)
+            ridx = np.empty(n, dtype=np.int8)
+            fidx = np.empty(n, dtype=np.int8)
+            durs = np.empty(n)
+            for i, t in enumerate(self.tasks):
+                durs[i] = t.duration
+                if t.anno is None:
+                    work[i], ridx[i], fidx[i] = 0.0, -1, len(FIXED_KEYS) - 1
+                else:
+                    work[i] = t.anno.work
+                    ridx[i] = RATE_KEYS.index(t.anno.rate_key)
+                    fidx[i] = FIXED_KEYS.index(t.anno.fixed_key)
+            self._anno_arrays = (work, ridx, fidx, durs)
+        return self._anno_arrays
 
     @property
     def total_flops(self) -> float:
@@ -65,6 +116,88 @@ def _mxu_efficiency(op: LayerOp, align: int) -> float:
     return max(eff, 0.05)
 
 
+def rate_table(system: SystemDescription,
+               plan: CompilePlan) -> Dict[str, float]:
+    """Full-rate service rates per RateAnno.rate_key for this system."""
+    chip = system.chip
+    return {
+        "matrix": chip.compute.flops_for(plan.dtype, matrix=True),
+        "vector": chip.compute.flops_for(plan.dtype, matrix=False),
+        "mem": chip.memory.bandwidth,
+        "ici": chip.link.bandwidth * (2 if plan.bidirectional_ici else 1),
+        "dcn": system.dcn_bandwidth,
+    }
+
+
+def fixed_table(system: SystemDescription) -> Dict[str, float]:
+    """Per-task fixed costs (launch overhead, transaction latencies)."""
+    chip = system.chip
+    return {
+        "launch": chip.compute.launch_overhead,
+        "mem_lat": chip.memory.latency,
+        "ici_lat": chip.link.latency,
+        "dcn_lat": system.dcn_latency,
+        "none": 0.0,
+    }
+
+
+def resource_specs(system: SystemDescription) -> Dict[str, ResourceSpec]:
+    """Topology -> resource model.
+
+    * compute engines are exclusive FIFO stations;
+    * ``dma`` is a ``num_dma_engines``-server channel (concurrent streams);
+    * each mesh axis gets a bandwidth-shared ICI channel whose width is the
+      links available per torus dimension, so concurrent collectives split
+      bandwidth instead of strictly serializing;
+    * the inter-pod DCN is a single bandwidth-shared channel.
+    """
+    chip = system.chip
+    n_axes = max(1, len(system.torus))
+    links_per_axis = max(1, chip.num_links // n_axes)
+    specs = {
+        "nce": ResourceSpec("nce", servers=1, mode="fifo"),
+        "vpu": ResourceSpec("vpu", servers=1, mode="fifo"),
+        "dma": ResourceSpec("dma", servers=max(1, chip.memory.num_dma_engines),
+                            mode="shared"),
+        "ici_pod": ResourceSpec("ici_pod", servers=1, mode="shared"),
+    }
+    for axis in ("data", "model"):
+        specs[f"ici_{axis}"] = ResourceSpec(
+            f"ici_{axis}", servers=links_per_axis, mode="shared")
+    return specs
+
+
+def _duration(anno: RateAnno, rates: Dict[str, float],
+              fixed: Dict[str, float]) -> float:
+    return anno.work / max(rates[anno.rate_key], 1e-30) + fixed[anno.fixed_key]
+
+
+def reannotate(graph: CompiledGraph,
+               system: SystemDescription) -> CompiledGraph:
+    """What-if fast path: rescale task durations for new physical
+    annotations without re-tiling (the paper's click-of-a-button sweep).
+
+    Valid when tiling-relevant parameters (on-chip capacity, array
+    alignment) are unchanged — :meth:`AVSM.what_if` checks this and falls
+    back to a full recompile otherwise.
+    """
+    rates = rate_table(system, graph.plan)
+    fixed = fixed_table(system)
+    work, ridx, fidx, old_durs = graph.anno_arrays()
+    rate_vec = np.array([rates[k] for k in RATE_KEYS])
+    fixed_vec = np.array([fixed[k] for k in FIXED_KEYS])
+    new_durs = work / np.maximum(rate_vec[ridx], 1e-30) + fixed_vec[fidx]
+    new_durs[ridx < 0] = old_durs[ridx < 0]      # tasks without annotations
+    # Task objects are shared with the source graph (they are treated as
+    # immutable after compilation); only the duration array is new, which
+    # keeps a sweep point at O(n_tasks) numpy work — ~100x cheaper than a
+    # recompile.  Consumers must read ``graph.durations``, as the estimator
+    # backends do, not ``Task.duration``.
+    return CompiledGraph(tasks=graph.tasks, ops=graph.ops, system=system,
+                         plan=graph.plan, resources=resource_specs(system),
+                         _anno_arrays=(work, ridx, fidx, new_durs))
+
+
 def compile_ops(ops: List[LayerOp], system: SystemDescription,
                 plan: Optional[CompilePlan] = None) -> CompiledGraph:
     plan = plan or CompilePlan()
@@ -72,13 +205,17 @@ def compile_ops(ops: List[LayerOp], system: SystemDescription,
     eng = chip.compute
     mem = chip.memory
     vmem_budget = max(1, int(chip.onchip.capacity * plan.vmem_fill))
+    rates = rate_table(system, plan)
+    fixed = fixed_table(system)
 
     tasks: List[Task] = []
     tid = 0
 
-    def new_task(**kw) -> Task:
+    def new_task(anno: Optional[RateAnno] = None, **kw) -> Task:
         nonlocal tid
-        t = Task(tid=tid, **kw)
+        if anno is not None:
+            kw["duration"] = _duration(anno, rates, fixed)
+        t = Task(tid=tid, anno=anno, **kw)
         tasks.append(t)
         tid += 1
         return t
@@ -88,16 +225,14 @@ def compile_ops(ops: List[LayerOp], system: SystemDescription,
     prev_tail: Optional[Task] = None
     barrier_tail: Optional[Task] = None   # for non-overlapped collectives
 
-    for op in ops:
+    for op_id, op in enumerate(ops):
         if op.kind == "collective":
             c = op.coll
             n = c.axis_size
             if n <= 1 or c.payload <= 0:
                 continue
-            link_bw = chip.link.bandwidth * (2 if plan.bidirectional_ici
-                                             else 1)
-            if c.axis == "pod":
-                link_bw = system.dcn_bandwidth
+            rate_key = "dcn" if c.axis == "pod" else "ici"
+            fixed_key = "dcn_lat" if c.axis == "pod" else "ici_lat"
             if c.kind == "all_reduce":
                 steps, step_bytes = 2 * (n - 1), c.payload / n
             elif c.kind in ("all_gather", "reduce_scatter"):
@@ -111,11 +246,11 @@ def compile_ops(ops: List[LayerOp], system: SystemDescription,
             prev = dep
             for s in range(steps):
                 t = new_task(
+                    anno=RateAnno(rate_key, step_bytes, fixed_key),
                     name=f"{op.name}/hop{s}", layer=op.layer,
                     resource=f"ici_{c.axis}",
-                    duration=step_bytes / link_bw + chip.link.latency,
                     deps=(prev.tid,) if prev is not None else (),
-                    kind="collective", nbytes=int(step_bytes))
+                    kind="collective", nbytes=int(step_bytes), op_id=op_id)
                 prev = t
             # collectives producing activations gate the next op
             if not op.name.endswith(("grad_rs", "grad_rs_bwd")):
@@ -124,7 +259,6 @@ def compile_ops(ops: List[LayerOp], system: SystemDescription,
 
         # ---- tiled compute op ----
         eff = _mxu_efficiency(op, eng.align) if op.matrix else 1.0
-        flops_rate = eng.flops_for(plan.dtype, matrix=op.matrix)
         working = max(op.total_bytes, 1)
         n_tiles = max(1, math.ceil(working / vmem_budget))
         n_tiles = max(n_tiles, op.seq_chunks)
@@ -137,8 +271,8 @@ def compile_ops(ops: List[LayerOp], system: SystemDescription,
                    else op.weight_bytes / n_tiles)
         in_share = op.in_bytes / n_tiles
         out_share = op.out_bytes / n_tiles
-        comp_dur = (op.flops / n_tiles) / (flops_rate * eff) \
-            + eng.launch_overhead
+        comp_key = "matrix" if op.matrix else "vector"
+        comp_work = (op.flops / n_tiles) / eff
 
         producer_tail = prev_tail
         compute_tasks: List[Task] = []
@@ -150,33 +284,34 @@ def compile_ops(ops: List[LayerOp], system: SystemDescription,
             dma_deps = list(deps_w)
             if producer_tail is not None:
                 dma_deps.append(producer_tail.tid)
-            dma_res = f"dma{i % mem.num_dma_engines}"
             t_in = None
             if w_share + in_share > 0:
                 t_in = new_task(
+                    anno=RateAnno("mem", w_share + in_share, "mem_lat"),
                     name=f"{op.name}/t{i}/dma_in", layer=op.layer,
-                    resource=dma_res,
-                    duration=(w_share + in_share) / mem.bandwidth
-                    + mem.latency,
+                    resource="dma",
                     deps=tuple(dma_deps), kind="dma",
-                    nbytes=int(w_share + in_share))
+                    nbytes=int(w_share + in_share), op_id=op_id)
             comp_deps = [t_in.tid] if t_in is not None else list(dma_deps)
             if op.seq_chunks > 1 and compute_tasks:
                 comp_deps.append(compute_tasks[-1].tid)   # recurrence chain
             t_c = new_task(
+                anno=RateAnno(comp_key, comp_work, "launch"),
                 name=f"{op.name}/t{i}/compute", layer=op.layer,
                 resource="nce" if op.matrix else "vpu",
-                duration=comp_dur, deps=tuple(comp_deps),
+                deps=tuple(comp_deps),
                 kind="compute", flops=int(op.flops / n_tiles),
-                nbytes=int(w_share + in_share + out_share))
+                nbytes=int(w_share + in_share + out_share), op_id=op_id)
             compute_tasks.append(t_c)
             if out_share > 0:
                 new_task(
+                    anno=RateAnno("mem", out_share, "mem_lat"),
                     name=f"{op.name}/t{i}/dma_out", layer=op.layer,
-                    resource=dma_res,
-                    duration=out_share / mem.bandwidth + mem.latency,
-                    deps=(t_c.tid,), kind="dma", nbytes=int(out_share))
+                    resource="dma",
+                    deps=(t_c.tid,), kind="dma", nbytes=int(out_share),
+                    op_id=op_id)
         prev_tail = compute_tasks[-1]
         barrier_tail = compute_tasks[-1]
 
-    return CompiledGraph(tasks=tasks, ops=list(ops), system=system, plan=plan)
+    return CompiledGraph(tasks=tasks, ops=list(ops), system=system, plan=plan,
+                        resources=resource_specs(system))

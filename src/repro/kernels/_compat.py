@@ -1,0 +1,6 @@
+"""Version shims for the pallas TPU API surface the kernels use."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 spells it TPUCompilerParams.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

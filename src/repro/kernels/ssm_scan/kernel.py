@@ -17,6 +17,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
+
 
 def _ssm_kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
                 y_ref, hout_ref, h_scr):
@@ -95,7 +98,7 @@ def ssm_scan(u, dt, A, B, C, D, h0, *, chunk: int = 64,
             jax.ShapeDtypeStruct((Bz, di, ds), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_di, ds), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(u, dt, A, B, C, D2, h0)

@@ -20,9 +20,10 @@ import time
 import jax
 
 from repro.core.config import LM_SHAPES, OptimizerConfig, get_arch
+from repro.core.estimator.roofline import roofline_terms
 from repro.core.hlo.analysis import analyze_compiled, top_contributors
-from repro.core.hw import (TPU_V5E_HBM_BW, TPU_V5E_ICI_BW,
-                           TPU_V5E_PEAK_FLOPS)
+from repro.core.hw import get_system
+from repro.core.taskgraph.compiler import CompilePlan
 from repro.launch import mesh as mesh_lib
 from repro.launch import steps as steps_lib
 from repro.models import api
@@ -92,13 +93,21 @@ def run_cell(arch_id: str, shape_name: str, *, remat: str = "full",
 
     rep = analyze_compiled(compiled)
     chips = mesh.devices.size
-    t_c = rep["flops"] / TPU_V5E_PEAK_FLOPS
-    t_m = rep["hbm_bytes"] / TPU_V5E_HBM_BW
+    # roofline terms via the estimator stack's rate tables, so the virtual
+    # system description (not hard-wired constants) defines the roofs.
+    # HLO collective bytes are per-device payloads, not ring wire traffic:
+    # use the single-direction link rate (bidirectional_ici=False).
+    system = get_system("tpu_v5e_pod")
+    plan = CompilePlan(bidirectional_ici=False)
     # TPU-adjusted: f32 collective payloads are CPU dot-legalization
     # artifacts for bf16 models (bf16 on the real target)
-    t_i = rep.get("collective_bytes_tpu_adjusted",
-                  rep["collective_bytes"]) / TPU_V5E_ICI_BW
-    t_i_raw = rep["collective_bytes"] / TPU_V5E_ICI_BW
+    t_c, t_m, t_i = roofline_terms(
+        rep["flops"], rep["hbm_bytes"],
+        rep.get("collective_bytes_tpu_adjusted", rep["collective_bytes"]),
+        system, plan)
+    _, _, t_i_raw = roofline_terms(
+        rep["flops"], rep["hbm_bytes"], rep["collective_bytes"], system, plan)
+    peak_flops = system.chip.compute.flops_for(plan.dtype, matrix=True)
     mf = api.model_flops(cfg, shape)
     out = {
         "tag": tag, "arch": arch_id, "shape": shape_name,
@@ -112,7 +121,7 @@ def run_cell(arch_id: str, shape_name: str, *, remat: str = "full",
                         ("collective", t_i), key=lambda kv: kv[1])[0],
         "useful_ratio": mf / chips / max(rep["flops"], 1),
         "peak_bytes_gb": rep.get("peak_bytes", 0) / 1e9,
-        "roofline_fraction": (mf / (chips * TPU_V5E_PEAK_FLOPS))
+        "roofline_fraction": (mf / (chips * peak_flops))
         / max(t_c, t_m, t_i),
         "compile_s": wall,
         "collective_breakdown": rep["collective_breakdown"],

@@ -45,8 +45,20 @@ def test_system_description_json_roundtrip():
     sys = tpu_v5e_pod()
     text = sys.to_json()
     back = SystemDescription.from_json(text)
+    assert back == sys                       # full nested equality
     assert back.chip.compute.matrix_flops == sys.chip.compute.matrix_flops
     assert back.torus == sys.torus
+
+
+def test_system_description_loader_robustness():
+    # missing fields fall back to defaults; unknown keys are ignored
+    s = SystemDescription.from_json('{"name": "tiny", "torus": [2, 2], '
+                                    '"future_field": 1}')
+    assert s.name == "tiny" and s.num_chips == 4
+    # type mismatches are rejected, not silently accepted
+    for bad in ('[]', '{"chip": "not-a-dict"}', '{"chip": {"compute": 5}}'):
+        with pytest.raises(TypeError, match="expected a dict"):
+            SystemDescription.from_json(bad)
 
 
 def test_what_if_frequency_sweep_monotone():

@@ -1,0 +1,218 @@
+"""Estimator-backend architecture: registry, the three fidelity levels on
+shared CompiledGraphs, roofline-vs-DES agreement, the what-if fast path
+(parity + speed), and the DesignSpaceExplorer."""
+import time
+
+import pytest
+
+from repro.core.avsm.model import AVSM, build_avsm
+from repro.core.config import LM_SHAPES, get_arch
+from repro.core.dse import DesignSpaceExplorer
+from repro.core.estimator import (EstimateReport, available_backends,
+                                  get_backend)
+from repro.core.hw import tpu_v5e_pod, virtex7_nce_system
+from repro.core.taskgraph.builders import ShardPlan, convnet_ops, lm_step_ops
+from repro.core.taskgraph.compiler import CompilePlan, compile_ops
+from repro.core.taskgraph.ops import matmul_op
+
+BACKENDS = ("roofline", "analytic", "des")
+
+
+@pytest.fixture(scope="module")
+def vgg_graph():
+    cfg = get_arch("dilated-vgg").model
+    return compile_ops(convnet_ops(cfg), virtex7_nce_system())
+
+
+@pytest.fixture(scope="module")
+def lm_graph():
+    spec = get_arch("qwen1.5-0.5b")
+    ops = lm_step_ops(spec.model, LM_SHAPES["train_4k"], ShardPlan())
+    return compile_ops(ops, tpu_v5e_pod())
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_backends_cheapest_first():
+    assert available_backends() == ["roofline", "analytic", "des"]
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(KeyError, match="available"):
+        get_backend("spice")
+
+
+# ---------------------------------------------------------------------------
+# all three backends consume the same CompiledGraph (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backends_run_on_vgg_graph(vgg_graph, backend):
+    rep = get_backend(backend).estimate(vgg_graph)
+    assert isinstance(rep, EstimateReport)
+    assert rep.backend == backend
+    assert rep.step_time > 0
+    assert rep.layers and all(l.time >= 0 for l in rep.layers)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backends_run_on_lm_graph(lm_graph, backend):
+    rep = get_backend(backend).estimate(lm_graph)
+    assert rep.step_time > 0
+    assert rep.n_tasks == len(lm_graph.tasks)
+
+
+def test_fidelity_ordering_roofline_is_lower_bound(vgg_graph, lm_graph):
+    """Roofline ignores overheads/padding: it bounds the DES from below."""
+    for graph in (vgg_graph, lm_graph):
+        roof = get_backend("roofline").estimate(graph).step_time
+        des = get_backend("des").estimate(graph).step_time
+        assert roof <= des * 1.001
+
+
+def test_roofline_vs_des_agreement_compute_bound():
+    """On an aligned, compute-bound graph the DES sits near the roofline
+    (launch overheads and pipeline fill are the only extras)."""
+    sys = tpu_v5e_pod()
+    ops = [matmul_op(f"m{i}", f"L{i}", 4096, 8192, 4096) for i in range(4)]
+    graph = compile_ops(ops, sys)
+    roof = get_backend("roofline").estimate(graph)
+    des = get_backend("des").estimate(graph)
+    assert roof.bound == "compute"
+    assert des.step_time == pytest.approx(roof.step_time, rel=0.15)
+    assert des.step_time >= roof.step_time
+
+
+def test_analytic_between_roofline_and_des_cost(vgg_graph):
+    """Analytic stacking includes overheads, so it is >= roofline."""
+    roof = get_backend("roofline").estimate(vgg_graph).step_time
+    ana = get_backend("analytic").estimate(vgg_graph).step_time
+    assert ana >= roof * 0.999
+
+
+def test_report_is_avsm_view(vgg_graph):
+    from repro.core.avsm.model import AVSMReport
+
+    rep = get_backend("des").estimate(vgg_graph)
+    assert isinstance(rep, AVSMReport)          # AVSMReport is the view
+    assert rep.sim_seconds == rep.estimate_seconds
+    assert "AVSM[" in rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# what-if fast path (acceptance criterion: <=1% of a full recompile's DES
+# step time, >=10x faster per sweep point)
+# ---------------------------------------------------------------------------
+
+
+def test_what_if_fast_path_matches_full_recompile(lm_graph):
+    avsm = AVSM(system=lm_graph.system, graph=lm_graph)
+    for knob in ({"link_bandwidth": 100e9}, {"mem_bandwidth": 1.6e12},
+                 {"matrix_flops": 394e12}, {"num_dma_engines": 4}):
+        fast = avsm.what_if(**knob)
+        full = build_avsm(lm_graph.ops, fast.system, lm_graph.plan)
+        t_fast = fast.simulate().step_time
+        t_full = full.simulate().step_time
+        assert t_fast == pytest.approx(t_full, rel=0.01), knob
+
+
+def test_what_if_fast_path_is_10x_faster(lm_graph):
+    avsm = AVSM(system=lm_graph.system, graph=lm_graph)
+    lm_graph.anno_arrays()                      # steady-state sweep loop
+    t0 = time.perf_counter()
+    fast = avsm.what_if(link_bandwidth=100e9)
+    t_fast = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    build_avsm(lm_graph.ops, fast.system, lm_graph.plan)
+    t_full = time.perf_counter() - t0
+    assert t_full >= 10 * t_fast, (t_full, t_fast)
+
+
+def test_what_if_shares_tasks_but_not_durations(lm_graph):
+    avsm = AVSM(system=lm_graph.system, graph=lm_graph)
+    fast = avsm.what_if(matrix_flops=lm_graph.system.chip.compute.
+                        matrix_flops * 2)
+    assert fast.graph.tasks is lm_graph.tasks   # structure shared
+    assert (fast.graph.durations <= lm_graph.durations + 1e-18).all()
+    assert (fast.graph.durations < lm_graph.durations).any()
+
+
+def test_what_if_structural_key_recompiles():
+    cfg = get_arch("dilated-vgg").model
+    avsm = build_avsm(convnet_ops(cfg), virtex7_nce_system())
+    shrunk = avsm.what_if(vmem_capacity=avsm.system.chip.onchip.capacity // 8)
+    assert len(shrunk.graph.tasks) > len(avsm.graph.tasks)   # re-tiled
+
+
+def test_what_if_unknown_key_rejected():
+    cfg = get_arch("dilated-vgg").model
+    avsm = build_avsm(convnet_ops(cfg), virtex7_nce_system())
+    with pytest.raises(KeyError, match="unknown what-if"):
+        avsm.what_if(warp_drive=9)
+
+
+# ---------------------------------------------------------------------------
+# DesignSpaceExplorer
+# ---------------------------------------------------------------------------
+
+
+def _dse():
+    cfg = get_arch("dilated-vgg").model
+    return DesignSpaceExplorer({"vgg": convnet_ops(cfg)})
+
+
+def _sys_variants():
+    import dataclasses
+
+    base = virtex7_nce_system()
+    double_flops = dataclasses.replace(base, chip=dataclasses.replace(
+        base.chip, compute=dataclasses.replace(
+            base.chip.compute,
+            matrix_flops=base.chip.compute.matrix_flops * 2)))
+    double_bw = dataclasses.replace(base, chip=dataclasses.replace(
+        base.chip, memory=dataclasses.replace(
+            base.chip.memory, bandwidth=base.chip.memory.bandwidth * 2)))
+    return {"base": base, "2x_flops": double_flops, "2x_bw": double_bw}
+
+
+def test_dse_sweep_caches_compiled_graphs():
+    dse = _dse()
+    results = dse.sweep(_sys_variants())
+    assert len(results) == 3
+    # all three systems share one tiling: one compile, two re-annotations
+    assert dse.stats["compiles"] == 1
+    assert dse.stats["reannotations"] == 2
+    assert results[0].step_time <= results[-1].step_time
+    # the compute-bound VGG should rank the doubled-FLOPs chip first
+    assert results[0].system == "2x_flops"
+
+
+def test_dse_escalation_confirms_with_des():
+    dse = _dse()
+    confirmed = dse.explore(_sys_variants(), keep=2)
+    assert len(confirmed) == 2
+    for r in confirmed:
+        assert r.report.backend == "roofline"
+        assert r.confirmed is not None and r.confirmed.backend == "des"
+        assert r.confirmed.step_time >= r.report.step_time * 0.999
+
+
+def test_dse_plan_axis():
+    dse = _dse()
+    plans = [CompilePlan(), CompilePlan(weights_resident=True)]
+    results = dse.sweep({"base": virtex7_nce_system()}, plans=plans)
+    assert len(results) == 2
+    assert dse.stats["compiles"] == 2           # plans change the tiling
+
+
+def test_dse_what_if_sweep_monotone():
+    dse = _dse()
+    points = dse.what_if_sweep(
+        "vgg", virtex7_nce_system(), "matrix_flops",
+        [0.5e12, 1.0e12, 2.0e12, 4.0e12], backend="des")
+    times = [rep.step_time for _, rep in points]
+    assert all(a >= b - 1e-9 for a, b in zip(times, times[1:]))

@@ -4,13 +4,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.decode_attention.ops import (decode_attention,
                                                 decode_attention_ref)
 from repro.kernels.flash_attention.ops import attention_ref, flash_attention
 from repro.kernels.rwkv6_scan.ops import rwkv6_scan, rwkv6_scan_ref
 from repro.kernels.ssm_scan.ops import ssm_scan, ssm_scan_ref
+
+# JAX-heavy: excluded from the tier-1 default run (pytest -m "not slow"); run with `-m slow` or `-m ""`.
+pytestmark = pytest.mark.slow
 
 ATOL = {jnp.float32: 3e-5, jnp.bfloat16: 3e-2}
 

@@ -12,6 +12,9 @@ from conftest import smoke_f32
 from repro.core.config import get_arch, list_archs
 from repro.models import api
 
+# JAX-heavy: excluded from the tier-1 default run (pytest -m "not slow"); run with `-m slow` or `-m ""`.
+pytestmark = pytest.mark.slow
+
 LM_ARCHS = [a for a in list_archs() if a != "dilated-vgg"]
 
 

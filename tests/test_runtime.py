@@ -1,7 +1,7 @@
 """Fault-tolerance runtime: failure detection, straggler policy, elastic
 mesh planning."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.runtime.supervisor import (MitigationAction, Supervisor,
                                       SupervisorConfig, mitigate_stragglers,

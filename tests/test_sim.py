@@ -4,7 +4,7 @@ import json
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.sim.engine import Simulator, Task
 from repro.core.sim.trace import ascii_gantt, chrome_trace

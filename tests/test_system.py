@@ -8,6 +8,9 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# JAX-heavy: excluded from the tier-1 default run (pytest -m "not slow"); run with `-m slow` or `-m ""`.
+pytestmark = pytest.mark.slow
+
 
 def test_train_loop_learns(tmp_path):
     from repro.launch.train import main

@@ -3,7 +3,7 @@ respect, collective hop math, what-if monotonicity."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.config import LM_SHAPES, get_arch
 from repro.core.hw import tpu_v5e_pod, virtex7_nce_system
