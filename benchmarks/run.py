@@ -14,7 +14,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main() -> None:
     from benchmarks import (bench_accuracy, bench_dse, bench_gantt,
                             bench_roofline_cells, bench_roofline_vgg,
-                            bench_runtime_breakdown)
+                            bench_runtime_breakdown, bench_serve_sim)
 
     suites = [
         ("runtime_breakdown", bench_runtime_breakdown),
@@ -23,6 +23,7 @@ def main() -> None:
         ("roofline_vgg", bench_roofline_vgg),
         ("roofline_cells", bench_roofline_cells),
         ("dse", bench_dse),
+        ("serve_sim", bench_serve_sim),
     ]
     rows = []
     for name, mod in suites:

@@ -1,0 +1,149 @@
+"""Serving simulation & SLO-aware capacity planning on virtual hardware.
+
+The paper estimates one inference step on a virtual model before any
+prototype exists; this example extends that to the ROADMAP's serving
+question: *how does a deployment of this chip behave under production
+traffic, and how many replicas does the SLO require?* — still entirely on
+virtual models.
+
+Three stages:
+
+  1. derive per-request prefill/decode cost models from compiled task
+     graphs (``ServingCostModelBuilder``; chip variants re-annotate, they
+     do not recompile);
+  2. sweep traffic patterns x batching schedulers x systems through
+     ``DesignSpaceExplorer.sweep_serving`` and print p99 TTFT/TPOT per
+     scenario;
+  3. bisect replica count per system for a stated SLO
+     (``CapacityPlanner``) and report the smallest feasible deployment.
+
+Run:  PYTHONPATH=src python examples/serve_capacity_planning.py [--smoke]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.avsm.model import annotate_system
+from repro.core.config import LM_SHAPES, get_arch
+from repro.core.dse import DesignSpaceExplorer
+from repro.core.hw import SystemDescription, tpu_v5e_chip
+from repro.core.sim.trace import serving_chrome_trace
+from repro.core.taskgraph.builders import ShardPlan, lm_step_ops
+from repro.serve_sim import (SLO, BucketedPrefillScheduler, CapacityPlanner,
+                             ClosedLoopWorkload, ContinuousBatchingScheduler,
+                             LengthDist, ServingCostModelBuilder,
+                             StaticBatchScheduler, bursty_workload,
+                             poisson_workload, simulate_serving)
+
+ARCH = "qwen1.5-0.5b"
+SLOTS = 8
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="small request counts (CI)")
+    args = p.parse_args()
+    n_req = 300 if args.smoke else 2000
+
+    cfg = get_arch(ARCH).model
+    base = SystemDescription(name="v5e_chip", chip=tpu_v5e_chip(), torus=())
+    systems = {
+        "v5e": base,
+        "v5e_2x_hbm": annotate_system(base, mem_bandwidth=1638e9),
+    }
+
+    print(f"--- per-request cost models ({ARCH}, analytic backend) ---")
+    builder = ServingCostModelBuilder(cfg, shard=ShardPlan(data=1, model=1))
+    for name, system in systems.items():
+        c = builder.model_for(system)
+        print(f"  {name:12s} prefill {c.prefill_fixed * 1e3:.2f}ms "
+              f"+ {c.prefill_per_token * 1e6:.2f}us/tok   "
+              f"decode {c.decode_fixed * 1e3:.2f}ms "
+              f"+ {c.decode_per_token * 1e6:.2f}us/slot "
+              f"+ {c.decode_per_ctx_token * 1e9:.2f}ns/ctx-tok")
+    print(f"  ({builder.stats['compiles']} graph compiles, "
+          f"{builder.stats['reannotations']} re-annotations)")
+
+    prompt = LengthDist(mean=512, cv=0.6)
+    output = LengthDist(mean=96, cv=0.5)
+    traffics = {
+        "poisson": lambda: poisson_workload(
+            40.0, n_req, prompt=prompt, output=output, seed=0),
+        "bursty": lambda: bursty_workload(
+            15.0, 90.0, n_req, mean_dwell=5.0, prompt=prompt, output=output,
+            seed=0),
+        "closed_loop": lambda: ClosedLoopWorkload(
+            n_users=24, requests_per_user=max(2, n_req // 24),
+            think_time=0.4, prompt=prompt, output=output, seed=0),
+    }
+    schedulers = {
+        "continuous": ContinuousBatchingScheduler,
+        "bucketed": lambda: BucketedPrefillScheduler(bucket=128),
+        "static": lambda: StaticBatchScheduler(batch_size=SLOTS,
+                                               max_wait=0.25),
+    }
+
+    print(f"\n--- serving sweep: {len(systems)} systems x {len(traffics)} "
+          f"traffic patterns x {len(schedulers)} schedulers "
+          f"({n_req} requests each, 2 replicas x {SLOTS} slots) ---")
+    dse = DesignSpaceExplorer({
+        "decode": lm_step_ops(cfg, LM_SHAPES["decode_32k"],
+                              ShardPlan(data=1, model=1))})
+    t0 = time.perf_counter()
+    results = dse.sweep_serving(systems, traffics, schedulers,
+                                cost_builder=builder, replicas=2,
+                                slots=SLOTS)
+    wall = time.perf_counter() - t0
+    print(f"  {'system':12s} {'traffic':12s} {'scheduler':11s} "
+          f"{'p99 TTFT':>10s} {'p99 TPOT':>10s} {'req/s':>7s} {'util':>6s}")
+    for r in results:
+        rep = r.report
+        print(f"  {r.system:12s} {r.traffic:12s} {r.scheduler:11s} "
+              f"{rep.ttft.p99 * 1e3:8.0f}ms {rep.tpot.p99 * 1e3:8.2f}ms "
+              f"{rep.throughput_rps:7.1f} {rep.replica_util:6.1%}")
+    print(f"  ({len(results)} scenarios in {wall:.1f}s)")
+
+    slo = SLO(ttft_p99=0.75, tpot_p99=0.012)
+    print(f"\n--- capacity planning: smallest replicas meeting {slo} "
+          f"(poisson traffic, continuous batching) ---")
+    for name, system in systems.items():
+        planner = CapacityPlanner(builder.model_for(system),
+                                  ContinuousBatchingScheduler,
+                                  traffics["poisson"], slo)
+        plan = planner.plan(axis="replicas", cap=32, slots=SLOTS)
+        rep = plan.report
+        status = "meets SLO" if plan.feasible else "infeasible at cap"
+        print(f"  {name:12s} -> {plan.value} replicas ({status}; "
+              f"p99 TTFT {rep.ttft.p99 * 1e3:.0f}ms, "
+              f"p99 TPOT {rep.tpot.p99 * 1e3:.2f}ms, "
+              f"{len(plan.probes)} probes)")
+
+    # export one serving timeline for chrome://tracing / Perfetto
+    best = results[0]
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "runs", "gantt")
+    os.makedirs(out_dir, exist_ok=True)
+    out = os.path.join(out_dir, "serve_sim.trace.json")
+    serving_chrome_trace(best.report, out)
+    print(f"\nwrote serving timeline ({best.system}/{best.traffic}/"
+          f"{best.scheduler}) to {os.path.relpath(out)}")
+
+    if not args.smoke:
+        # scale check: >= 10k requests through the simulator, wall < 10 s
+        cost = builder.model_for(base)
+        t0 = time.perf_counter()
+        rep = simulate_serving(
+            cost, ContinuousBatchingScheduler,
+            poisson_workload(120.0, 10_000, prompt=prompt, output=output,
+                             seed=1),
+            replicas=4, slots=SLOTS)
+        wall = time.perf_counter() - t0
+        print(f"\n10k-request scale check: {rep.n_requests} requests "
+              f"({rep.output_tokens} tokens) simulated in {wall:.2f}s wall")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,12 +23,14 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Tuple)
 
 from repro.core.estimator import EstimateReport, get_backend
 from repro.core.hw import SystemDescription
 from repro.core.taskgraph.compiler import (CompiledGraph, CompilePlan,
-                                           compile_ops, reannotate)
+                                           compile_ops, reannotate,
+                                           structural_key)
 from repro.core.taskgraph.ops import LayerOp
 
 
@@ -47,11 +49,30 @@ class SweepResult:
         return (self.confirmed or self.report).step_time
 
 
-def _structural_key(system: SystemDescription) -> Tuple:
-    """Chip parameters that change the *tiling* (anything else is handled
-    by re-annotation)."""
-    chip = system.chip
-    return (chip.onchip.capacity, chip.compute.align)
+@dataclass
+class ServingSweepResult:
+    """One evaluated (traffic, scheduler, system) serving scenario.
+
+    ``report`` is a ``repro.serve_sim.simulator.ServingReport`` (typed
+    loosely: core.dse stays importable without the serving subsystem)."""
+
+    traffic: str
+    scheduler: str
+    system: str
+    report: object
+
+    @property
+    def ttft_p99(self) -> float:
+        return self.report.ttft.p99
+
+    @property
+    def tpot_p99(self) -> float:
+        return self.report.tpot.p99
+
+
+# Chip parameters that change the *tiling* (anything else is handled by
+# re-annotation) — shared with the serving cost-model builder.
+_structural_key = structural_key
 
 
 class DesignSpaceExplorer:
@@ -129,6 +150,37 @@ class DesignSpaceExplorer:
             survivors.append(r)
         survivors.sort(key=lambda r: r.step_time)
         return survivors
+
+    # ---- serving scenarios (systems x traffic x schedulers) -------------
+
+    def sweep_serving(self, systems: Mapping[str, SystemDescription],
+                      traffics: Mapping[str, Callable[[], object]],
+                      schedulers: Mapping[str, Callable[[], object]],
+                      cost_builder, replicas: int = 1,
+                      slots: int = 8) -> List[ServingSweepResult]:
+        """Traffic-driven serving axis: every (system, traffic, scheduler)
+        scenario is simulated with ``repro.serve_sim`` on a cost model the
+        ``cost_builder`` derives from this explorer's compiled-graph fast
+        path (re-annotation per system, no recompiles for physical
+        variants).  ``traffics``/``schedulers`` map names to zero-arg
+        factories returning fresh seeded instances per run.  Results are
+        sorted by p99 TTFT (best first).
+        """
+        from repro.serve_sim.simulator import simulate_serving
+
+        out: List[ServingSweepResult] = []
+        for sname, system in systems.items():
+            cost = cost_builder.model_for(system)
+            for tname, make_traffic in traffics.items():
+                for kname, make_sched in schedulers.items():
+                    self.stats["estimates"] += 1
+                    rep = simulate_serving(cost, make_sched, make_traffic(),
+                                           replicas=replicas, slots=slots)
+                    out.append(ServingSweepResult(
+                        traffic=tname, scheduler=kname, system=sname,
+                        report=rep))
+        out.sort(key=lambda r: r.ttft_p99)
+        return out
 
     # ---- what-if sweeps over one annotated parameter --------------------
 

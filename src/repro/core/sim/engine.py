@@ -21,12 +21,25 @@ Task durations are pre-annotated at *full rate* by the virtual hardware
 models (repro.core.taskgraph.compiler); contention stretches them.
 Unknown resources default to a single-server FIFO, so plain task lists
 behave exactly as the original exclusive-resource engine.
+
+Beyond static graphs, the engine supports **dynamic event injection** — the
+foundation of the traffic-driven serving simulator (``repro.serve_sim``):
+
+  * :meth:`Simulator.at` schedules a timed callback (e.g. a request
+    arrival) that runs inside the event loop and may inject new work;
+  * :meth:`Simulator.inject` adds a task *while the simulation runs*; its
+    dependencies may already be satisfied or still in flight;
+  * ``on_complete`` observers fire as tasks finish, letting a scheduler
+    react causally (free a slot, admit the next request, issue the next
+    decode step).
+
+Static task graphs are simply the special case with no callbacks.
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.taskgraph.anno import RateAnno
 
@@ -138,14 +151,22 @@ class _SharedChannel:
 
 
 class Simulator:
-    """Event-driven scheduler over FIFO and bandwidth-shared resources."""
+    """Event-driven scheduler over FIFO and bandwidth-shared resources.
 
-    def __init__(self, tasks: List[Task],
+    The event loop is instance-level state, so timed callbacks
+    (:meth:`at`) and completion observers (``on_complete``) can inject
+    new tasks (:meth:`inject`) while the simulation is running — dynamic
+    arrivals preempting a static task graph.
+    """
+
+    def __init__(self, tasks: Iterable[Task] = (),
                  resources: Optional[Dict[str, ResourceSpec]] = None,
-                 durations=None):
+                 durations=None,
+                 on_complete: Optional[Callable[[Task, float], None]] = None):
         """``durations`` optionally overrides each task's annotated duration
         (aligned with ``tasks``); the what-if fast path re-annotates a graph
         by swapping this array, leaving the Task objects untouched."""
+        tasks = list(tasks)
         self.tasks = {t.tid: t for t in tasks}
         if len(self.tasks) != len(tasks):
             raise ValueError("duplicate task ids")
@@ -157,7 +178,28 @@ class Simulator:
             self.durations = {t.tid: float(d)
                               for t, d in zip(tasks, durations)}
         self.resources = dict(resources or {})
+        self.on_complete = on_complete
         self._validate(tasks)
+        self._next_tid = max(self.tasks, default=-1) + 1
+        # ---- event-loop state (live during run()) ----
+        self._now = 0.0
+        self._seq = 0
+        self._running = False
+        self._completed_ids: set = set()
+        self._n_deps: Dict[int, int] = {}
+        self._dependents: Dict[int, List[int]] = {}
+        # per-FIFO-resource ready queue: (ready_time, tid)
+        self._queues: Dict[str, List[Tuple[float, int]]] = {}
+        self._active: Dict[str, int] = {}     # fifo resource -> active count
+        self._channels: Dict[str, _SharedChannel] = {}
+        self._res_busy: Dict[str, float] = {}
+        self._records: List[TaskRecord] = []
+        # event heap: (time, seq, kind, payload)
+        #   kind 'done'  — a fifo task finished (payload = tid)
+        #   kind 'chan'  — a shared channel may have completions
+        #                  (payload = (resource, epoch))
+        #   kind 'call'  — a timed callback (payload = zero-arg callable)
+        self._events: List[Tuple[float, int, str, object]] = []
 
     def _validate(self, tasks: List[Task]) -> None:
         ids = set(self.tasks)
@@ -169,112 +211,156 @@ class Simulator:
     def _spec(self, resource: str) -> ResourceSpec:
         return self.resources.get(resource) or ResourceSpec(name=resource)
 
+    # ------------------------------------------------------------------
+    # Dynamic injection API
+    # ------------------------------------------------------------------
+
+    @property
+    def now(self) -> float:
+        """Current simulation time."""
+        return self._now
+
+    def at(self, t: float, fn: Callable[[], None]) -> None:
+        """Schedule ``fn`` to run inside the event loop at time ``t``.
+
+        Callbacks at equal times run in scheduling order.  ``fn`` may call
+        :meth:`inject` / :meth:`at` — this is how open-loop arrivals and
+        scheduler timeouts enter a running simulation.
+        """
+        if t < self._now - 1e-18:
+            raise ValueError(f"cannot schedule at {t} < now ({self._now})")
+        self._push_event(max(t, self._now), "call", fn)
+
+    def inject(self, task: Task) -> Task:
+        """Add ``task`` to a (possibly running) simulation.
+
+        Dependencies may reference completed or in-flight tasks.  The task
+        becomes ready once its outstanding dependencies finish (immediately
+        if there are none).
+        """
+        if task.tid in self.tasks:
+            raise ValueError(f"duplicate task id {task.tid}")
+        for d in task.deps:
+            if d not in self.tasks:
+                raise ValueError(f"task {task.tid} depends on unknown {d}")
+        self.tasks[task.tid] = task
+        self.durations[task.tid] = task.duration
+        self._next_tid = max(self._next_tid, task.tid + 1)
+        if not self._running:
+            return task
+        outstanding = [d for d in task.deps if d not in self._completed_ids]
+        self._n_deps[task.tid] = len(outstanding)
+        self._dependents.setdefault(task.tid, [])
+        for d in outstanding:
+            self._dependents.setdefault(d, []).append(task.tid)
+        if not outstanding:
+            self._enqueue(task.tid, self._now)
+        return task
+
+    def next_task_id(self) -> int:
+        """A fresh task id (monotone counter above every existing id)."""
+        return self._next_tid
+
+    # ------------------------------------------------------------------
+    # Event loop internals
+    # ------------------------------------------------------------------
+
+    def _push_event(self, t_ev: float, kind: str, payload) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (t_ev, self._seq, kind, payload))
+
+    def _reschedule_channel(self, res: str) -> None:
+        ch = self._channels[res]
+        ch.epoch += 1
+        t_next = ch.next_completion(self._now)
+        if t_next is not None:
+            self._push_event(t_next, "chan", (res, ch.epoch))
+
+    def _enqueue(self, tid: int, t_ready: float) -> None:
+        t = self.tasks[tid]
+        spec = self._spec(t.resource)
+        if spec.mode == "shared":
+            ch = self._channels.get(t.resource)
+            if ch is None:
+                ch = self._channels[t.resource] = _SharedChannel(spec.servers)
+            ch.admit(tid, self.durations[tid], t_ready)
+            self._reschedule_channel(t.resource)
+        else:
+            q = self._queues.setdefault(t.resource, [])
+            heapq.heappush(q, (t_ready, tid))
+            self._drain(t.resource)
+
+    def _drain(self, resource: str) -> None:
+        spec = self._spec(resource)
+        q = self._queues.get(resource)
+        while q and self._active.get(resource, 0) < spec.servers:
+            t_ready, tid = heapq.heappop(q)
+            t = self.tasks[tid]
+            dur = self.durations[tid]
+            start = max(t_ready, self._now)
+            end = start + dur
+            self._active[resource] = self._active.get(resource, 0) + 1
+            self._res_busy[resource] = self._res_busy.get(resource, 0.0) + dur
+            self._records.append(TaskRecord(t, start, end))
+            self._push_event(end, "done", tid)
+
+    def _complete(self, tid: int) -> None:
+        self._completed_ids.add(tid)
+        for dep_tid in self._dependents.get(tid, ()):
+            self._n_deps[dep_tid] -= 1
+            if self._n_deps[dep_tid] == 0:
+                self._enqueue(dep_tid, self._now)
+        if self.on_complete is not None:
+            self.on_complete(self.tasks[tid], self._now)
+
     def run(self) -> SimResult:
-        tasks = self.tasks
-        n_deps = {tid: len(t.deps) for tid, t in tasks.items()}
-        dependents: Dict[int, List[int]] = {tid: [] for tid in tasks}
-        for t in tasks.values():
+        if self._running or self._completed_ids:
+            raise RuntimeError("Simulator.run() may only be called once")
+        self._running = True
+        self._n_deps = {tid: len(t.deps) for tid, t in self.tasks.items()}
+        self._dependents = {tid: [] for tid in self.tasks}
+        for t in self.tasks.values():
             for d in t.deps:
-                dependents[d].append(t.tid)
+                self._dependents[d].append(t.tid)
 
-        # per-FIFO-resource ready queue: (ready_time, tid)
-        queues: Dict[str, List[Tuple[float, int]]] = {}
-        running: Dict[str, int] = {}          # fifo resource -> active count
-        channels: Dict[str, _SharedChannel] = {}
-        res_busy: Dict[str, float] = {}
-        records: List[TaskRecord] = []
-        # event heap: (time, seq, kind, payload)
-        #   kind 'done'  — a fifo task finished (payload = tid)
-        #   kind 'chan'  — a shared channel may have completions
-        #                  (payload = (resource, epoch))
-        events: List[Tuple[float, int, str, object]] = []
-        seq = 0
-        completed = 0
-        now = 0.0
+        for tid, n in list(self._n_deps.items()):
+            if n == 0:
+                self._enqueue(tid, 0.0)
 
-        def push_event(t_ev: float, kind: str, payload) -> None:
-            nonlocal seq
-            seq += 1
-            heapq.heappush(events, (t_ev, seq, kind, payload))
-
-        def reschedule_channel(res: str) -> None:
-            ch = channels[res]
-            ch.epoch += 1
-            t_next = ch.next_completion(now)
-            if t_next is not None:
-                push_event(t_next, "chan", (res, ch.epoch))
-
-        durations = self.durations
-
-        def enqueue(tid: int, t_ready: float) -> None:
-            t = tasks[tid]
-            spec = self._spec(t.resource)
-            if spec.mode == "shared":
-                ch = channels.get(t.resource)
-                if ch is None:
-                    ch = channels[t.resource] = _SharedChannel(spec.servers)
-                ch.admit(tid, durations[tid], t_ready)
-                reschedule_channel(t.resource)
-            else:
-                q = queues.setdefault(t.resource, [])
-                heapq.heappush(q, (t_ready, tid))
-                drain(t.resource)
-
-        def drain(resource: str) -> None:
-            spec = self._spec(resource)
-            q = queues.get(resource)
-            while q and running.get(resource, 0) < spec.servers:
-                t_ready, tid = heapq.heappop(q)
-                t = tasks[tid]
-                dur = durations[tid]
-                start = max(t_ready, now)
-                end = start + dur
-                running[resource] = running.get(resource, 0) + 1
-                res_busy[resource] = res_busy.get(resource, 0.0) + dur
-                records.append(TaskRecord(t, start, end))
-                push_event(end, "done", tid)
-
-        def complete(tid: int) -> None:
-            nonlocal completed
-            completed += 1
-            for dep_tid in dependents[tid]:
-                n_deps[dep_tid] -= 1
-                if n_deps[dep_tid] == 0:
-                    enqueue(dep_tid, now)
-
-        for tid in tasks:
-            if n_deps[tid] == 0:
-                enqueue(tid, 0.0)
-
-        while events:
-            now, _, kind, payload = heapq.heappop(events)
+        while self._events:
+            self._now, _, kind, payload = heapq.heappop(self._events)
             if kind == "done":
                 tid = payload
-                t = tasks[tid]
-                running[t.resource] -= 1
-                complete(tid)
-                drain(t.resource)
+                t = self.tasks[tid]
+                self._active[t.resource] -= 1
+                self._complete(tid)
+                self._drain(t.resource)
+            elif kind == "call":
+                payload()
             else:  # 'chan'
                 res, epoch = payload
-                ch = channels[res]
+                ch = self._channels[res]
                 if epoch != ch.epoch:
                     continue                      # superseded by a re-plan
-                for tid in ch.pop_done(now):
-                    t = tasks[tid]
-                    res_busy[res] = res_busy.get(res, 0.0) + durations[tid]
-                    records.append(TaskRecord(t, ch.start.pop(tid), now))
-                    complete(tid)
-                reschedule_channel(res)
+                for tid in ch.pop_done(self._now):
+                    t = self.tasks[tid]
+                    self._res_busy[res] = (self._res_busy.get(res, 0.0)
+                                           + self.durations[tid])
+                    self._records.append(
+                        TaskRecord(t, ch.start.pop(tid), self._now))
+                    self._complete(tid)
+                self._reschedule_channel(res)
 
-        if completed != len(tasks):
-            stuck = [tid for tid, n in n_deps.items() if n > 0]
+        if len(self._completed_ids) != len(self.tasks):
+            stuck = [tid for tid, n in self._n_deps.items() if n > 0]
             raise RuntimeError(
                 f"deadlock/cycle: {len(stuck)} tasks never ran, e.g. "
-                f"{[tasks[t].name for t in stuck[:5]]}")
+                f"{[self.tasks[t].name for t in stuck[:5]]}")
+        self._running = False
 
-        makespan = max((r.end for r in records), default=0.0)
+        makespan = max((r.end for r in self._records), default=0.0)
         layer_time: Dict[str, Tuple[float, float]] = {}
-        for r in records:
+        for r in self._records:
             lay = r.task.layer
             if lay in layer_time:
                 s, e = layer_time[lay]
@@ -282,5 +368,5 @@ class Simulator:
             else:
                 layer_time[lay] = (r.start, r.end)
 
-        return SimResult(makespan=makespan, records=records,
-                         resource_busy=res_busy, layer_time=layer_time)
+        return SimResult(makespan=makespan, records=self._records,
+                         resource_busy=self._res_busy, layer_time=layer_time)

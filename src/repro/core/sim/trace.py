@@ -1,5 +1,11 @@
 """Gantt-chart export: Chrome trace-event JSON (loadable in Perfetto UI /
 chrome://tracing) + an ASCII Gantt for terminals — the paper's Figure 4.
+
+:func:`chrome_trace` renders a static task-graph ``SimResult`` (one lane
+per hardware resource); :func:`serving_chrome_trace` renders a
+traffic-driven ``ServingReport`` from ``repro.serve_sim`` (replica
+prefill/decode lanes, per-slot request spans, and a queue-depth counter
+track).
 """
 from __future__ import annotations
 
@@ -27,6 +33,82 @@ def chrome_trace(result: SimResult, path: Optional[str] = None) -> str:
             "args": {"layer": rec.task.layer, "bytes": rec.task.nbytes,
                      "flops": rec.task.flops},
         })
+    text = json.dumps({"traceEvents": events, "displayTimeUnit": "ms"})
+    if path:
+        with open(path, "w") as f:
+            f.write(text)
+    return text
+
+
+def serving_chrome_trace(report, path: Optional[str] = None) -> str:
+    """Chrome trace-event JSON for a serving simulation.
+
+    ``report`` is a ``repro.serve_sim.simulator.ServingReport`` (typed
+    loosely to keep core free of serve_sim imports).  Three tracks:
+
+      * pid 0 ``replicas`` — prefill/decode tasks per replica (from the
+        embedded ``SimResult``);
+      * pid 1 ``requests`` — one lane per (replica, slot) with a span per
+        request from admit to completion (args carry TTFT/TPOT);
+      * pid 2 ``queue``    — a counter track of pending-queue depth.
+    """
+    events: List[Dict] = [
+        {"ph": "M", "pid": 0, "name": "process_name",
+         "args": {"name": "replicas"}},
+        {"ph": "M", "pid": 1, "name": "process_name",
+         "args": {"name": "requests"}},
+        {"ph": "M", "pid": 2, "name": "process_name",
+         "args": {"name": "queue"}},
+    ]
+
+    if report.sim_result is not None:
+        resources = sorted({r.task.resource
+                            for r in report.sim_result.records})
+        tid_of = {res: i for i, res in enumerate(resources)}
+        for res, i in tid_of.items():
+            events.append({"ph": "M", "pid": 0, "tid": i,
+                           "name": "thread_name", "args": {"name": res}})
+        for rec in report.sim_result.records:
+            events.append({
+                "ph": "X", "pid": 0, "tid": tid_of[rec.task.resource],
+                "name": rec.task.name, "cat": rec.task.kind,
+                "ts": rec.start * 1e6,
+                "dur": max(rec.end - rec.start, 1e-9) * 1e6,
+            })
+
+    lanes: Dict = {}
+    for m in report.requests:
+        lane = (m.replica, m.slot)
+        if lane not in lanes:
+            lanes[lane] = len(lanes)
+            events.append({"ph": "M", "pid": 1, "tid": lanes[lane],
+                           "name": "thread_name",
+                           "args": {"name": f"replica{lane[0]}/"
+                                            f"slot{lane[1]}"}})
+        tid = lanes[lane]
+        events.append({
+            "ph": "X", "pid": 1, "tid": tid, "name": f"req{m.rid}",
+            "cat": "request",
+            "ts": m.t_admit * 1e6,
+            "dur": max(m.t_done - m.t_admit, 1e-9) * 1e6,
+            "args": {"ttft_ms": m.ttft * 1e3, "tpot_ms": m.tpot * 1e3,
+                     "queue_delay_ms": m.queue_delay * 1e3,
+                     "prompt_tokens": m.prompt_tokens,
+                     "output_tokens": m.output_tokens},
+        })
+
+    # queue-depth counter: +1 on arrival, -1 on admit
+    deltas = []
+    for m in report.requests:
+        deltas.append((m.t_arrive, 1))
+        deltas.append((m.t_admit, -1))
+    depth = 0
+    # arrivals (+1) before admits (-1) at equal times: depth never dips < 0
+    for t, d in sorted(deltas, key=lambda td: (td[0], -td[1])):
+        depth += d
+        events.append({"ph": "C", "pid": 2, "name": "pending",
+                       "ts": t * 1e6, "args": {"requests": depth}})
+
     text = json.dumps({"traceEvents": events, "displayTimeUnit": "ms"})
     if path:
         with open(path, "w") as f:

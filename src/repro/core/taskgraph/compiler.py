@@ -141,6 +141,15 @@ def fixed_table(system: SystemDescription) -> Dict[str, float]:
     }
 
 
+def structural_key(system: SystemDescription) -> Tuple:
+    """Chip parameters that change the *tiling* of a compiled graph; systems
+    that agree on this key differ only in physical annotations and can share
+    a cached graph via :func:`reannotate` (used by ``repro.core.dse`` and
+    ``repro.serve_sim.cost``)."""
+    chip = system.chip
+    return (chip.onchip.capacity, chip.compute.align)
+
+
 def resource_specs(system: SystemDescription) -> Dict[str, ResourceSpec]:
     """Topology -> resource model.
 

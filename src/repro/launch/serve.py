@@ -7,6 +7,18 @@ A minimal production-shaped server core: a request queue, bucketed prefill,
 a decode batch with in-flight slot reuse (a finished request's slot is
 refilled from the queue), greedy sampling.  On TPU the same loop runs the
 full config on the production mesh with the Pallas decode kernel.
+
+Decode steps run with **per-slot cache positions**: each active slot
+writes/attends at its own sequence position, so slots at different depths
+coexist in one batch (the scalar-``pos`` variant corrupted any slot that
+was not at ``max(slot_pos)``).
+
+This server is the *measured* counterpart of the virtual
+continuous-batching scheduler in ``repro.serve_sim.scheduler`` — it logs
+the same per-request TTFT/TPOT and an admit/step/finish event sequence, so
+the paper's predicted-vs-measured accuracy loop extends to serving
+(``tests/test_serve_sim.py`` asserts the virtual scheduler reproduces this
+loop's ordering on a scripted arrival trace).
 """
 from __future__ import annotations
 
@@ -14,7 +26,7 @@ import argparse
 import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,24 +46,63 @@ class Request:
     max_new: int
     out: List[int] = field(default_factory=list)
     done: bool = False
+    # per-request serving metrics (perf_counter timestamps; the measured
+    # side of the virtual ServingReport)
+    t_arrive: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_arrive
+
+    @property
+    def tpot(self) -> float:
+        n = len(self.out)
+        return (self.t_done - self.t_first) / (n - 1) if n > 1 else 0.0
 
 
 class BatchedServer:
-    """Slot-based continuous batching (decode-centric)."""
+    """Slot-based continuous batching (decode-centric).
 
-    def __init__(self, cfg, batch_slots: int, max_len: int):
+    ``decode_fn(params, state, tokens, pos) -> (logits, state)`` defaults
+    to the jitted JAX decode step; tests inject a stub to exercise the
+    scheduling loop (admit/step ordering, per-slot positions) without
+    compiling a model.  ``pos`` is always the per-slot position vector.
+    """
+
+    def __init__(self, cfg, batch_slots: int, max_len: int,
+                 decode_fn: Optional[Callable] = None, state=None,
+                 record_events: bool = False):
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
-        self.state = api.allocate_decode_state(cfg, batch_slots, max_len)
+        self.record_events = record_events
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int32)
-        self.decode = jax.jit(steps_lib.make_serve_step(cfg),
-                              donate_argnums=(1,))
+        if decode_fn is None:
+            self.state = api.allocate_decode_state(cfg, batch_slots, max_len)
+            self.decode = jax.jit(steps_lib.make_serve_step(cfg),
+                                  donate_argnums=(1,))
+        else:
+            self.state = state
+            self.decode = decode_fn
         self.params = None
+        # ("admit", rid) | ("step", rids) | ("finish", rid); recorded only
+        # with record_events (parity vs the virtual scheduler) — unbounded
+        # otherwise
+        self.events: List[Tuple] = []
 
     def load(self, params):
         self.params = params
+
+    def _pos_vector(self, slot: int, pos: int) -> np.ndarray:
+        """Per-slot positions: every slot keeps its own write index; only
+        ``slot`` is overridden (prefill walks it through the prompt)."""
+        vec = self.slot_pos.copy()
+        vec[slot] = pos
+        return vec
 
     def admit(self, req: Request) -> bool:
         """Prefill a request into a free slot (token-by-token prefill keeps
@@ -61,14 +112,15 @@ class BatchedServer:
         except ValueError:
             return False
         self.slot_req[slot] = req
-        pos = 0
-        for tok in req.prompt:
+        req.t_admit = time.perf_counter()
+        if self.record_events:
+            self.events.append(("admit", req.rid))
+        for pos, tok in enumerate(req.prompt):
             tokens = np.zeros((self.slots,), np.int32)
             tokens[slot] = tok
-            _, self.state = self.decode(self.params, self.state,
-                                        jnp.asarray(tokens),
-                                        jnp.asarray(pos, jnp.int32))
-            pos += 1
+            _, self.state = self.decode(
+                self.params, self.state, jnp.asarray(tokens),
+                jnp.asarray(self._pos_vector(slot, pos), jnp.int32))
         self.slot_pos[slot] = len(req.prompt)
         return True
 
@@ -81,22 +133,45 @@ class BatchedServer:
         for i in active:
             r = self.slot_req[i]
             tokens[i] = r.out[-1] if r.out else r.prompt[-1]
-        pos = int(max(self.slot_pos[i] for i in active))
-        logits, self.state = self.decode(self.params, self.state,
-                                         jnp.asarray(tokens),
-                                         jnp.asarray(pos, jnp.int32))
+        if self.record_events:
+            self.events.append(
+                ("step", tuple(sorted(self.slot_req[i].rid for i in active))))
+        logits, self.state = self.decode(
+            self.params, self.state, jnp.asarray(tokens),
+            jnp.asarray(self.slot_pos, jnp.int32))
         logits = np.asarray(logits)
+        now = time.perf_counter()
         finished = 0
         for i in active:
             r = self.slot_req[i]
             nxt = int(np.argmax(logits[i]))
+            if not r.out:
+                r.t_first = now
             r.out.append(nxt)
             self.slot_pos[i] += 1
             if len(r.out) >= r.max_new or self.slot_pos[i] >= self.max_len - 1:
                 r.done = True
+                r.t_done = now
                 self.slot_req[i] = None
+                if self.record_events:
+                    self.events.append(("finish", r.rid))
                 finished += 1
         return finished
+
+
+def serve_summary(requests: List[Request]) -> str:
+    """Measured TTFT/TPOT percentiles (counterpart of ServingReport)."""
+    done = [r for r in requests if r.done]
+    if not done:
+        return "no finished requests"
+    ttft = np.array([r.ttft for r in done])
+    tpot = np.array([r.tpot for r in done if len(r.out) > 1])
+    lines = [f"  TTFT p50/p99 = {np.percentile(ttft, 50) * 1e3:.0f}/"
+             f"{np.percentile(ttft, 99) * 1e3:.0f} ms"]
+    if tpot.size:
+        lines.append(f"  TPOT p50/p99 = {np.percentile(tpot, 50) * 1e3:.2f}/"
+                     f"{np.percentile(tpot, 99) * 1e3:.2f} ms")
+    return "\n".join(lines)
 
 
 def main(argv=None):
@@ -124,12 +199,12 @@ def main(argv=None):
         server.load(params)
 
         rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
         queue = [Request(i, rng.integers(0, cfg.vocab_size,
                                          size=(args.prompt_len,)),
-                         args.max_new)
+                         args.max_new, t_arrive=t0)
                  for i in range(args.requests)]
         done: List[Request] = []
-        t0 = time.perf_counter()
         pending = list(queue)
         steps = 0
         while len(done) < len(queue):
@@ -142,6 +217,7 @@ def main(argv=None):
         toks = sum(len(r.out) for r in queue)
         print(f"served {len(queue)} requests, {toks} tokens in {wall:.2f}s "
               f"({toks / wall:.1f} tok/s, {steps} decode steps)")
+        print(serve_summary(queue))
         return queue
 
 

@@ -75,15 +75,26 @@ def apply_gqa(p: Params, x: jnp.ndarray, cfg: ModelConfig, *, mode: str,
     new_cache = None
     if mode == "decode":
         assert cache is not None
-        pk = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), pos, axis=2)
-        pv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), pos, axis=2)
+        k_c = k.astype(cache["k"].dtype)
+        v_c = v.astype(cache["v"].dtype)
+        if jnp.ndim(pos) == 0:
+            pk = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_c, pos,
+                                                     axis=2)
+            pv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_c, pos,
+                                                     axis=2)
+        else:
+            # per-slot positions (continuous batching: each slot writes its
+            # own cache index) — one update per batch row
+            upd = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice_in_dim(
+                c, u, p, axis=1))
+            pk = upd(cache["k"], k_c, pos)
+            pv = upd(cache["v"], v_c, pos)
         new_cache = {"k": pk, "v": pv}
         pk = constrain(pk, ("batch", "kv_heads", "kv_seq", None))
         pv = constrain(pv, ("batch", "kv_heads", "kv_seq", None))
+        kv_len = jnp.broadcast_to(jnp.asarray(pos) + 1, (B,)).astype(jnp.int32)
         out = L.attention(q, pk.astype(cd), pv.astype(cd), causal=False,
-                          kv_len=jnp.full((B,), pos + 1, jnp.int32))
+                          kv_len=kv_len)
     else:
         out = L.attention(q, k, v, causal=causal)
         if mode == "prefill":
@@ -171,10 +182,19 @@ def apply_mla(p: Params, x: jnp.ndarray, cfg: ModelConfig, *, mode: str,
 
     if mode == "decode":
         assert cache is not None and S == 1
-        ckv_c = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, axis=1)
-        krope_c = jax.lax.dynamic_update_slice_in_dim(
-            cache["krope"], krope.astype(cache["krope"].dtype), pos, axis=1)
+        ckv_t = ckv.astype(cache["ckv"].dtype)
+        krope_t = krope.astype(cache["krope"].dtype)
+        if jnp.ndim(pos) == 0:
+            ckv_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv_t, pos, axis=1)
+            krope_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["krope"], krope_t, pos, axis=1)
+        else:
+            # per-slot positions: one latent-cache update per batch row
+            upd = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice_in_dim(
+                c, u, p, axis=0))
+            ckv_c = upd(cache["ckv"], ckv_t, pos)
+            krope_c = upd(cache["krope"], krope_t, pos)
         new_cache = {"ckv": ckv_c, "krope": krope_c}
         ckv_c = constrain(ckv_c, ("batch", "kv_seq", None))
         # --- absorbed decode over the latent cache ---
@@ -188,7 +208,8 @@ def apply_mla(p: Params, x: jnp.ndarray, cfg: ModelConfig, *, mode: str,
                         preferred_element_type=jnp.float32)
         s *= scale
         t_pos = jnp.arange(ckv_c.shape[1])
-        mask = t_pos[None, None, :] <= jnp.asarray(pos)
+        pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+        mask = t_pos[None, None, :] <= pos_b[:, None, None]
         s = jnp.where(mask, s, -jnp.inf)
         probs = jax.nn.softmax(s, axis=-1)
         ctx = jnp.einsum("bht,btl->bhl", probs.astype(cd), ckv_c,

@@ -156,8 +156,9 @@ def prefill(p: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
 def decode_step(p: Params, cfg: ModelConfig, state: Params,
                 tokens: jnp.ndarray, pos: jnp.ndarray,
                 ) -> Tuple[jnp.ndarray, Params]:
-    """One decode step.  tokens: (B,) int32; pos: scalar int32 (cache write
-    index; attention attends to [0, pos]).  Returns (logits (B,V), state)."""
+    """One decode step.  tokens: (B,) int32; pos: scalar or per-slot (B,)
+    int32 (cache write index; attention attends to [0, pos], per slot when
+    a vector — continuous batching).  Returns (logits (B,V), state)."""
     cd = L.dtype_of(cfg.compute_dtype)
     x = L.embed(p["embed"], tokens[:, None], cd)
     x = constrain(x, ("batch", None, "embed"))

@@ -1,0 +1,45 @@
+"""Virtual serving subsystem: traffic-driven simulation at the concept phase.
+
+Extends the paper's single-step virtual models to the ROADMAP's serving
+question: request arrival processes (``workload``), per-request
+prefill/decode cost models derived from compiled task graphs (``cost``),
+pluggable batching policies (``scheduler``), an event-driven serving
+simulator with tail-latency metrics (``simulator``), and an SLO-aware
+capacity planner (``capacity``).  The measured counterpart of the virtual
+continuous-batching scheduler is ``repro.launch.serve.BatchedServer``.
+
+Quickstart::
+
+    from repro.serve_sim import (ContinuousBatchingScheduler, LengthDist,
+                                 ServingCostModelBuilder, SLO,
+                                 poisson_workload, simulate_serving)
+
+    cost = ServingCostModelBuilder(cfg).model_for(system)
+    report = simulate_serving(cost, ContinuousBatchingScheduler,
+                              poisson_workload(4.0, 1000), slots=8)
+    print(report.summary())
+"""
+from repro.serve_sim.capacity import SLO, CapacityPlan, CapacityPlanner
+from repro.serve_sim.cost import ServingCostModel, ServingCostModelBuilder
+from repro.serve_sim.scheduler import (SCHEDULERS, BatchScheduler,
+                                       BucketedPrefillScheduler,
+                                       ContinuousBatchingScheduler,
+                                       StaticBatchScheduler, make_scheduler)
+from repro.serve_sim.simulator import (LatencyStats, RequestMetrics,
+                                       ServingReport, ServingSimulator,
+                                       simulate_serving)
+from repro.serve_sim.workload import (ClosedLoopWorkload, LengthDist,
+                                      OpenLoopWorkload, Request, Workload,
+                                      bursty_workload, poisson_workload,
+                                      trace_workload)
+
+__all__ = [
+    "SLO", "CapacityPlan", "CapacityPlanner",
+    "ServingCostModel", "ServingCostModelBuilder",
+    "SCHEDULERS", "BatchScheduler", "BucketedPrefillScheduler",
+    "ContinuousBatchingScheduler", "StaticBatchScheduler", "make_scheduler",
+    "LatencyStats", "RequestMetrics", "ServingReport", "ServingSimulator",
+    "simulate_serving",
+    "ClosedLoopWorkload", "LengthDist", "OpenLoopWorkload", "Request",
+    "Workload", "bursty_workload", "poisson_workload", "trace_workload",
+]

@@ -1,0 +1,128 @@
+"""SLO-aware capacity planning over the virtual serving simulator.
+
+The paper's top-down flow asks "what hardware annotation meets the
+target?"; the serving analog asks **"what is the smallest deployment that
+meets the latency SLO under this traffic?"**.  :class:`CapacityPlanner`
+answers it by bisecting over replica count (or batch slots per replica)
+and re-running the seeded serving simulation at each probe — every probe
+is a full tail-latency estimate, not a closed-form approximation, so
+burstiness and scheduler behaviour are captured.
+
+Monotonicity note: tail latency is *not* perfectly monotone in capacity
+(batching dynamics can shift percentiles slightly), so the planner runs a
+doubling phase to find a feasible upper bound, then bisects — the result
+is the smallest probed configuration that met the SLO with all smaller
+probed configurations failing, which is the operational question.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.serve_sim.cost import ServingCostModel
+from repro.serve_sim.scheduler import BatchScheduler
+from repro.serve_sim.simulator import ServingReport, simulate_serving
+from repro.serve_sim.workload import Workload
+
+
+@dataclass(frozen=True)
+class SLO:
+    """Latency targets (seconds); ``inf`` disables a term."""
+
+    ttft_p99: float = math.inf
+    tpot_p99: float = math.inf
+    e2e_p99: float = math.inf
+
+    def satisfied_by(self, report: ServingReport) -> bool:
+        return (report.ttft.p99 <= self.ttft_p99
+                and report.tpot.p99 <= self.tpot_p99
+                and report.e2e.p99 <= self.e2e_p99)
+
+    def __str__(self) -> str:
+        terms = []
+        if math.isfinite(self.ttft_p99):
+            terms.append(f"TTFT p99<={self.ttft_p99 * 1e3:.0f}ms")
+        if math.isfinite(self.tpot_p99):
+            terms.append(f"TPOT p99<={self.tpot_p99 * 1e3:.1f}ms")
+        if math.isfinite(self.e2e_p99):
+            terms.append(f"E2E p99<={self.e2e_p99:.1f}s")
+        return " & ".join(terms) or "no SLO"
+
+
+@dataclass
+class CapacityPlan:
+    """Outcome of one planning run."""
+
+    axis: str                      # "replicas" | "slots"
+    value: int                     # smallest feasible probe (or cap if none)
+    feasible: bool
+    report: Optional[ServingReport]
+    probes: Dict[int, bool] = field(default_factory=dict)
+
+    def __str__(self) -> str:
+        status = "meets SLO" if self.feasible else "INFEASIBLE at cap"
+        return f"{self.axis}={self.value} ({status}, {len(self.probes)} probes)"
+
+
+class CapacityPlanner:
+    """Finds the smallest deployment meeting an :class:`SLO`.
+
+    ``workload_factory`` must return a *fresh, identically-seeded* workload
+    per call (closed-loop workloads are stateful); likewise
+    ``scheduler_factory`` returns a fresh policy per replica.
+    """
+
+    def __init__(self, cost: ServingCostModel,
+                 scheduler_factory: Callable[[], BatchScheduler],
+                 workload_factory: Callable[[], Workload],
+                 slo: SLO):
+        self.cost = cost
+        self.scheduler_factory = scheduler_factory
+        self.workload_factory = workload_factory
+        self.slo = slo
+
+    def _evaluate(self, replicas: int, slots: int) -> ServingReport:
+        return simulate_serving(self.cost, self.scheduler_factory,
+                                self.workload_factory(),
+                                replicas=replicas, slots=slots)
+
+    def plan(self, axis: str = "replicas", lo: int = 1, cap: int = 64,
+             replicas: int = 1, slots: int = 8) -> CapacityPlan:
+        """Bisect ``axis`` in ``[lo, cap]`` for the smallest SLO-feasible
+        value; the other dimension is fixed (``replicas`` / ``slots``)."""
+        if axis not in ("replicas", "slots"):
+            raise ValueError("axis must be 'replicas' or 'slots'")
+
+        probes: Dict[int, bool] = {}
+        reports: Dict[int, ServingReport] = {}
+
+        def feasible(v: int) -> bool:
+            if v not in probes:
+                r = self._evaluate(v if axis == "replicas" else replicas,
+                                   v if axis == "slots" else slots)
+                reports[v] = r
+                probes[v] = self.slo.satisfied_by(r)
+            return probes[v]
+
+        # doubling phase: find a feasible upper bound
+        hi = lo
+        while hi < cap and not feasible(hi):
+            hi = min(cap, hi * 2)
+        if not feasible(hi):
+            return CapacityPlan(axis=axis, value=hi, feasible=False,
+                                report=reports.get(hi), probes=probes)
+        # bisect down to the smallest feasible probe
+        lo_infeasible = max((v for v, ok in probes.items() if not ok),
+                            default=lo - 1)
+        best = hi
+        lo_b, hi_b = lo_infeasible + 1, hi
+        while lo_b < hi_b:
+            mid = (lo_b + hi_b) // 2
+            if feasible(mid):
+                best = mid
+                hi_b = mid
+            else:
+                lo_b = mid + 1
+        return CapacityPlan(axis=axis, value=best, feasible=True,
+                            report=reports[best], probes=probes)

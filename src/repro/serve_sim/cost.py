@@ -1,0 +1,144 @@
+"""Per-request serving cost models derived from compiled task graphs.
+
+The serving simulator needs two quantities per scheduler decision:
+
+  * ``prefill_time(n_tokens)``          — processing a prompt of n tokens;
+  * ``decode_step_time(n_active, ctx)`` — one batched decode step for
+    ``n_active`` slots whose cached contexts total ``ctx`` tokens.
+
+Both are derived from the same artifact every estimator backend consumes —
+the hardware-adapted :class:`~repro.core.taskgraph.compiler.CompiledGraph`
+— by estimating a small set of calibration shape cells and fitting the
+affine model
+
+    T_prefill(s)    = F_p + P_p * s
+    T_decode(b, c)  = F_d + P_d * b + C_d * b * c
+
+(F: fixed launch/latency floor, P: per-token compute/memory, C: per
+cached-token KV/state read).  Because calibration graphs carry
+:class:`~repro.core.taskgraph.anno.RateAnno`s, a what-if sweep point
+re-annotates the cached graphs in O(n_tasks) (``reannotate``) instead of
+recompiling — the paper's click-of-a-button loop, extended from "one
+training step" to "a serving fleet under traffic".
+
+:class:`ServingCostModel` itself is a plain dataclass, so tests and the
+capacity planner can also construct synthetic models directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.core.config import ModelConfig, ShapeConfig
+from repro.core.estimator import get_backend
+from repro.core.hw import SystemDescription
+from repro.core.taskgraph.builders import ShardPlan, lm_step_ops
+from repro.core.taskgraph.compiler import (CompiledGraph, CompilePlan,
+                                           compile_ops, reannotate,
+                                           structural_key)
+
+
+@dataclass(frozen=True)
+class ServingCostModel:
+    """Affine per-request cost surface for one (model, system) pair."""
+
+    name: str = "serving_cost"
+    prefill_fixed: float = 0.0       # seconds per prefill launch
+    prefill_per_token: float = 1e-4  # seconds per prompt token
+    decode_fixed: float = 0.0        # seconds per decode step (launch floor)
+    decode_per_token: float = 1e-4   # seconds per active slot per step
+    decode_per_ctx_token: float = 0.0   # seconds per cached token per step
+
+    def prefill_time(self, n_tokens: int) -> float:
+        return self.prefill_fixed + self.prefill_per_token * max(0, n_tokens)
+
+    def decode_step_time(self, n_active: int, total_ctx: int) -> float:
+        if n_active <= 0:
+            return 0.0
+        return (self.decode_fixed + self.decode_per_token * n_active
+                + self.decode_per_ctx_token * max(0, total_ctx))
+
+
+def _solve_decode(t11: float, t21: float, t22: float,
+                  b1: int, b2: int, c1: int, c2: int
+                  ) -> Tuple[float, float, float]:
+    """Fit T(b,c) = F + P*b + C*b*c from three calibration estimates."""
+    c_d = max(0.0, (t22 - t21) / (b2 * (c2 - c1)))
+    p_d = max(0.0, (t21 - t11) / (b2 - b1) - c_d * c1)
+    f_d = max(0.0, t11 - p_d * b1 - c_d * b1 * c1)
+    return f_d, p_d, c_d
+
+
+class ServingCostModelBuilder:
+    """Builds :class:`ServingCostModel`s from compiled calibration graphs.
+
+    One builder per (model config, compile plan, shard plan); call
+    :meth:`model_for` per system.  Calibration graphs are cached by the
+    system's *structural* key (on-chip capacity, array alignment) and
+    re-annotated for systems that differ only in physical annotations —
+    the same trick :class:`~repro.core.dse.DesignSpaceExplorer` uses, so
+    a serving sweep over chip variants costs O(n_tasks) per point.
+    """
+
+    def __init__(self, cfg: ModelConfig,
+                 plan: Optional[CompilePlan] = None,
+                 shard: Optional[ShardPlan] = None,
+                 backend: str = "analytic",
+                 calib_batches: Tuple[int, int] = (1, 8),
+                 calib_ctx: Tuple[int, int] = (512, 4096)):
+        b1, b2 = calib_batches
+        c1, c2 = calib_ctx
+        if b2 <= b1 or c2 <= c1:
+            raise ValueError("need calib_batches[1] > [0] and calib_ctx[1] > [0]")
+        self.cfg = cfg
+        self.plan = plan or CompilePlan()
+        self.shard = shard or ShardPlan(data=1, model=1)
+        self.backend = backend
+        self.calib_batches = (b1, b2)
+        self.calib_ctx = (c1, c2)
+        # structural_key -> {cell_name: CompiledGraph}
+        self._cache: Dict[Tuple, Dict[str, CompiledGraph]] = {}
+        self.stats = {"compiles": 0, "reannotations": 0}
+
+    def _cells(self) -> Dict[str, ShapeConfig]:
+        b1, b2 = self.calib_batches
+        c1, c2 = self.calib_ctx
+        return {
+            "decode_b1c1": ShapeConfig("decode_b1c1", c1, b1, "decode"),
+            "decode_b2c1": ShapeConfig("decode_b2c1", c1, b2, "decode"),
+            "decode_b2c2": ShapeConfig("decode_b2c2", c2, b2, "decode"),
+            "prefill_c1": ShapeConfig("prefill_c1", c1, 1, "prefill"),
+            "prefill_c2": ShapeConfig("prefill_c2", c2, 1, "prefill"),
+        }
+
+    def _graphs(self, system: SystemDescription) -> Dict[str, CompiledGraph]:
+        key = structural_key(system)
+        hit = self._cache.get(key)
+        if hit is None:
+            graphs = {
+                name: compile_ops(lm_step_ops(self.cfg, cell, self.shard),
+                                  system, self.plan)
+                for name, cell in self._cells().items()
+            }
+            self.stats["compiles"] += len(graphs)
+            self._cache[key] = graphs
+            return graphs
+        if next(iter(hit.values())).system is system:
+            return hit
+        self.stats["reannotations"] += len(hit)
+        return {name: reannotate(g, system) for name, g in hit.items()}
+
+    def model_for(self, system: SystemDescription) -> ServingCostModel:
+        graphs = self._graphs(system)
+        est = get_backend(self.backend)
+        t = {name: est.estimate(g).step_time for name, g in graphs.items()}
+        b1, b2 = self.calib_batches
+        c1, c2 = self.calib_ctx
+        f_d, p_d, c_d = _solve_decode(
+            t["decode_b1c1"], t["decode_b2c1"], t["decode_b2c2"],
+            b1, b2, c1, c2)
+        p_p = max(0.0, (t["prefill_c2"] - t["prefill_c1"]) / (c2 - c1))
+        f_p = max(0.0, t["prefill_c1"] - p_p * c1)
+        return ServingCostModel(
+            name=f"{system.name}", prefill_fixed=f_p, prefill_per_token=p_p,
+            decode_fixed=f_d, decode_per_token=p_d, decode_per_ctx_token=c_d)

@@ -1,0 +1,208 @@
+"""Pluggable batching policies for the virtual serving simulator.
+
+Each policy answers one question — *what should this replica do next?* —
+given its slot occupancy and the shared request queue.  The simulator
+(``repro.serve_sim.simulator``) invokes :meth:`BatchScheduler.decide`
+whenever a replica goes idle (after a prefill/decode task completes, on a
+request arrival, or at a requested wake-up time) and turns the returned
+action into a task on the replica's DES resource.
+
+Policies (virtual counterparts of real serving loops):
+
+  * :class:`ContinuousBatchingScheduler` — slot-based continuous batching,
+    mirroring the *measured* ``repro.launch.serve.BatchedServer`` loop
+    admit-for-admit and step-for-step (asserted by
+    ``tests/test_serve_sim.py``): admit queued requests one at a time into
+    free slots, then run one decode step for every active slot; a finished
+    request's slot is refilled from the queue before the next step.
+  * :class:`BucketedPrefillScheduler` — dynamic batching with bucketed
+    prefill: all admissible queued requests are prefilled together, each
+    prompt padded to the next bucket boundary (padding is paid as extra
+    prefill tokens); decode then continues slot-style.
+  * :class:`StaticBatchScheduler` — classic static batching: wait until
+    ``batch_size`` requests are queued (or ``max_wait`` expired), run the
+    whole batch to completion before admitting again.  Finished requests
+    hold their slot until the batch drains — the padding waste that
+    continuous batching eliminates, now measurable in the virtual model.
+"""
+from __future__ import annotations
+
+import abc
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Sequence, Union
+
+from repro.serve_sim.workload import Request
+
+
+@dataclass
+class InFlight:
+    """One admitted request's runtime state on a replica."""
+
+    req: Request
+    slot: int
+    ctx: int = 0                 # cached tokens (prompt + generated)
+    generated: int = 0
+    t_admit: float = 0.0
+    t_first: Optional[float] = None   # end of the step emitting token 1
+    done: bool = False           # finished but still holding its slot
+
+    @property
+    def finished(self) -> bool:
+        return self.generated >= self.req.output_tokens
+
+
+@dataclass
+class ReplicaState:
+    """Slot occupancy of one replica (owned by the simulator)."""
+
+    index: int
+    slots: int
+    active: List[InFlight] = field(default_factory=list)
+    busy: bool = False
+
+    @property
+    def free_slots(self) -> int:
+        return self.slots - len(self.active)
+
+    @property
+    def decoding(self) -> List[InFlight]:
+        """Slots that still generate tokens (excludes held finished slots)."""
+        return [f for f in self.active if not f.done]
+
+
+# ---- actions -------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Prefill:
+    """Admit ``reqs`` (already popped from the queue) and charge
+    ``tokens`` prefill tokens (includes any bucket padding)."""
+
+    reqs: Sequence[Request]
+    tokens: int
+
+
+@dataclass(frozen=True)
+class Decode:
+    """Run one decode step for every decoding slot."""
+
+
+@dataclass(frozen=True)
+class Wait:
+    """Re-invoke ``decide`` at time ``t`` (batching timeout)."""
+
+    t: float
+
+
+Action = Union[Prefill, Decode, Wait, None]
+
+
+def _bucket(n: int, bucket: int) -> int:
+    """Round ``n`` up to the next multiple of ``bucket``."""
+    return -(-n // bucket) * bucket if bucket > 1 else n
+
+
+class BatchScheduler(abc.ABC):
+    """One batching policy.  Stateless w.r.t. time: all runtime state lives
+    in :class:`ReplicaState` and the shared queue, so a fresh instance per
+    simulation run is cheap and the policy is trivially seedable."""
+
+    name: str = "abstract"
+    #: finished requests keep their slot until every batch member finishes
+    hold_finished: bool = False
+
+    @abc.abstractmethod
+    def decide(self, replica: ReplicaState, queue: Deque[Request],
+               now: float) -> Action:
+        """Pick the replica's next action.  May ``popleft`` requests off
+        ``queue`` (they are then owned by the returned :class:`Prefill`)."""
+
+
+class ContinuousBatchingScheduler(BatchScheduler):
+    """Slot-based continuous batching — the virtual twin of the measured
+    ``repro.launch.serve.BatchedServer`` loop: admit one queued request per
+    free slot (sequential prefill), decode every active slot, refill freed
+    slots before the next step."""
+
+    name = "continuous"
+
+    def decide(self, replica: ReplicaState, queue: Deque[Request],
+               now: float) -> Action:
+        if queue and replica.free_slots > 0:
+            req = queue.popleft()
+            return Prefill((req,), req.prompt_tokens)
+        if replica.decoding:
+            return Decode()
+        return None
+
+
+class BucketedPrefillScheduler(BatchScheduler):
+    """Dynamic batching with bucketed prefill: admit every admissible
+    queued request at once, padding each prompt to the next ``bucket``
+    boundary (the padding cost is real prefill work)."""
+
+    name = "bucketed"
+
+    def __init__(self, bucket: int = 128):
+        if bucket < 1:
+            raise ValueError("bucket must be >= 1")
+        self.bucket = bucket
+
+    def decide(self, replica: ReplicaState, queue: Deque[Request],
+               now: float) -> Action:
+        if queue and replica.free_slots > 0:
+            n = min(len(queue), replica.free_slots)
+            reqs = [queue.popleft() for _ in range(n)]
+            tokens = sum(_bucket(r.prompt_tokens, self.bucket) for r in reqs)
+            return Prefill(tuple(reqs), tokens)
+        if replica.decoding:
+            return Decode()
+        return None
+
+
+class StaticBatchScheduler(BatchScheduler):
+    """Classic static batching: form a batch of ``batch_size`` (or whatever
+    arrived within ``max_wait`` of the oldest queued request), run it to
+    completion, repeat.  Prompts are padded to the longest in the batch."""
+
+    name = "static"
+    hold_finished = True
+
+    def __init__(self, batch_size: int = 8, max_wait: float = 0.5):
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self.batch_size = batch_size
+        self.max_wait = max_wait
+
+    def decide(self, replica: ReplicaState, queue: Deque[Request],
+               now: float) -> Action:
+        if replica.active:
+            if replica.decoding:
+                return Decode()
+            return None       # simulator releases the drained batch
+        if not queue:
+            return None
+        deadline = queue[0].t_arrive + self.max_wait
+        if len(queue) < self.batch_size and now < deadline:
+            return Wait(deadline)
+        n = min(len(queue), self.batch_size, replica.slots)
+        reqs = [queue.popleft() for _ in range(n)]
+        longest = max(r.prompt_tokens for r in reqs)
+        return Prefill(tuple(reqs), longest * n)
+        # padding to the longest prompt: the whole batch pays max-length
+        # prefill, the static-batching cost continuous batching removes
+
+
+SCHEDULERS = {
+    "continuous": ContinuousBatchingScheduler,
+    "bucketed": BucketedPrefillScheduler,
+    "static": StaticBatchScheduler,
+}
+
+
+def make_scheduler(name: str, **kwargs) -> BatchScheduler:
+    if name not in SCHEDULERS:
+        raise KeyError(f"unknown scheduler {name!r}; "
+                       f"available: {sorted(SCHEDULERS)}")
+    return SCHEDULERS[name](**kwargs)

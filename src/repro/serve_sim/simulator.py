@@ -1,0 +1,353 @@
+"""Traffic-driven serving simulator over the extended DES engine.
+
+Where ``repro.core.estimator`` answers *"how long is one static step?"*,
+this module answers the ROADMAP's serving question at the concept phase:
+*"what tail latency does this system + scheduler sustain under this
+traffic?"* — before any prototype exists.
+
+Mechanics: every request arrival is a timed callback
+(:meth:`~repro.core.sim.engine.Simulator.at`) on the DES engine; each
+scheduler decision (prefill batch, decode step) is injected as a
+:class:`~repro.core.sim.engine.Task` on the replica's FIFO resource, with
+durations from the :class:`~repro.serve_sim.cost.ServingCostModel` (itself
+derived from a compiled task graph, so what-if re-annotation flows through
+to serving metrics).  Completion callbacks drive the scheduler causally:
+finish a request, free its slot, admit the next, issue the next step.
+
+The emitted :class:`ServingReport` carries throughput, replica
+utilization, and the serving tail metrics — TTFT (arrival to first
+generated token), TPOT (mean inter-token time after the first), and E2E
+latency — at p50/p95/p99, plus the raw per-request rows and the engine's
+``SimResult`` for Gantt / Chrome-trace export
+(:func:`repro.core.sim.trace.serving_chrome_trace`).
+
+The measured counterpart is ``repro.launch.serve.BatchedServer``, which
+logs the same per-request TTFT/TPOT — the paper's predicted-vs-measured
+accuracy loop, extended to serving.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.sim.engine import ResourceSpec, SimResult, Simulator, Task
+from repro.serve_sim.cost import ServingCostModel
+from repro.serve_sim.scheduler import (BatchScheduler, Decode, InFlight,
+                                       Prefill, ReplicaState, Wait)
+from repro.serve_sim.workload import Request, Workload
+
+
+@dataclass(frozen=True)
+class LatencyStats:
+    """Percentile summary of one latency population (seconds)."""
+
+    n: int
+    mean: float
+    p50: float
+    p95: float
+    p99: float
+    max: float
+
+    @staticmethod
+    def of(values: List[float]) -> "LatencyStats":
+        if not values:
+            return LatencyStats(0, 0.0, 0.0, 0.0, 0.0, 0.0)
+        a = np.asarray(values, dtype=np.float64)
+        p50, p95, p99 = np.percentile(a, (50, 95, 99))
+        return LatencyStats(n=len(a), mean=float(a.mean()), p50=float(p50),
+                            p95=float(p95), p99=float(p99),
+                            max=float(a.max()))
+
+
+@dataclass
+class RequestMetrics:
+    """Per-request outcome (the rows behind the percentiles)."""
+
+    rid: int
+    replica: int
+    slot: int
+    t_arrive: float
+    t_admit: float
+    t_first: float
+    t_done: float
+    prompt_tokens: int
+    output_tokens: int
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_arrive
+
+    @property
+    def queue_delay(self) -> float:
+        return self.t_admit - self.t_arrive
+
+    @property
+    def e2e(self) -> float:
+        return self.t_done - self.t_arrive
+
+    @property
+    def tpot(self) -> float:
+        n = self.output_tokens
+        return (self.t_done - self.t_first) / (n - 1) if n > 1 else 0.0
+
+
+@dataclass
+class ServingReport:
+    """End-to-end serving estimate for one (system, scheduler, traffic)."""
+
+    workload: str
+    scheduler: str
+    cost_model: str
+    replicas: int
+    slots: int
+    n_requests: int
+    duration: float                    # makespan, seconds
+    output_tokens: int
+    ttft: LatencyStats
+    tpot: LatencyStats
+    e2e: LatencyStats
+    queue_delay: LatencyStats
+    replica_util: float                # mean busy fraction across replicas
+    requests: List[RequestMetrics] = field(default_factory=list)
+    sim_result: Optional[SimResult] = None
+    events: List[Tuple] = field(default_factory=list)
+
+    @property
+    def throughput_rps(self) -> float:
+        return self.n_requests / self.duration if self.duration > 0 else 0.0
+
+    @property
+    def throughput_tps(self) -> float:
+        return self.output_tokens / self.duration if self.duration > 0 else 0.0
+
+    def summary(self) -> str:
+        return (
+            f"serve[{self.cost_model}|{self.scheduler}|{self.workload}] "
+            f"{self.replicas}x{self.slots} slots: "
+            f"{self.n_requests} reqs in {self.duration:.1f}s "
+            f"({self.throughput_rps:.2f} req/s, {self.throughput_tps:.1f} "
+            f"tok/s, util={self.replica_util:.1%})\n"
+            f"  TTFT p50/p95/p99 = {self.ttft.p50 * 1e3:.0f}/"
+            f"{self.ttft.p95 * 1e3:.0f}/{self.ttft.p99 * 1e3:.0f} ms   "
+            f"TPOT p50/p99 = {self.tpot.p50 * 1e3:.2f}/"
+            f"{self.tpot.p99 * 1e3:.2f} ms   "
+            f"E2E p99 = {self.e2e.p99:.2f} s")
+
+
+class ServingSimulator:
+    """Replays a :class:`Workload` against replicas of one cost model.
+
+    ``scheduler_factory`` is called once per replica (schedulers are
+    per-replica state-free policies); ``record_events`` keeps the
+    admit/step/finish sequence for scheduler-parity assertions against the
+    real ``BatchedServer``.
+    """
+
+    def __init__(self, cost: ServingCostModel,
+                 scheduler_factory: Callable[[], BatchScheduler],
+                 workload: Workload,
+                 replicas: int = 1,
+                 slots: int = 8,
+                 record_events: bool = False):
+        if replicas < 1 or slots < 1:
+            raise ValueError("need replicas >= 1 and slots >= 1")
+        self.cost = cost
+        self.workload = workload
+        self.replicas = [ReplicaState(index=r, slots=slots)
+                         for r in range(replicas)]
+        self.schedulers = [scheduler_factory() for _ in range(replicas)]
+        self.slots = slots
+        self.record_events = record_events
+        self.events: List[Tuple] = []
+        self.pending: deque = deque()
+        self.metrics: List[RequestMetrics] = []
+        self._sim = Simulator(
+            resources={self._res(r): ResourceSpec(self._res(r))
+                       for r in range(replicas)},
+            on_complete=self._on_task_done)
+        self._handlers: Dict[int, Callable[[float], None]] = {}
+        self._total_out_tokens = 0
+        self._wait_until: Dict[int, float] = {}   # replica -> armed wake-up
+
+    @staticmethod
+    def _res(r: int) -> str:
+        return f"replica{r}"
+
+    # ---- engine plumbing -------------------------------------------------
+
+    def _submit(self, replica: ReplicaState, name: str, kind: str,
+                duration: float, handler: Callable[[float], None]) -> None:
+        tid = self._sim.next_task_id()
+        task = Task(tid=tid, name=name, layer=self._res(replica.index),
+                    resource=self._res(replica.index), duration=duration,
+                    kind=kind)
+        self._handlers[tid] = handler
+        replica.busy = True
+        self._sim.inject(task)
+
+    def _on_task_done(self, task: Task, now: float) -> None:
+        handler = self._handlers.pop(task.tid, None)
+        if handler is not None:
+            handler(now)
+
+    # ---- arrivals --------------------------------------------------------
+
+    def _arrive(self, req: Request, now: float) -> None:
+        self.pending.append(req)
+        for replica in self.replicas:
+            if not replica.busy:
+                self._kick(replica, now)
+
+    def _schedule_arrival(self, req: Request) -> None:
+        self._sim.at(max(0.0, req.t_arrive),
+                     lambda r=req: self._arrive(r, self._sim.now))
+
+    # ---- the scheduling loop --------------------------------------------
+
+    def _kick(self, replica: ReplicaState, now: float) -> None:
+        if replica.busy:
+            return
+        sched = self.schedulers[replica.index]
+        action = sched.decide(replica, self.pending, now)
+
+        if isinstance(action, Prefill):
+            self._start_prefill(replica, action, now)
+        elif isinstance(action, Decode):
+            self._start_decode(replica, now)
+        elif isinstance(action, Wait):
+            key = replica.index
+            if np.isfinite(action.t) and self._wait_until.get(key) != action.t:
+                self._wait_until[key] = action.t
+                self._sim.at(action.t, lambda r=replica: self._wake(r))
+        # None: replica stays idle until an arrival or wake-up kicks it
+
+    def _wake(self, replica: ReplicaState) -> None:
+        self._wait_until.pop(replica.index, None)
+        self._kick(replica, self._sim.now)
+
+    def _start_prefill(self, replica: ReplicaState, action: Prefill,
+                       now: float) -> None:
+        free = sorted(set(range(replica.slots))
+                      - {f.slot for f in replica.active})
+        if len(action.reqs) > len(free):
+            raise RuntimeError(
+                f"scheduler {self.schedulers[replica.index].name!r} admitted "
+                f"{len(action.reqs)} requests with only {len(free)} free "
+                f"slots on replica{replica.index}")
+        flights = []
+        for req, slot in zip(action.reqs, free):
+            fl = InFlight(req=req, slot=slot, ctx=req.prompt_tokens,
+                          t_admit=now)
+            replica.active.append(fl)
+            flights.append(fl)
+            if self.record_events:
+                self.events.append(("admit", req.rid))
+        dur = self.cost.prefill_time(action.tokens)
+        self._submit(
+            replica, name=f"prefill/r{replica.index}"
+            f"/{'+'.join(str(f.req.rid) for f in flights)}",
+            kind="prefill", duration=dur,
+            handler=lambda t, r=replica: self._finish_phase(r, t))
+
+    def _start_decode(self, replica: ReplicaState, now: float) -> None:
+        sched = self.schedulers[replica.index]
+        # static batching pays for held (finished) slots too
+        batch = replica.active if sched.hold_finished else replica.decoding
+        n = len(batch)
+        ctx = sum(f.ctx for f in batch)
+        dur = self.cost.decode_step_time(n, ctx)
+        if self.record_events:
+            self.events.append(
+                ("step", tuple(sorted(f.req.rid for f in replica.decoding))))
+        self._submit(
+            replica, name=f"decode/r{replica.index}/b{n}",
+            kind="decode", duration=dur,
+            handler=lambda t, r=replica: self._finish_decode(r, t))
+
+    def _finish_phase(self, replica: ReplicaState, now: float) -> None:
+        replica.busy = False
+        self._kick(replica, now)
+
+    def _finish_decode(self, replica: ReplicaState, now: float) -> None:
+        sched = self.schedulers[replica.index]
+        finished: List[InFlight] = []
+        # slot order mirrors the real BatchedServer's finish ordering
+        for fl in sorted(replica.decoding, key=lambda f: f.slot):
+            fl.generated += 1
+            fl.ctx += 1
+            self._total_out_tokens += 1
+            if fl.t_first is None:
+                fl.t_first = now
+            if fl.finished:
+                fl.done = True
+                finished.append(fl)
+        release = list(finished)
+        if sched.hold_finished:
+            # the batch drains only when every member is done
+            if replica.decoding:
+                release = []
+            else:
+                release = list(replica.active)
+        for fl in release:
+            replica.active.remove(fl)
+        for fl in finished:
+            if self.record_events:
+                self.events.append(("finish", fl.req.rid))
+            self.metrics.append(RequestMetrics(
+                rid=fl.req.rid, replica=replica.index, slot=fl.slot,
+                t_arrive=fl.req.t_arrive, t_admit=fl.t_admit,
+                t_first=fl.t_first, t_done=now,
+                prompt_tokens=fl.req.prompt_tokens,
+                output_tokens=fl.req.output_tokens))
+            follow = self.workload.on_complete(fl.req, now)
+            if follow is not None:
+                self._schedule_arrival(follow)
+        replica.busy = False
+        self._kick(replica, now)
+
+    # ---- entry point -----------------------------------------------------
+
+    def run(self) -> ServingReport:
+        for req in self.workload.initial():
+            self._schedule_arrival(req)
+        sim_result = self._sim.run()
+
+        util = 0.0
+        if sim_result.makespan > 0:
+            util = sum(
+                sim_result.resource_busy.get(self._res(r.index), 0.0)
+                for r in self.replicas
+            ) / (len(self.replicas) * sim_result.makespan)
+
+        self.metrics.sort(key=lambda m: m.rid)
+        return ServingReport(
+            workload=self.workload.name,
+            scheduler=self.schedulers[0].name,
+            cost_model=self.cost.name,
+            replicas=len(self.replicas), slots=self.slots,
+            n_requests=len(self.metrics),
+            duration=sim_result.makespan,
+            output_tokens=self._total_out_tokens,
+            ttft=LatencyStats.of([m.ttft for m in self.metrics]),
+            tpot=LatencyStats.of([m.tpot for m in self.metrics
+                                  if m.output_tokens > 1]),
+            e2e=LatencyStats.of([m.e2e for m in self.metrics]),
+            queue_delay=LatencyStats.of([m.queue_delay
+                                         for m in self.metrics]),
+            replica_util=util,
+            requests=self.metrics,
+            sim_result=sim_result,
+            events=self.events)
+
+
+def simulate_serving(cost: ServingCostModel,
+                     scheduler_factory: Callable[[], BatchScheduler],
+                     workload: Workload, replicas: int = 1, slots: int = 8,
+                     record_events: bool = False) -> ServingReport:
+    """One-shot convenience wrapper around :class:`ServingSimulator`."""
+    return ServingSimulator(cost, scheduler_factory, workload,
+                            replicas=replicas, slots=slots,
+                            record_events=record_events).run()

@@ -1,0 +1,254 @@
+"""Seeded request-traffic generators for the virtual serving simulator.
+
+The ROADMAP north star is a system serving *heavy traffic from millions of
+users*; this module describes that traffic as the paper describes hardware
+— abstractly, at the concept phase.  A :class:`Workload` yields virtual
+:class:`Request`s (arrival time + prompt/output token counts); the serving
+simulator (``repro.serve_sim.simulator``) replays them against a scheduler
+and cost model.
+
+Open-loop generators (arrival process independent of the system):
+
+  * :func:`poisson_workload`     — memoryless arrivals at a fixed rate;
+  * :func:`bursty_workload`      — two-state MMPP (Markov-modulated
+    Poisson): alternating high/low-rate phases with exponential dwell
+    times, the classic model for bursty production traffic;
+  * :func:`trace_workload`       — replay explicit (t, prompt, output)
+    tuples, e.g. exported from a production log.
+
+Closed-loop (:class:`ClosedLoopWorkload`): a fixed population of users,
+each issuing its next request a think time after the previous response —
+arrival rate adapts to system speed, as in interactive serving.
+
+Everything is driven by a seeded ``numpy`` generator: the same seed
+reproduces the same trace bit-for-bit, which the capacity planner relies
+on when comparing configurations.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Request:
+    """One virtual inference request (token counts only — no content)."""
+
+    rid: int
+    t_arrive: float          # seconds since simulation start
+    prompt_tokens: int
+    output_tokens: int
+    user: int = -1           # closed-loop: issuing user index
+
+
+@dataclass(frozen=True)
+class LengthDist:
+    """Per-request token-length distribution (prompt or output).
+
+    ``kind``: ``fixed`` | ``uniform`` | ``lognormal``.  ``lognormal`` is
+    parameterized by its real-space mean and coefficient of variation
+    (production prompt/output lengths are heavy-tailed).  Samples are
+    clipped to ``[lo, hi]`` and rounded to ints.
+    """
+
+    kind: str = "lognormal"
+    mean: float = 512.0
+    cv: float = 0.5              # std / mean (lognormal only)
+    lo: int = 1
+    hi: int = 1 << 20
+
+    def __post_init__(self):
+        if self.kind not in ("fixed", "uniform", "lognormal"):
+            raise ValueError(f"unknown length dist {self.kind!r}")
+        if self.mean <= 0:
+            raise ValueError("mean must be > 0")
+        if self.lo < 1 or self.hi < self.lo:
+            raise ValueError("need 1 <= lo <= hi")
+
+    def sample(self, rng: np.random.Generator, n: int = 1) -> np.ndarray:
+        if self.kind == "fixed":
+            x = np.full(n, self.mean)
+        elif self.kind == "uniform":
+            # uniform with the given mean, +/- cv*mean half-width
+            half = self.cv * self.mean
+            x = rng.uniform(self.mean - half, self.mean + half, size=n)
+        else:
+            sigma2 = np.log1p(self.cv ** 2)
+            mu = np.log(self.mean) - sigma2 / 2
+            x = rng.lognormal(mu, np.sqrt(sigma2), size=n)
+        return np.clip(np.rint(x), self.lo, self.hi).astype(np.int64)
+
+
+def fixed(n: int) -> LengthDist:
+    return LengthDist(kind="fixed", mean=float(n), lo=n, hi=n)
+
+
+class Workload(abc.ABC):
+    """A traffic pattern the serving simulator can replay.
+
+    ``initial()`` returns requests whose arrival times are known up front
+    (open-loop traffic).  ``on_complete`` is the closed-loop feedback
+    hook: called when a request finishes, it may return the follow-up
+    request (arrival time already set to completion + think time).
+    """
+
+    name: str = "workload"
+
+    @abc.abstractmethod
+    def initial(self) -> List[Request]:
+        """Requests with arrival times known before the simulation starts."""
+
+    def on_complete(self, req: Request, t_done: float) -> Optional[Request]:
+        """Closed-loop feedback; open-loop workloads return None."""
+        return None
+
+    @property
+    def n_requests(self) -> int:
+        """Total requests this workload will issue (for progress/termination)."""
+        return len(self.initial())
+
+
+@dataclass
+class OpenLoopWorkload(Workload):
+    """A pre-generated arrival trace (the base of all open-loop shapes)."""
+
+    requests: List[Request]
+    name: str = "open_loop"
+
+    def initial(self) -> List[Request]:
+        return list(self.requests)
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.requests)
+
+    @property
+    def offered_rate(self) -> float:
+        """Empirical arrival rate of the trace (requests/second)."""
+        if len(self.requests) < 2:
+            return 0.0
+        span = self.requests[-1].t_arrive - self.requests[0].t_arrive
+        return (len(self.requests) - 1) / span if span > 0 else float("inf")
+
+
+def _make_requests(times: np.ndarray, prompt: LengthDist, output: LengthDist,
+                   rng: np.random.Generator) -> List[Request]:
+    n = len(times)
+    p = prompt.sample(rng, n)
+    o = output.sample(rng, n)
+    return [Request(rid=i, t_arrive=float(times[i]),
+                    prompt_tokens=int(p[i]), output_tokens=int(o[i]))
+            for i in range(n)]
+
+
+def poisson_workload(rate: float, n_requests: int,
+                     prompt: LengthDist = LengthDist(mean=512),
+                     output: LengthDist = LengthDist(mean=128),
+                     seed: int = 0) -> OpenLoopWorkload:
+    """Open-loop Poisson arrivals at ``rate`` requests/second."""
+    if rate <= 0:
+        raise ValueError("rate must be > 0")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_requests)
+    times = np.cumsum(gaps)
+    wl = OpenLoopWorkload(_make_requests(times, prompt, output, rng))
+    wl.name = f"poisson@{rate:g}rps"
+    return wl
+
+
+def bursty_workload(rate_low: float, rate_high: float, n_requests: int,
+                    mean_dwell: float = 10.0,
+                    prompt: LengthDist = LengthDist(mean=512),
+                    output: LengthDist = LengthDist(mean=128),
+                    seed: int = 0) -> OpenLoopWorkload:
+    """Two-state MMPP: Poisson at ``rate_low`` / ``rate_high``, switching
+    state after exponential dwell times with mean ``mean_dwell`` seconds."""
+    if min(rate_low, rate_high) <= 0:
+        raise ValueError("rates must be > 0")
+    rng = np.random.default_rng(seed)
+    times = np.empty(n_requests)
+    t = 0.0
+    hi = False
+    t_switch = rng.exponential(mean_dwell)
+    for i in range(n_requests):
+        rate = rate_high if hi else rate_low
+        gap = rng.exponential(1.0 / rate)
+        while t + gap > t_switch:
+            # memoryless: the residual gap re-scales with the new rate
+            frac = (t_switch - t) / gap if gap > 0 else 0.0
+            hi = not hi
+            new_rate = rate_high if hi else rate_low
+            gap = (t_switch - t) + (1 - frac) * gap * rate / new_rate
+            rate = new_rate
+            t_switch += rng.exponential(mean_dwell)
+        t += gap
+        times[i] = t
+    wl = OpenLoopWorkload(_make_requests(times, prompt, output, rng))
+    wl.name = f"bursty@{rate_low:g}/{rate_high:g}rps"
+    return wl
+
+
+def trace_workload(trace: Iterable[Tuple[float, int, int]],
+                   name: str = "trace") -> OpenLoopWorkload:
+    """Replay explicit ``(t_arrive, prompt_tokens, output_tokens)`` rows
+    (e.g. parsed from a production request log).  Rows are sorted by time."""
+    rows = sorted(trace, key=lambda r: r[0])
+    reqs = [Request(rid=i, t_arrive=float(t), prompt_tokens=int(p),
+                    output_tokens=int(o))
+            for i, (t, p, o) in enumerate(rows)]
+    wl = OpenLoopWorkload(reqs)
+    wl.name = name
+    return wl
+
+
+@dataclass
+class ClosedLoopWorkload(Workload):
+    """Fixed user population with think times (interactive serving).
+
+    Each of ``n_users`` users issues a request, waits for the response,
+    thinks for an exponential time with mean ``think_time``, and repeats —
+    ``requests_per_user`` times in total.  Offered load self-regulates: a
+    slow system sees a lower arrival rate, not an unbounded queue.
+    """
+
+    n_users: int = 8
+    requests_per_user: int = 16
+    think_time: float = 1.0
+    prompt: LengthDist = field(default_factory=lambda: LengthDist(mean=512))
+    output: LengthDist = field(default_factory=lambda: LengthDist(mean=128))
+    seed: int = 0
+    name: str = "closed_loop"
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._issued = {u: 0 for u in range(self.n_users)}
+        self._next_rid = 0
+
+    def _request(self, user: int, t: float) -> Request:
+        self._issued[user] += 1
+        rid = self._next_rid
+        self._next_rid += 1
+        return Request(
+            rid=rid, t_arrive=t,
+            prompt_tokens=int(self.prompt.sample(self._rng)[0]),
+            output_tokens=int(self.output.sample(self._rng)[0]),
+            user=user)
+
+    def initial(self) -> List[Request]:
+        # users ramp in over one mean think time (staggered session starts)
+        starts = self._rng.exponential(self.think_time, size=self.n_users)
+        return [self._request(u, float(starts[u]))
+                for u in range(self.n_users)]
+
+    def on_complete(self, req: Request, t_done: float) -> Optional[Request]:
+        if req.user < 0 or self._issued[req.user] >= self.requests_per_user:
+            return None
+        think = float(self._rng.exponential(self.think_time))
+        return self._request(req.user, t_done + think)
+
+    @property
+    def n_requests(self) -> int:
+        return self.n_users * self.requests_per_user

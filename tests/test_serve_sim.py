@@ -1,0 +1,425 @@
+"""Virtual serving subsystem: workload generators, cost models, schedulers,
+the traffic-driven simulator, capacity planning — and parity between the
+virtual continuous-batching scheduler and the real ``BatchedServer`` loop."""
+import json
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.sim.engine import ResourceSpec, Simulator, Task
+from repro.core.sim.trace import serving_chrome_trace
+from repro.serve_sim import (SLO, BucketedPrefillScheduler, CapacityPlanner,
+                             ClosedLoopWorkload, ContinuousBatchingScheduler,
+                             LengthDist, ServingCostModel,
+                             ServingCostModelBuilder, ServingSimulator,
+                             StaticBatchScheduler, bursty_workload,
+                             poisson_workload, simulate_serving,
+                             trace_workload)
+
+TOY = ServingCostModel(name="toy", prefill_fixed=1e-3, prefill_per_token=2e-5,
+                       decode_fixed=2e-3, decode_per_token=5e-4,
+                       decode_per_ctx_token=1e-7)
+
+
+def toy_poisson(n=200, rate=20.0, seed=0):
+    return poisson_workload(rate, n, prompt=LengthDist(mean=128, cv=0.5),
+                            output=LengthDist(mean=32, cv=0.5), seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# engine: dynamic event injection
+# ---------------------------------------------------------------------------
+
+
+def test_engine_timed_callback_injects_tasks():
+    sim = Simulator(resources={"r": ResourceSpec("r")})
+    sim.at(1.0, lambda: sim.inject(Task(0, "late", "L", "r", 2.0)))
+    res = sim.run()
+    rec = res.records[0]
+    assert rec.start == pytest.approx(1.0)
+    assert rec.end == pytest.approx(3.0)
+    assert res.makespan == pytest.approx(3.0)
+
+
+def test_engine_injected_task_waits_for_inflight_dep():
+    sim = Simulator([Task(0, "a", "L", "r", 2.0)])
+    sim.at(0.5, lambda: sim.inject(Task(1, "b", "L", "r", 1.0, deps=(0,))))
+    res = sim.run()
+    recs = {r.task.tid: r for r in res.records}
+    assert recs[1].start == pytest.approx(2.0)   # blocked on in-flight dep
+
+
+def test_engine_on_complete_chains_tasks():
+    done = []
+
+    def hook(task, now):
+        done.append((task.tid, now))
+        if task.tid < 3:
+            sim.inject(Task(task.tid + 1, f"t{task.tid + 1}", "L", "r", 1.0))
+
+    sim = Simulator([Task(0, "t0", "L", "r", 1.0)], on_complete=hook)
+    res = sim.run()
+    assert [d[0] for d in done] == [0, 1, 2, 3]
+    assert res.makespan == pytest.approx(4.0)
+
+
+def test_engine_next_task_id_monotone():
+    sim = Simulator([Task(5, "a", "L", "r", 1.0)])
+    assert sim.next_task_id() == 6
+    sim.inject(Task(6, "b", "L", "r", 1.0))
+    assert sim.next_task_id() == 7
+
+
+def test_engine_rejects_past_callback():
+    sim = Simulator()
+    with pytest.raises(ValueError):
+        sim.at(-1.0, lambda: None)
+
+
+# ---------------------------------------------------------------------------
+# workload generators (satellite: seeded determinism, rate, length sanity)
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_seeded_determinism():
+    a = poisson_workload(10.0, 100, seed=7).requests
+    b = poisson_workload(10.0, 100, seed=7).requests
+    c = poisson_workload(10.0, 100, seed=8).requests
+    assert a == b
+    assert a != c
+
+
+def test_poisson_empirical_rate_close():
+    wl = poisson_workload(50.0, 5000, seed=0)
+    assert wl.offered_rate == pytest.approx(50.0, rel=0.1)
+    times = [r.t_arrive for r in wl.requests]
+    assert times == sorted(times)
+    assert all(t > 0 for t in times)
+
+
+def test_bursty_deterministic_and_monotone():
+    a = bursty_workload(5.0, 50.0, 300, mean_dwell=2.0, seed=3).requests
+    b = bursty_workload(5.0, 50.0, 300, mean_dwell=2.0, seed=3).requests
+    assert a == b
+    times = [r.t_arrive for r in a]
+    assert times == sorted(times)
+    # empirical rate lands between the two phase rates
+    rate = (len(times) - 1) / (times[-1] - times[0])
+    assert 5.0 < rate < 50.0
+
+
+def test_length_dist_sanity():
+    rng = np.random.default_rng(0)
+    ln = LengthDist(kind="lognormal", mean=256, cv=0.5, lo=16, hi=1024)
+    x = ln.sample(rng, 4000)
+    assert x.min() >= 16 and x.max() <= 1024
+    assert np.mean(x) == pytest.approx(256, rel=0.1)
+    fx = LengthDist(kind="fixed", mean=64, lo=64, hi=64).sample(rng, 10)
+    assert (fx == 64).all()
+    un = LengthDist(kind="uniform", mean=100, cv=0.5, lo=1).sample(rng, 4000)
+    assert 50 <= un.min() and un.max() <= 150
+    with pytest.raises(ValueError):
+        LengthDist(kind="weird")
+
+
+def test_trace_workload_sorts_and_preserves_rows():
+    wl = trace_workload([(2.0, 10, 5), (1.0, 20, 6), (3.0, 30, 7)])
+    assert [r.t_arrive for r in wl.requests] == [1.0, 2.0, 3.0]
+    assert [r.prompt_tokens for r in wl.requests] == [20, 10, 30]
+    assert [r.rid for r in wl.requests] == [0, 1, 2]
+
+
+def test_closed_loop_issues_bounded_requests():
+    wl = ClosedLoopWorkload(n_users=4, requests_per_user=3, think_time=0.1,
+                            seed=1)
+    first = wl.initial()
+    assert len(first) == 4
+    assert wl.n_requests == 12
+    # each completion may spawn at most requests_per_user per user
+    follow = wl.on_complete(first[0], t_done=5.0)
+    assert follow is not None and follow.user == first[0].user
+    assert follow.t_arrive > 5.0
+    wl.on_complete(follow, 6.0)
+    assert wl.on_complete(follow, 7.0) is None   # budget exhausted
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.floats(0.5, 100.0))
+def test_poisson_property_deterministic_and_positive(seed, rate):
+    a = poisson_workload(rate, 50, seed=seed).requests
+    b = poisson_workload(rate, 50, seed=seed).requests
+    assert a == b
+    assert all(r.prompt_tokens >= 1 and r.output_tokens >= 1 for r in a)
+    gaps = np.diff([0.0] + [r.t_arrive for r in a])
+    assert (gaps >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_monotone():
+    assert TOY.prefill_time(512) > TOY.prefill_time(16)
+    assert TOY.decode_step_time(8, 4096) > TOY.decode_step_time(8, 128)
+    assert TOY.decode_step_time(8, 128) > TOY.decode_step_time(1, 128)
+    assert TOY.decode_step_time(0, 0) == 0.0
+
+
+def test_cost_builder_from_compiled_graphs():
+    from repro.core.avsm.model import annotate_system
+    from repro.core.config import get_arch
+    from repro.core.hw import SystemDescription, tpu_v5e_chip
+    from repro.core.taskgraph.builders import ShardPlan
+
+    cfg = get_arch("qwen1.5-0.5b").smoke
+    base = SystemDescription(name="chip", chip=tpu_v5e_chip(), torus=())
+    builder = ServingCostModelBuilder(cfg, shard=ShardPlan(data=1, model=1),
+                                      calib_batches=(1, 4),
+                                      calib_ctx=(128, 512))
+    cost = builder.model_for(base)
+    assert cost.prefill_per_token > 0
+    assert cost.decode_fixed > 0 or cost.decode_per_token > 0
+    n_compiles = builder.stats["compiles"]
+    # a physical variant re-annotates the cached graphs, no recompiles
+    fast = builder.model_for(annotate_system(base, mem_bandwidth=1638e9))
+    assert builder.stats["compiles"] == n_compiles
+    assert builder.stats["reannotations"] > 0
+    # double memory bandwidth must not slow serving down
+    assert fast.decode_step_time(4, 512) <= cost.decode_step_time(4, 512)
+
+
+# ---------------------------------------------------------------------------
+# serving simulator
+# ---------------------------------------------------------------------------
+
+
+def test_all_requests_complete_and_conserve_tokens():
+    wl = toy_poisson(300, seed=2)
+    rep = simulate_serving(TOY, ContinuousBatchingScheduler, wl, slots=8)
+    assert rep.n_requests == 300
+    assert rep.output_tokens == sum(r.output_tokens for r in wl.requests)
+    for m in rep.requests:
+        assert m.t_admit >= m.t_arrive - 1e-12
+        assert m.t_first >= m.t_admit
+        assert m.t_done >= m.t_first
+    assert 0.0 < rep.replica_util <= 1.0 + 1e-9
+
+
+def test_simulator_deterministic():
+    a = simulate_serving(TOY, ContinuousBatchingScheduler, toy_poisson(), slots=4)
+    b = simulate_serving(TOY, ContinuousBatchingScheduler, toy_poisson(), slots=4)
+    assert a.duration == b.duration
+    assert a.ttft.p99 == b.ttft.p99
+    assert [m.t_done for m in a.requests] == [m.t_done for m in b.requests]
+
+
+def test_replica_tasks_never_overlap():
+    rep = simulate_serving(TOY, ContinuousBatchingScheduler, toy_poisson(100),
+                           replicas=2, slots=4)
+    by_res = {}
+    for r in rep.sim_result.records:
+        by_res.setdefault(r.task.resource, []).append((r.start, r.end))
+    assert set(by_res) == {"replica0", "replica1"}
+    for spans in by_res.values():
+        spans.sort()
+        for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+            assert s2 >= e1 - 1e-9
+
+
+def test_static_batching_is_no_faster_than_continuous():
+    # all requests at t=0, mixed output lengths: static holds finished
+    # slots until the batch drains, continuous refills them
+    rows = [(0.0, 64, 8 + 4 * (i % 12)) for i in range(48)]
+    cont = simulate_serving(TOY, ContinuousBatchingScheduler,
+                            trace_workload(rows), slots=8)
+    stat = simulate_serving(TOY, lambda: StaticBatchScheduler(8, 0.1),
+                            trace_workload(rows), slots=8)
+    assert cont.n_requests == stat.n_requests == 48
+    assert stat.duration >= cont.duration - 1e-9
+    assert stat.ttft.p99 >= cont.ttft.p99 - 1e-9
+
+
+def test_bucketed_prefill_pays_padding():
+    rows = [(0.0, 65, 4) for _ in range(8)]    # 65 pads to 128
+    bucketed = simulate_serving(TOY, lambda: BucketedPrefillScheduler(128),
+                                trace_workload(rows), slots=8)
+    exact = simulate_serving(TOY, ContinuousBatchingScheduler,
+                             trace_workload(rows), slots=8)
+    assert bucketed.n_requests == exact.n_requests == 8
+    # bucketed prefill does strictly more prefill work
+    assert bucketed.ttft.mean > exact.ttft.mean - 1e-12
+
+
+def test_more_replicas_cut_tail_latency():
+    wl = lambda: toy_poisson(400, rate=30.0, seed=5)   # noqa: E731
+    one = simulate_serving(TOY, ContinuousBatchingScheduler, wl(), replicas=1,
+                           slots=8)
+    four = simulate_serving(TOY, ContinuousBatchingScheduler, wl(), replicas=4,
+                            slots=8)
+    assert four.ttft.p99 < one.ttft.p99
+
+
+def test_closed_loop_serving_completes():
+    wl = ClosedLoopWorkload(n_users=6, requests_per_user=5, think_time=0.05,
+                            prompt=LengthDist(mean=64), output=LengthDist(mean=16),
+                            seed=9)
+    rep = simulate_serving(TOY, ContinuousBatchingScheduler, wl, slots=4)
+    assert rep.n_requests == 30
+
+
+# ---------------------------------------------------------------------------
+# parity: virtual continuous batching vs the real BatchedServer loop
+# ---------------------------------------------------------------------------
+
+# (arrival_step, prompt_len, max_new): arrivals join the queue after that
+# many real decode steps; the server never goes idle mid-trace.
+PARITY_TRACE = [(0, 3, 4), (0, 2, 6), (0, 2, 3), (2, 1, 4), (3, 2, 3),
+                (4, 1, 2), (4, 2, 5)]
+PARITY_SLOTS = 2
+
+
+def _run_real_server(trace, slots):
+    from repro.launch.serve import BatchedServer, Request
+
+    vocab = 8
+
+    def stub(params, state, tokens, pos):
+        return np.zeros((slots, vocab), np.float32), state
+
+    server = BatchedServer(cfg=None, batch_slots=slots, max_len=64,
+                           decode_fn=stub, record_events=True)
+    server.load(None)
+    reqs = [Request(i, np.ones(p, np.int32), m)
+            for i, (_, p, m) in enumerate(trace)]
+    pending = []
+    steps_taken = 0
+    guard = 0
+    while not all(r.done for r in reqs):
+        for i, (s, _, _) in enumerate(trace):
+            if s == steps_taken:
+                pending.append(reqs[i])
+        while pending and server.admit(pending[0]):
+            pending.pop(0)
+        server.step()
+        steps_taken += 1
+        guard += 1
+        assert guard < 500, "real server failed to drain the trace"
+    return server.events
+
+
+def _run_virtual_server(trace, slots):
+    unit = ServingCostModel(name="unit", prefill_fixed=0.0,
+                            prefill_per_token=0.0, decode_fixed=1.0,
+                            decode_per_token=0.0, decode_per_ctx_token=0.0)
+    rows = [(0.0 if s == 0 else s - 0.5, p, m) for s, p, m in trace]
+    sim = ServingSimulator(unit, ContinuousBatchingScheduler,
+                           trace_workload(rows), replicas=1, slots=slots,
+                           record_events=True)
+    return sim.run().events
+
+
+def test_virtual_continuous_matches_real_batched_server():
+    real = _run_real_server(PARITY_TRACE, PARITY_SLOTS)
+    virtual = _run_virtual_server(PARITY_TRACE, PARITY_SLOTS)
+    assert virtual == real
+
+
+# ---------------------------------------------------------------------------
+# capacity planning
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_planner_finds_minimal_replicas():
+    slo = SLO(ttft_p99=0.4, tpot_p99=0.02)
+    planner = CapacityPlanner(
+        TOY, ContinuousBatchingScheduler,
+        lambda: toy_poisson(400, rate=60.0, seed=0), slo)
+    plan = planner.plan(axis="replicas", cap=16, slots=8)
+    assert plan.feasible
+    assert slo.satisfied_by(plan.report)
+    # every probed value below the answer failed the SLO
+    below = [v for v, ok in plan.probes.items() if v < plan.value]
+    assert all(not plan.probes[v] for v in below)
+    assert plan.value == 1 or below
+
+
+def test_capacity_planner_reports_infeasible():
+    heavy = ServingCostModel(name="slow", decode_fixed=0.5,
+                             decode_per_token=0.1)
+    plan = CapacityPlanner(
+        heavy, ContinuousBatchingScheduler,
+        lambda: toy_poisson(50, rate=50.0, seed=1),
+        SLO(ttft_p99=0.01)).plan(cap=4)
+    assert not plan.feasible
+    assert plan.value == 4
+
+
+def test_capacity_planner_slots_axis():
+    slo = SLO(e2e_p99=3.0)
+    plan = CapacityPlanner(
+        TOY, ContinuousBatchingScheduler,
+        lambda: toy_poisson(200, rate=25.0, seed=2), slo).plan(
+            axis="slots", cap=32, replicas=1)
+    assert plan.feasible
+    assert slo.satisfied_by(plan.report)
+
+
+# ---------------------------------------------------------------------------
+# DSE serving axis + trace export
+# ---------------------------------------------------------------------------
+
+
+def test_dse_sweep_serving_axis():
+    from repro.core.avsm.model import annotate_system
+    from repro.core.dse import DesignSpaceExplorer
+    from repro.core.hw import SystemDescription, tpu_v5e_chip
+    from repro.core.taskgraph.ops import matmul_op
+
+    class FixedBuilder:
+        """Stands in for ServingCostModelBuilder (keyed per system)."""
+
+        def model_for(self, system):
+            scale = 819e9 / system.chip.memory.bandwidth
+            return ServingCostModel(
+                name=system.name, decode_fixed=2e-3 * scale,
+                decode_per_token=5e-4 * scale, prefill_per_token=2e-5)
+
+    base = SystemDescription(name="chip", chip=tpu_v5e_chip(), torus=())
+    systems = {"base": base,
+               "fast": annotate_system(base, mem_bandwidth=1638e9)}
+    dse = DesignSpaceExplorer({"w": [matmul_op("m", "m", 64, 64, 64)]})
+    results = dse.sweep_serving(
+        systems,
+        traffics={"poisson": lambda: toy_poisson(150, seed=0),
+                  "bursty": lambda: bursty_workload(5, 40, 150, seed=0)},
+        schedulers={"continuous": ContinuousBatchingScheduler,
+                    "static": lambda: StaticBatchScheduler(4, 0.1)},
+        cost_builder=FixedBuilder(), replicas=1, slots=4)
+    assert len(results) == 2 * 2 * 2
+    assert all(r.report.n_requests == 150 for r in results)
+    ranked = [r.ttft_p99 for r in results]
+    assert ranked == sorted(ranked)
+
+
+def test_serving_chrome_trace_valid(tmp_path):
+    rep = simulate_serving(TOY, ContinuousBatchingScheduler, toy_poisson(40),
+                           replicas=2, slots=4)
+    p = tmp_path / "serve.trace.json"
+    serving_chrome_trace(rep, str(p))
+    data = json.loads(p.read_text())
+    evs = data["traceEvents"]
+    assert any(e.get("pid") == 0 and e.get("ph") == "X" for e in evs)
+    assert any(e.get("pid") == 1 and e.get("cat") == "request" for e in evs)
+    assert any(e.get("ph") == "C" for e in evs)
+    req_spans = [e for e in evs if e.get("cat") == "request"]
+    assert len(req_spans) == rep.n_requests
+    # queue-depth counter never dips negative (arrival/admit tie-break)
+    depths = [e["args"]["requests"] for e in evs if e.get("ph") == "C"]
+    assert min(depths) >= 0
+    # exactly one metadata row per (replica, slot) lane
+    lane_meta = [e for e in evs
+                 if e.get("pid") == 1 and e.get("ph") == "M"
+                 and e.get("name") == "thread_name"]
+    assert len(lane_meta) == len({(e["tid"]) for e in lane_meta})
