@@ -1,0 +1,132 @@
+"""Machine-readable perf trajectory: writes ``BENCH_pr3.json``.
+
+Collects the current throughput of the three hot paths this PR optimized
+(DES engine events/sec, DSE what-if points/sec, serve_sim requests/sec,
+plus wall times) and records them next to the pre-PR baseline, so the
+perf trajectory is tracked across PRs::
+
+    PYTHONPATH=src python benchmarks/run.py --json        # BENCH_pr3.json
+    PYTHONPATH=src python benchmarks/perf_record.py       # same, standalone
+
+``BASELINE_PR2`` was measured at commit d90c17b (the PR 2 tree, seed
+dict-based engine with the O(n)-per-event shared channel) on the same
+container that produced the committed ``BENCH_pr3.json``; absolute
+numbers are machine-dependent, the *ratios* are the tracked signal.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import sys
+import time
+from typing import Dict
+
+# Measured at d90c17b (pre-PR3), same best-of-3 harness as collect() below.
+BASELINE_PR2: Dict = {
+    "engine_fifo_events_per_sec": {"dict": 82_309.0},
+    "engine_shared_tasks_per_sec": {
+        "200": 29_831.0, "800": 8_710.0, "3200": 3_217.0, "6400": 1_548.0},
+    "what_if_points_per_sec": {
+        "roofline": 289.5, "analytic": 67.9, "des": 7.0},
+    "serve_sim_10k": {"wall_seconds": 5.235, "requests_per_sec": 1_910.0},
+}
+
+
+def _what_if_points_per_sec() -> Dict[str, float]:
+    import numpy as np
+
+    from repro.core.config import LM_SHAPES, get_arch
+    from repro.core.dse import DesignSpaceExplorer
+    from repro.core.hw import tpu_v5e_pod
+    from repro.core.taskgraph.builders import ShardPlan, lm_step_ops
+
+    spec = get_arch("qwen1.5-0.5b")
+    ops = lm_step_ops(spec.model, LM_SHAPES["train_4k"], ShardPlan())
+    base = tpu_v5e_pod()
+    dse = DesignSpaceExplorer({"w": ops})
+    dse.compiled("w", base).anno_arrays()       # steady-state sweep loop
+    values = list(np.linspace(50e9, 200e9, 16))
+    out = {}
+    for backend in ("roofline", "analytic", "des"):
+        t0 = time.perf_counter()
+        dse.what_if_sweep("w", base, "link_bandwidth", values,
+                          backend=backend)
+        out[backend] = len(values) / (time.perf_counter() - t0)
+    return out
+
+
+def _serve_sim_10k() -> Dict[str, float]:
+    from repro.core.config import get_arch
+    from repro.core.hw import SystemDescription, tpu_v5e_chip
+    from repro.core.taskgraph.builders import ShardPlan
+    from repro.serve_sim import (ContinuousBatchingScheduler, LengthDist,
+                                 ServingCostModelBuilder, poisson_workload,
+                                 simulate_serving)
+
+    cfg = get_arch("qwen1.5-0.5b").model
+    base = SystemDescription(name="v5e_chip", chip=tpu_v5e_chip(), torus=())
+    cost = ServingCostModelBuilder(
+        cfg, shard=ShardPlan(data=1, model=1)).model_for(base)
+    wl = poisson_workload(120.0, 10_000,
+                          prompt=LengthDist(mean=512, cv=0.6),
+                          output=LengthDist(mean=96, cv=0.5), seed=0)
+    t0 = time.perf_counter()
+    rep = simulate_serving(cost, ContinuousBatchingScheduler, wl,
+                           replicas=4, slots=8)
+    wall = time.perf_counter() - t0
+    return {"wall_seconds": wall, "requests_per_sec": rep.n_requests / wall}
+
+
+def collect() -> Dict:
+    from benchmarks import bench_engine
+
+    return {
+        "engine_fifo_events_per_sec": bench_engine.fifo_events_per_sec(),
+        "engine_shared_tasks_per_sec": bench_engine.shared_tasks_per_sec(),
+        "what_if_points_per_sec": _what_if_points_per_sec(),
+        "serve_sim_10k": _serve_sim_10k(),
+    }
+
+
+def _speedups(base: Dict, cur: Dict) -> Dict:
+    out: Dict = {}
+    for key, bval in base.items():
+        cval = cur.get(key)
+        if isinstance(bval, dict):
+            out[key] = {k: round(cval[k] / v, 2) if k in cval and v else None
+                        for k, v in bval.items()}
+        elif bval:
+            out[key] = round(cval / bval, 2)
+    # wall times speed up as baseline/current
+    ws = out.get("serve_sim_10k", {})
+    if "wall_seconds" in ws and ws["wall_seconds"]:
+        ws["wall_seconds"] = round(1.0 / ws["wall_seconds"], 2)
+    return out
+
+
+def write(path: str = "BENCH_pr3.json") -> Dict:
+    current = collect()
+    doc = {
+        "pr": 3,
+        "description": "Fast simulation core: virtual-time processor "
+                       "sharing, array-backed DES hot path, vectorized "
+                       "what-if sweeps, parallel DSE",
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "baseline_pr2": BASELINE_PR2,
+        "current": current,
+        "speedup_vs_pr2": _speedups(BASELINE_PR2, current),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    return doc
+
+
+if __name__ == "__main__":
+    import os
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    out = write(sys.argv[1] if len(sys.argv) > 1 else "BENCH_pr3.json")
+    print(json.dumps(out["speedup_vs_pr2"], indent=2))

@@ -1,0 +1,66 @@
+"""CI perf-smoke: fail if simulation-core throughput regresses.
+
+Runs the DES and serve-sim microbenchmarks and enforces conservative
+floors — roughly a third of the throughput measured on the PR 3 container
+(see ``BENCH_pr3.json``), so ordinary CI-machine variance passes but a
+reintroduced O(n^2) hot path or per-task object churn fails loudly:
+
+  * fifo static fast path (warm cache)  >= 120k events/s
+    (seed dict engine: ~86k; PR 3: ~400k)
+  * shared-channel burst, n=3200       >= 25k tasks/s
+    (seed: ~2.3k — the quadratic collapse; PR 3: ~160k)
+  * shared-channel flatness n=6400/200 >= 0.3
+    (quadratic scaling gives ~0.12: completions per burst grow 32x while
+    per-event cost also grows 32x)
+  * serve_sim 10k requests             >= 4500 req/wall-s
+    (seed: ~1.9k; PR 3: ~14k)
+
+Exit code 0 on pass, 1 on any floor violation.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+FLOORS = {
+    "fifo_static_warm_events_per_sec": 120_000.0,
+    "shared_3200_tasks_per_sec": 25_000.0,
+    "shared_flatness_6400_over_200": 0.3,
+    "serve_sim_requests_per_sec": 4_500.0,
+}
+
+
+def main() -> int:
+    from benchmarks import bench_engine
+    from benchmarks.perf_record import _serve_sim_10k
+
+    measured = {}
+    fifo = bench_engine.fifo_events_per_sec()
+    measured["fifo_static_warm_events_per_sec"] = fifo["static_warm"]
+    shared = bench_engine.shared_tasks_per_sec()
+    measured["shared_3200_tasks_per_sec"] = shared["3200"]
+    measured["shared_flatness_6400_over_200"] = \
+        shared["6400"] / shared["200"]
+    serve = _serve_sim_10k()
+    measured["serve_sim_requests_per_sec"] = serve["requests_per_sec"]
+
+    failed = False
+    for key, floor in FLOORS.items():
+        got = measured[key]
+        status = "ok " if got >= floor else "FAIL"
+        if got < floor:
+            failed = True
+        print(f"[{status}] {key}: {got:,.1f} (floor {floor:,.1f})")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    t0 = time.perf_counter()
+    rc = main()
+    print(f"perf-smoke finished in {time.perf_counter() - t0:.1f}s -> "
+          f"{'FAIL' if rc else 'PASS'}")
+    sys.exit(rc)

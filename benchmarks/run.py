@@ -5,16 +5,22 @@
 #   Fig 5 -> bench_accuracy            (virtual model vs physical HW)
 #   Fig 6/7 -> bench_roofline_vgg      (per-layer roofline, DilatedVGG)
 #   assignment roofline table -> bench_roofline_cells (40-cell grid)
+#
+# ``--json [PATH]`` additionally writes the machine-readable perf record
+# (events/sec, points/sec, requests/sec, wall times vs the pre-PR
+# baseline) to PATH (default BENCH_pr3.json) — see benchmarks/perf_record.
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
-def main() -> None:
-    from benchmarks import (bench_accuracy, bench_dse, bench_gantt,
-                            bench_roofline_cells, bench_roofline_vgg,
-                            bench_runtime_breakdown, bench_serve_sim)
+def main(argv) -> None:
+    from benchmarks import (bench_accuracy, bench_dse, bench_engine,
+                            bench_gantt, bench_roofline_cells,
+                            bench_roofline_vgg, bench_runtime_breakdown,
+                            bench_serve_sim)
 
     suites = [
         ("runtime_breakdown", bench_runtime_breakdown),
@@ -22,6 +28,7 @@ def main() -> None:
         ("accuracy", bench_accuracy),
         ("roofline_vgg", bench_roofline_vgg),
         ("roofline_cells", bench_roofline_cells),
+        ("engine", bench_engine),
         ("dse", bench_dse),
         ("serve_sim", bench_serve_sim),
     ]
@@ -38,6 +45,18 @@ def main() -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
 
+    if "--json" in argv:
+        import subprocess
+
+        i = argv.index("--json")
+        path = (argv[i + 1] if i + 1 < len(argv)
+                and not argv[i + 1].startswith("-") else "BENCH_pr3.json")
+        # fresh interpreter: the JAX-heavy suites above leave memory/GC
+        # pressure that skews the microbenchmark timings
+        script = os.path.join(os.path.dirname(__file__), "perf_record.py")
+        subprocess.run([sys.executable, script, path], check=True)
+        print(f"\nwrote perf record -> {path}")
+
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -21,13 +21,14 @@ Example::
 """
 from __future__ import annotations
 
-import time
+import dataclasses
 from dataclasses import dataclass
 from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
                     Sequence, Tuple)
 
 from repro.core.estimator import EstimateReport, get_backend
 from repro.core.hw import SystemDescription
+from repro.core.parallel import parallel_map
 from repro.core.taskgraph.compiler import (CompiledGraph, CompilePlan,
                                            compile_ops, reannotate,
                                            structural_key)
@@ -109,21 +110,40 @@ class DesignSpaceExplorer:
     def sweep(self, systems: Mapping[str, SystemDescription],
               plans: Optional[Sequence[CompilePlan]] = None,
               workloads: Optional[Iterable[str]] = None,
-              backend: str = "roofline") -> List[SweepResult]:
+              backend: str = "roofline",
+              workers: int = 1) -> List[SweepResult]:
         """Estimate every (workload, system, plan) point with ``backend``,
-        sorted fastest-first."""
+        sorted fastest-first.
+
+        ``workers > 1`` fans the points out over forked worker processes
+        (results are deterministic and ordered; reports come back with
+        ``sim_result=None``).  Structural compiles happen in the parent
+        first, so children inherit the graph cache copy-on-write.
+        """
         plans = list(plans) if plans else [CompilePlan()]
         names = list(workloads) if workloads else list(self.workloads)
         est = get_backend(backend)
-        out: List[SweepResult] = []
-        for w in names:
-            for sname, system in systems.items():
-                for plan in plans:
-                    graph = self.compiled(w, system, plan)
-                    self.stats["estimates"] += 1
-                    out.append(SweepResult(
-                        workload=w, system=sname, plan=plan,
-                        report=est.estimate(graph)))
+        points = [(w, sname, plan)
+                  for w in names
+                  for sname in systems
+                  for plan in plans]
+        self.stats["estimates"] += len(points)
+        if workers > 1 and len(points) > 1:
+            for w, sname, plan in points:      # warm the cache pre-fork
+                self.compiled(w, systems[sname], plan)
+
+            def one(pt: Tuple) -> EstimateReport:
+                w, sname, plan = pt
+                rep = est.estimate(self.compiled(w, systems[sname], plan))
+                rep.sim_result = None
+                return rep
+
+            reports = parallel_map(one, points, workers)
+        else:
+            reports = [est.estimate(self.compiled(w, systems[sname], plan))
+                       for w, sname, plan in points]
+        out = [SweepResult(workload=w, system=sname, plan=plan, report=rep)
+               for (w, sname, plan), rep in zip(points, reports)]
         out.sort(key=lambda r: r.step_time)
         return out
 
@@ -132,10 +152,13 @@ class DesignSpaceExplorer:
                 workloads: Optional[Iterable[str]] = None,
                 prune_backend: str = "roofline",
                 confirm_backend: str = "des",
-                keep: int = 4) -> List[SweepResult]:
+                keep: int = 4,
+                workers: int = 1) -> List[SweepResult]:
         """Backend escalation: prune the sweep with a cheap backend, then
         confirm the ``keep`` most promising points per workload with the
-        high-fidelity backend.  Returns confirmed points fastest-first."""
+        high-fidelity backend.  Returns confirmed points fastest-first.
+        ``workers > 1`` parallelizes the confirmation stage (the pruning
+        backend is µs-fast; the causal DES dominates)."""
         ranked = self.sweep(systems, plans, workloads, backend=prune_backend)
         confirm = get_backend(confirm_backend)
         survivors: List[SweepResult] = []
@@ -144,10 +167,26 @@ class DesignSpaceExplorer:
             if seen.get(r.workload, 0) >= keep:
                 continue
             seen[r.workload] = seen.get(r.workload, 0) + 1
-            graph = self.compiled(r.workload, systems[r.system], r.plan)
-            self.stats["estimates"] += 1
-            r.confirmed = confirm.estimate(graph)
             survivors.append(r)
+        self.stats["estimates"] += len(survivors)
+        if workers > 1 and len(survivors) > 1:
+            for r in survivors:                # warm the cache pre-fork
+                self.compiled(r.workload, systems[r.system], r.plan)
+
+            def one(r: SweepResult) -> EstimateReport:
+                rep = confirm.estimate(
+                    self.compiled(r.workload, systems[r.system], r.plan))
+                rep.sim_result = None
+                return rep
+
+            confirmed = parallel_map(one, survivors, workers)
+        else:
+            confirmed = [
+                confirm.estimate(
+                    self.compiled(r.workload, systems[r.system], r.plan))
+                for r in survivors]
+        for r, rep in zip(survivors, confirmed):
+            r.confirmed = rep
         survivors.sort(key=lambda r: r.step_time)
         return survivors
 
@@ -157,7 +196,8 @@ class DesignSpaceExplorer:
                       traffics: Mapping[str, Callable[[], object]],
                       schedulers: Mapping[str, Callable[[], object]],
                       cost_builder, replicas: int = 1,
-                      slots: int = 8) -> List[ServingSweepResult]:
+                      slots: int = 8,
+                      workers: int = 1) -> List[ServingSweepResult]:
         """Traffic-driven serving axis: every (system, traffic, scheduler)
         scenario is simulated with ``repro.serve_sim`` on a cost model the
         ``cost_builder`` derives from this explorer's compiled-graph fast
@@ -165,20 +205,43 @@ class DesignSpaceExplorer:
         variants).  ``traffics``/``schedulers`` map names to zero-arg
         factories returning fresh seeded instances per run.  Results are
         sorted by p99 TTFT (best first).
+
+        ``workers > 1`` runs the scenarios on a forked worker pool.  Each
+        scenario builds its workload/scheduler from its own seeded
+        factories, so results are bit-identical to a serial run — asserted
+        by ``tests/test_engine_parity.py`` — except that reports come back
+        with ``sim_result=None`` (traces stay in the worker).
         """
         from repro.serve_sim.simulator import simulate_serving
 
-        out: List[ServingSweepResult] = []
-        for sname, system in systems.items():
-            cost = cost_builder.model_for(system)
-            for tname, make_traffic in traffics.items():
-                for kname, make_sched in schedulers.items():
-                    self.stats["estimates"] += 1
-                    rep = simulate_serving(cost, make_sched, make_traffic(),
-                                           replicas=replicas, slots=slots)
-                    out.append(ServingSweepResult(
-                        traffic=tname, scheduler=kname, system=sname,
-                        report=rep))
+        scenarios = [(sname, tname, kname)
+                     for sname in systems
+                     for tname in traffics
+                     for kname in schedulers]
+        self.stats["estimates"] += len(scenarios)
+        costs: Dict[str, object] = {}     # one cost model per system
+
+        def run_one(sc: Tuple[str, str, str],
+                    keep_detail: bool = True) -> ServingSweepResult:
+            sname, tname, kname = sc
+            cost = costs.get(sname)
+            if cost is None:
+                cost = costs[sname] = cost_builder.model_for(systems[sname])
+            rep = simulate_serving(cost, schedulers[kname],
+                                   traffics[tname](),
+                                   replicas=replicas, slots=slots)
+            if not keep_detail:
+                rep = dataclasses.replace(rep, sim_result=None)
+            return ServingSweepResult(
+                traffic=tname, scheduler=kname, system=sname, report=rep)
+
+        if workers > 1 and len(scenarios) > 1:
+            for sname, system in systems.items():   # warm pre-fork: children
+                costs[sname] = cost_builder.model_for(system)   # inherit
+            out = parallel_map(lambda sc: run_one(sc, keep_detail=False),
+                               scenarios, workers)
+        else:
+            out = [run_one(sc) for sc in scenarios]
         out.sort(key=lambda r: r.ttft_p99)
         return out
 
@@ -187,18 +250,29 @@ class DesignSpaceExplorer:
     def what_if_sweep(self, workload: str, base: SystemDescription,
                       key: str, values: Sequence[float],
                       plan: Optional[CompilePlan] = None,
-                      backend: str = "des") -> List[Tuple[float, EstimateReport]]:
+                      backend: str = "des",
+                      workers: int = 1) -> List[Tuple[float, EstimateReport]]:
         """Sweep one physical annotation (e.g. ``link_bandwidth``) through
-        ``values`` on the fast re-annotation path."""
+        ``values`` on the fast re-annotation path.
+
+        All values are evaluated in one batch: the re-annotated variants
+        share the cached graph's task structure, so the roofline/analytic
+        backends reduce the whole sweep to vectorized operations over one
+        duration matrix (n_values x n_tasks), and the DES backend reuses
+        one dependency-CSR cache across values (optionally fanned out over
+        ``workers`` forked processes).  Parity with the per-value loop is
+        asserted by ``tests/test_engine_parity.py``.
+        """
         from repro.core.avsm.model import AVSM
 
+        values = list(values)
         plan = plan or CompilePlan()
         graph = self.compiled(workload, base, plan)
         avsm = AVSM(system=base, graph=graph)
-        out = []
-        for v in values:
-            rep = avsm.what_if(**{key: v}).estimate(backend)
-            self.stats["reannotations"] += 1
-            self.stats["estimates"] += 1
-            out.append((v, rep))
-        return out
+        variants = [avsm.what_if(**{key: v}) for v in values]
+        est = get_backend(backend)
+        reports = est.estimate_many([a.graph for a in variants],
+                                    workers=workers)
+        self.stats["reannotations"] += len(values)
+        self.stats["estimates"] += len(values)
+        return list(zip(values, reports))

@@ -104,6 +104,29 @@ class EstimatorBackend(abc.ABC):
                  build_seconds: float = 0.0) -> EstimateReport:
         """Estimate one step of ``graph`` on its system description."""
 
+    def estimate_many(self, graphs: List[CompiledGraph],
+                      workers: int = 1) -> List[EstimateReport]:
+        """Estimate a batch of graphs — typically re-annotated what-if
+        variants of one structure (``DesignSpaceExplorer.what_if_sweep``).
+
+        The base implementation loops (optionally across a forked worker
+        pool); the roofline/analytic backends override it with vectorized
+        paths that evaluate every variant as one duration matrix.  When
+        ``workers > 1`` the returned reports carry ``sim_result=None``
+        (simulation traces do not cross the process boundary).
+        """
+        graphs = list(graphs)
+        if workers > 1 and len(graphs) > 1:
+            from repro.core.parallel import parallel_map
+
+            def one(g: CompiledGraph) -> EstimateReport:
+                rep = self.estimate(g)
+                rep.sim_result = None
+                return rep
+
+            return parallel_map(one, graphs, workers)
+        return [self.estimate(g) for g in graphs]
+
 
 _REGISTRY: Dict[str, Callable[[], EstimatorBackend]] = {}
 _INSTANCES: Dict[str, EstimatorBackend] = {}
@@ -132,37 +155,49 @@ def available_backends() -> List[str]:
     return sorted(_REGISTRY, key=lambda n: _REGISTRY[n].fidelity)
 
 
+def layer_static(graph: CompiledGraph) -> List[tuple]:
+    """System-independent per-layer footprints ``(name, flops, hbm_bytes,
+    coll_bytes)`` in first-op order — computed once per task-graph
+    structure and shared across re-annotated what-if variants (they alias
+    the same op list)."""
+    rows = graph._shared.get("layer_static")
+    if rows is None:
+        per_layer: Dict[str, List[float]] = {}
+        for op in graph.ops:
+            d = per_layer.setdefault(op.layer, [0.0, 0.0, 0.0])
+            if op.coll is not None:
+                d[2] += op.coll.payload
+            else:
+                d[0] += op.flops
+                d[1] += op.total_bytes
+        rows = [(name, v[0], v[1], v[2]) for name, v in per_layer.items()]
+        graph._shared["layer_static"] = rows
+    return rows
+
+
 def layer_reports(graph: CompiledGraph,
                   durations: Dict[str, float]) -> List[LayerReport]:
     """Per-layer roofline classification shared by all backends."""
     chip = graph.system.chip
-    per_layer: Dict[str, Dict[str, float]] = {}
-    for op in graph.ops:
-        d = per_layer.setdefault(op.layer, {"flops": 0.0, "bytes": 0.0,
-                                            "coll": 0.0})
-        if op.coll is not None:
-            d["coll"] += op.coll.payload
-        else:
-            d["flops"] += op.flops
-            d["bytes"] += op.total_bytes
     peak = chip.compute.matrix_flops
     bw = chip.memory.bandwidth
+    lbw = max(chip.link.bandwidth, 1.0)
     layers = []
-    for name, vals in per_layer.items():
+    for name, flops, hbm_bytes, coll_bytes in layer_static(graph):
         t = durations.get(name, 0.0)
-        t_c = vals["flops"] / peak
-        t_m = vals["bytes"] / bw
-        t_i = vals["coll"] / max(chip.link.bandwidth, 1.0)
+        t_c = flops / peak
+        t_m = hbm_bytes / bw
+        t_i = coll_bytes / lbw
         dominant = max(("compute", t_c), ("memory", t_m),
                        ("collective", t_i), key=lambda kv: kv[1])
         bound = dominant[0]
         if t > 0 and max(t_c, t_m, t_i) < 0.5 * t:
             bound = "latency"
         layers.append(LayerReport(
-            name=name, time=t, flops=vals["flops"],
-            hbm_bytes=vals["bytes"], coll_bytes=vals["coll"],
-            intensity=vals["flops"] / max(vals["bytes"], 1.0),
-            achieved_flops=vals["flops"] / t if t > 0 else 0.0,
+            name=name, time=t, flops=flops,
+            hbm_bytes=hbm_bytes, coll_bytes=coll_bytes,
+            intensity=flops / max(hbm_bytes, 1.0),
+            achieved_flops=flops / t if t > 0 else 0.0,
             bound=bound))
     return layers
 

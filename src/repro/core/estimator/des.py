@@ -13,7 +13,7 @@ import time
 from repro.core.estimator import (EstimateReport, EstimatorBackend,
                                   layer_reports, register_backend)
 from repro.core.taskgraph.compiler import CompiledGraph
-from repro.core.sim.engine import Simulator
+from repro.core.sim.engine import simulate_static
 
 
 @register_backend
@@ -24,9 +24,14 @@ class DesBackend(EstimatorBackend):
     def estimate(self, graph: CompiledGraph,
                  build_seconds: float = 0.0) -> EstimateReport:
         t0 = time.perf_counter()
-        sim = Simulator(graph.tasks, resources=graph.resources,
-                        durations=graph.durations)
-        result = sim.run()
+        # Array-backed fast path: compiled graphs are static (no callbacks,
+        # no injection), so the dependency CSR is precomputed once per
+        # structure (shared across re-annotated what-if variants) and the
+        # event loop runs over flat duration arrays with records
+        # materialized lazily — several times faster than the general
+        # dict-based engine, with exact parity (tests/test_engine_parity).
+        result = simulate_static(graph.tasks, graph.resources,
+                                 graph.durations, cache=graph.sim_cache())
 
         def util(prefix: str) -> float:
             if result.makespan <= 0:

@@ -1,0 +1,70 @@
+"""Deterministic process-parallel map for sweep fan-out.
+
+The DSE and serving sweeps are embarrassingly parallel — every point is an
+independent, seeded simulation — but the payloads (explorers with compiled
+graph caches, cost-model builders, lambda scheduler factories) are not
+picklable.  ``parallel_map`` therefore uses the fork start method: the
+work function and item list are stashed in a module global *before* the
+pool forks, children inherit them by memory copy, and only the item
+*index* crosses the process boundary.  Results come back pickled in item
+order, so output is deterministic and bit-identical to a serial run
+(each item's computation is self-contained and seeded).
+
+Falls back to a serial map when ``workers <= 1``, when fork is
+unavailable (non-POSIX platforms), or when the pool fails for any reason
+— parallelism is a pure accelerator, never a semantic change.
+
+Constraint: the work function must not call into multithreaded native
+runtimes (JAX/XLA) inside the child — forked children inherit the
+parent's thread state without its threads.  The sweep workloads here are
+pure-Python/numpy simulations, which is why the fork warning CPython
+emits when JAX is merely *imported* in the parent is suppressed.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Callable, List, Sequence, TypeVar
+
+T = TypeVar("T")
+R = TypeVar("R")
+
+# (fn, items) visible to forked children; only valid while a pool is live.
+_PAYLOAD = None
+
+
+def _call_indexed(i: int):
+    fn, items = _PAYLOAD
+    return fn(items[i])
+
+
+def parallel_map(fn: Callable[[T], R], items: Sequence[T],
+                 workers: int = 1) -> List[R]:
+    """``[fn(x) for x in items]``, fanned out over ``workers`` forked
+    processes when ``workers > 1``.  ``fn``'s return values must be
+    picklable; ``fn`` and the items themselves need not be."""
+    items = list(items)
+    if workers <= 1 or len(items) <= 1:
+        return [fn(x) for x in items]
+    try:
+        import multiprocessing as mp
+
+        ctx = mp.get_context("fork")
+    except (ImportError, ValueError):        # platform without fork
+        return [fn(x) for x in items]
+    global _PAYLOAD
+    if _PAYLOAD is not None:                 # no nested pools
+        return [fn(x) for x in items]
+    _PAYLOAD = (fn, items)
+    try:
+        from concurrent.futures import ProcessPoolExecutor
+
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message=".*os.fork.*", category=RuntimeWarning)
+            with ProcessPoolExecutor(max_workers=min(workers, len(items)),
+                                     mp_context=ctx) as pool:
+                return list(pool.map(_call_indexed, range(len(items))))
+    except Exception:                        # pool/pickling failure
+        return [fn(x) for x in items]
+    finally:
+        _PAYLOAD = None

@@ -31,17 +31,29 @@ foundation of the traffic-driven serving simulator (``repro.serve_sim``):
     dependencies may already be satisfied or still in flight;
   * ``on_complete`` observers fire as tasks finish, letting a scheduler
     react causally (free a slot, admit the next request, issue the next
-    decode step).
+    decode step);
+  * :meth:`Simulator.lane` opens a :class:`ServiceLane` — the express path
+    for the dominant serving pattern (one task at a time on a dedicated
+    single-server resource, submitted only when idle) that skips Task
+    construction and dependency bookkeeping entirely.
 
-Static task graphs are simply the special case with no callbacks.
+Static task graphs are simply the special case with no callbacks — and
+for them :func:`simulate_static` runs the same causal semantics over
+precomputed dependency arrays (:class:`StaticCache`) with deferred record
+materialization, several times faster than the dict-based general loop.
+
+Complexity: shared-link contention is O(log n) per event via virtual-time
+generalized processor sharing — each admitted task gets a fixed virtual
+finish time, completions pop from a heap, and real-to-virtual conversion
+happens only at rate-change boundaries.  (The seed engine decremented
+every active task's remaining work on every event: O(n) per event,
+O(n^2) per burst of n concurrent transfers.)
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
-
-from repro.core.taskgraph.anno import RateAnno
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -59,7 +71,7 @@ class ResourceSpec:
             raise ValueError(f"resource {self.name}: unknown mode {self.mode}")
 
 
-@dataclass
+@dataclass(slots=True)
 class Task:
     tid: int
     name: str
@@ -71,22 +83,45 @@ class Task:
     nbytes: int = 0
     flops: int = 0
     op_id: int = -1             # index of the originating LayerOp (-1: none)
-    anno: Optional[RateAnno] = None   # re-annotation rule (what-if fast path)
+    anno: Optional[object] = None   # RateAnno re-annotation rule (what-if)
 
 
-@dataclass
+@dataclass(slots=True)
 class TaskRecord:
     task: Task
     start: float
     end: float
 
 
-@dataclass
 class SimResult:
-    makespan: float
-    records: List[TaskRecord]
-    resource_busy: Dict[str, float]
-    layer_time: Dict[str, Tuple[float, float]]   # layer -> (start, end)
+    """Outcome of one simulation run.
+
+    ``records`` may be materialized lazily: the static fast path and the
+    serving lanes keep start/end arrays and only build ``TaskRecord``
+    objects when a trace/Gantt export actually reads them.
+    """
+
+    __slots__ = ("makespan", "resource_busy", "layer_time", "_records",
+                 "_records_thunk")
+
+    def __init__(self, makespan: float,
+                 records: Optional[List[TaskRecord]] = None,
+                 resource_busy: Optional[Dict[str, float]] = None,
+                 layer_time: Optional[Dict[str, Tuple[float, float]]] = None,
+                 records_thunk: Optional[Callable[[], List[TaskRecord]]] = None):
+        self.makespan = makespan
+        self.resource_busy = resource_busy if resource_busy is not None else {}
+        self.layer_time = layer_time if layer_time is not None else {}
+        self._records = records
+        self._records_thunk = records_thunk
+
+    @property
+    def records(self) -> List[TaskRecord]:
+        if self._records is None:
+            thunk = self._records_thunk
+            self._records = thunk() if thunk is not None else []
+            self._records_thunk = None
+        return self._records
 
     def utilization(self, resource: str) -> float:
         return (self.resource_busy.get(resource, 0.0) / self.makespan
@@ -95,59 +130,158 @@ class SimResult:
     def layer_durations(self) -> Dict[str, float]:
         return {k: e - s for k, (s, e) in self.layer_time.items()}
 
+    def __repr__(self) -> str:
+        n = "lazy" if self._records is None else len(self._records)
+        return (f"SimResult(makespan={self.makespan!r}, "
+                f"n_records={n}, "
+                f"resources={sorted(self.resource_busy)})")
+
 
 class _SharedChannel:
-    """Processor-sharing state for one ``shared`` resource.
+    """Virtual-time generalized processor sharing for one ``shared`` resource.
 
-    ``remaining`` holds full-rate seconds of work left per active task;
-    real time stretches by ``n_active / servers`` whenever the channel is
-    oversubscribed.  ``epoch`` invalidates stale completion events.
+    All active tasks progress at the common rate ``min(1, servers / n)``,
+    so completion order equals admission-virtual-finish order: a task
+    admitted with ``work`` full-rate seconds at virtual time ``v`` finishes
+    at fixed virtual time ``v + work``.  The virtual clock advances at the
+    common rate and is converted to real time only at rate-change
+    boundaries (admit / complete), making each channel event O(log n) in
+    active tasks instead of the O(n) per-event remaining-work sweep of the
+    seed engine.  ``epoch`` invalidates stale completion events.
     """
 
-    __slots__ = ("servers", "remaining", "start", "last_t", "epoch")
+    __slots__ = ("servers", "heap", "work", "start", "vnow", "last_t",
+                 "epoch", "n")
+
+    #: near-tie completion tolerance, *relative* to each task's own
+    #: full-rate duration.  (The seed engine used an absolute 1e-15 s
+    #: cutoff, which completed genuinely unfinished tasks early whenever
+    #: durations were themselves O(1e-15).)
+    REL_EPS = 1e-12
 
     def __init__(self, servers: int):
         self.servers = servers
-        self.remaining: Dict[int, float] = {}
+        self.heap: List[Tuple[float, int]] = []   # (virtual finish, tid)
+        self.work: Dict[int, float] = {}
         self.start: Dict[int, float] = {}
+        self.vnow = 0.0
         self.last_t = 0.0
         self.epoch = 0
+        self.n = 0
 
     @property
     def rate(self) -> float:
-        n = len(self.remaining)
+        n = self.n
         return min(1.0, self.servers / n) if n else 1.0
 
     def advance(self, now: float) -> None:
         dt = now - self.last_t
-        if dt > 0 and self.remaining:
-            r = self.rate
-            for tid in self.remaining:
-                self.remaining[tid] -= dt * r
-        self.last_t = now
+        if dt > 0.0:
+            if self.n:
+                self.vnow += dt * self.rate
+            self.last_t = now
 
     def admit(self, tid: int, work: float, now: float) -> None:
         self.advance(now)
-        self.remaining[tid] = work
+        self.n += 1
+        heapq.heappush(self.heap, (self.vnow + work, tid))
+        self.work[tid] = work
         self.start[tid] = now
 
     def next_completion(self, now: float) -> Optional[float]:
-        if not self.remaining:
+        if not self.n:
             return None
-        rem = min(self.remaining.values())
-        return now + max(rem, 0.0) / self.rate
+        vf = self.heap[0][0]
+        return now + max(vf - self.vnow, 0.0) / self.rate
 
     def pop_done(self, now: float) -> List[int]:
-        """Task ids whose remaining work is (numerically) exhausted."""
+        """Pop the head task plus any near-ties.
+
+        Called when the completion event scheduled for the current head
+        fires (``epoch`` guarantees no admission or completion intervened),
+        so the head is complete by construction — no absolute epsilon is
+        needed.  Near-ties complete together only when within
+        ``REL_EPS * work`` of the head's virtual finish.
+        """
         self.advance(now)
-        if not self.remaining:
+        if not self.n:
             return []
-        rem_min = min(self.remaining.values())
-        done = sorted(tid for tid, rem in self.remaining.items()
-                      if rem <= rem_min + 1e-15 or rem <= 1e-18)
-        for tid in done:
-            del self.remaining[tid]
+        vf0, tid0 = heapq.heappop(self.heap)
+        if vf0 > self.vnow:                # absorb scheduling round-off
+            self.vnow = vf0
+        self.n -= 1
+        del self.work[tid0]
+        done = [tid0]
+        heap = self.heap
+        while heap:
+            vf, tid = heap[0]
+            if vf - vf0 > self.REL_EPS * self.work[tid]:
+                break
+            heapq.heappop(heap)
+            self.n -= 1
+            del self.work[tid]
+            done.append(tid)
+        done.sort()
         return done
+
+
+class ServiceLane:
+    """Express path for dynamic service on one single-server FIFO resource.
+
+    The traffic-driven serving simulator issues one prefill/decode task at
+    a time per replica, always from an idle state — so the general
+    inject/enqueue/drain machinery (Task construction, dependency and
+    duration dicts, ready queues) is pure overhead.  A lane keeps plain
+    start/end/kind arrays, schedules the completion event directly, and
+    materializes ``TaskRecord``s lazily only when a trace is requested.
+
+    ``name_fn(kind, info) -> str`` builds record names at materialization
+    time, so per-step f-string formatting is also deferred.
+    """
+
+    __slots__ = ("sim", "resource", "busy", "busy_time", "starts", "ends",
+                 "kinds", "infos", "name_fn")
+
+    def __init__(self, sim: "Simulator", resource: str,
+                 name_fn: Optional[Callable[[str, object], str]] = None):
+        self.sim = sim
+        self.resource = resource
+        self.busy = False
+        self.busy_time = 0.0
+        self.starts: List[float] = []
+        self.ends: List[float] = []
+        self.kinds: List[str] = []
+        self.infos: List[object] = []
+        self.name_fn = name_fn
+
+    def submit(self, duration: float, handler: Callable[[float], None],
+               kind: str = "task", info: object = None) -> None:
+        """Start a task now; ``handler(now)`` runs when it completes."""
+        if self.busy:
+            raise RuntimeError(f"lane {self.resource!r} is busy")
+        sim = self.sim
+        self.busy = True
+        start = sim._now
+        end = start + duration
+        self.starts.append(start)
+        self.ends.append(end)
+        self.kinds.append(kind)
+        self.infos.append(info)
+        self.busy_time += duration
+        sim._seq += 1
+        heapq.heappush(sim._events, (end, sim._seq, "lane", (self, handler)))
+
+    def _materialize(self, tid0: int) -> List[TaskRecord]:
+        name_fn = self.name_fn
+        res = self.resource
+        out = []
+        for i, (s, e, k, info) in enumerate(zip(self.starts, self.ends,
+                                                self.kinds, self.infos)):
+            name = name_fn(k, info) if name_fn is not None else f"{res}/{k}"
+            out.append(TaskRecord(
+                Task(tid=tid0 + i, name=name, layer=res, resource=res,
+                     duration=e - s, kind=k), s, e))
+        return out
 
 
 class Simulator:
@@ -194,11 +328,14 @@ class Simulator:
         self._channels: Dict[str, _SharedChannel] = {}
         self._res_busy: Dict[str, float] = {}
         self._records: List[TaskRecord] = []
+        self._lanes: List[ServiceLane] = []
         # event heap: (time, seq, kind, payload)
         #   kind 'done'  — a fifo task finished (payload = tid)
         #   kind 'chan'  — a shared channel may have completions
         #                  (payload = (resource, epoch))
         #   kind 'call'  — a timed callback (payload = zero-arg callable)
+        #   kind 'lane'  — a service-lane task finished
+        #                  (payload = (lane, handler))
         self._events: List[Tuple[float, int, str, object]] = []
 
     def _validate(self, tasks: List[Task]) -> None:
@@ -256,6 +393,15 @@ class Simulator:
         if not outstanding:
             self._enqueue(task.tid, self._now)
         return task
+
+    def lane(self, resource: str,
+             name_fn: Optional[Callable[[str, object], str]] = None
+             ) -> ServiceLane:
+        """Open a :class:`ServiceLane` on a dedicated single-server
+        resource (see the class docstring for the contract)."""
+        ln = ServiceLane(self, resource, name_fn)
+        self._lanes.append(ln)
+        return ln
 
     def next_task_id(self) -> int:
         """A fresh task id (monotone counter above every existing id)."""
@@ -327,14 +473,19 @@ class Simulator:
             if n == 0:
                 self._enqueue(tid, 0.0)
 
-        while self._events:
-            self._now, _, kind, payload = heapq.heappop(self._events)
+        events = self._events
+        while events:
+            self._now, _, kind, payload = heapq.heappop(events)
             if kind == "done":
                 tid = payload
                 t = self.tasks[tid]
                 self._active[t.resource] -= 1
                 self._complete(tid)
                 self._drain(t.resource)
+            elif kind == "lane":
+                ln, handler = payload
+                ln.busy = False
+                handler(self._now)
             elif kind == "call":
                 payload()
             else:  # 'chan'
@@ -368,5 +519,290 @@ class Simulator:
             else:
                 layer_time[lay] = (r.start, r.end)
 
-        return SimResult(makespan=makespan, records=self._records,
+        lanes = [ln for ln in self._lanes if ln.starts]
+        for ln in lanes:
+            makespan = max(makespan, ln.ends[-1])
+            self._res_busy[ln.resource] = (
+                self._res_busy.get(ln.resource, 0.0) + ln.busy_time)
+            span = (ln.starts[0], ln.ends[-1])
+            if ln.resource in layer_time:
+                s, e = layer_time[ln.resource]
+                span = (min(s, span[0]), max(e, span[1]))
+            layer_time[ln.resource] = span
+
+        if not lanes:
+            return SimResult(makespan=makespan, records=self._records,
+                             resource_busy=self._res_busy,
+                             layer_time=layer_time)
+
+        static_records = self._records
+        tid0 = self._next_tid
+
+        def materialize() -> List[TaskRecord]:
+            out = list(static_records)
+            base = tid0
+            for ln in lanes:
+                out.extend(ln._materialize(base))
+                base += len(ln.starts)
+            return out
+
+        return SimResult(makespan=makespan, records_thunk=materialize,
                          resource_busy=self._res_busy, layer_time=layer_time)
+
+
+# ---------------------------------------------------------------------------
+# Array-backed fast path for static graphs
+# ---------------------------------------------------------------------------
+
+
+class StaticCache:
+    """Precomputed dependency/resource structure for one static task list.
+
+    System-independent: resource *names*, the dependency CSR, and layer
+    grouping depend only on the task list, so a cache built once per
+    compiled graph is shared across every re-annotated what-if variant
+    (``CompiledGraph.sim_cache()``).  Per-system resource widths/modes and
+    the duration vector are passed to :func:`simulate_static` per run.
+    """
+
+    __slots__ = ("n", "index_of", "tids", "dependents", "indeg", "res_of",
+                 "res_names", "layer_of", "layer_names")
+
+    def __init__(self, tasks: Sequence[Task]):
+        n = len(tasks)
+        self.n = n
+        self.tids = [t.tid for t in tasks]
+        index_of = {t.tid: i for i, t in enumerate(tasks)}
+        if len(index_of) != n:
+            raise ValueError("duplicate task ids")
+        self.index_of = index_of
+        res_index: Dict[str, int] = {}
+        lay_index: Dict[str, int] = {}
+        res_of = [0] * n
+        lay_of = [0] * n
+        indeg = [0] * n
+        dependents: List[List[int]] = [[] for _ in range(n)]
+        for i, t in enumerate(tasks):
+            r = t.resource
+            ri = res_index.get(r)
+            if ri is None:
+                ri = res_index[r] = len(res_index)
+            res_of[i] = ri
+            lay = t.layer
+            li = lay_index.get(lay)
+            if li is None:
+                li = lay_index[lay] = len(lay_index)
+            lay_of[i] = li
+            indeg[i] = len(t.deps)
+            for d in t.deps:
+                j = index_of.get(d)
+                if j is None:
+                    raise ValueError(f"task {t.tid} depends on unknown {d}")
+                dependents[j].append(i)
+        self.dependents = [tuple(dd) for dd in dependents]
+        self.indeg = indeg
+        self.res_of = res_of
+        self.res_names = list(res_index)
+        self.layer_of = lay_of
+        self.layer_names = list(lay_index)
+
+
+def simulate_static(tasks: Sequence[Task],
+                    resources: Optional[Dict[str, ResourceSpec]] = None,
+                    durations=None,
+                    cache: Optional[StaticCache] = None) -> SimResult:
+    """Run a *static* task graph (no callbacks, no injection) over
+    precomputed dependency arrays.
+
+    Same causal semantics as :class:`Simulator` — multi-server FIFO
+    stations, virtual-time processor-sharing channels, identical
+    tie-breaking — but the hot loop indexes flat lists instead of dicts
+    and defers ``TaskRecord`` materialization until a trace is read, so
+    ``reannotate``-then-simulate sweep points skip all per-task object
+    churn.  Exact-parity with the general engine is asserted by
+    ``tests/test_engine_parity.py``.
+    """
+    tasks = tasks if isinstance(tasks, list) else list(tasks)
+    if cache is None:
+        cache = StaticCache(tasks)
+    n = cache.n
+    resources = resources or {}
+    if durations is None:
+        durs = [t.duration for t in tasks]
+    elif hasattr(durations, "tolist"):
+        durs = durations.tolist()
+        if len(durs) != n:
+            raise ValueError("durations must align with tasks")
+    else:
+        if len(durations) != n:
+            raise ValueError("durations must align with tasks")
+        durs = [float(d) for d in durations]
+
+    n_res = len(cache.res_names)
+    shared = [False] * n_res
+    servers = [1] * n_res
+    for ri, name in enumerate(cache.res_names):
+        spec = resources.get(name)
+        if spec is not None:
+            shared[ri] = spec.mode == "shared"
+            servers[ri] = spec.servers
+
+    res_of = cache.res_of
+    tids = cache.tids            # equal-time ties break by tid, not index,
+    dependents = cache.dependents    # mirroring the general Simulator
+    indeg = list(cache.indeg)
+    starts = [0.0] * n
+    ends = [0.0] * n
+    busy = [0.0] * n_res
+    active = [0] * n_res
+    queues: List[List[Tuple[float, int]]] = [[] for _ in range(n_res)]
+    # Shared channels live as flat per-resource state (virtual-time GPS
+    # with the object/property overhead of _SharedChannel inlined away):
+    ch_heap: List[Optional[List[Tuple[float, int]]]] = [None] * n_res
+    ch_vnow = [0.0] * n_res      # virtual clock
+    ch_last = [0.0] * n_res      # real time of the last advance
+    ch_n = [0] * n_res           # active tasks
+    ch_epoch = [0] * n_res       # invalidates superseded completion events
+    rel_eps = _SharedChannel.REL_EPS
+    events: List[Tuple[float, int, int, object]] = []
+    # event tuple: (time, seq, code, payload); code 0 = fifo done
+    # (payload = task index), code 1 = channel completion
+    # (payload = (res index, epoch at issue))
+    seq = 0
+    now = 0.0
+    n_done = 0
+    push = heapq.heappush
+    pop = heapq.heappop
+
+    def reschedule(ri: int) -> None:
+        nonlocal seq
+        ch_epoch[ri] += 1
+        m = ch_n[ri]
+        if m:
+            srv = servers[ri]
+            rate = 1.0 if m <= srv else srv / m
+            dv = ch_heap[ri][0][0] - ch_vnow[ri]
+            t_next = now + (dv if dv > 0.0 else 0.0) / rate
+            seq += 1
+            push(events, (t_next, seq, 1, (ri, ch_epoch[ri])))
+
+    def drain(ri: int) -> None:
+        nonlocal seq
+        q = queues[ri]
+        cap = servers[ri]
+        while q and active[ri] < cap:
+            t_ready, _, i = pop(q)
+            dur = durs[i]
+            start = t_ready if t_ready > now else now
+            end = start + dur
+            active[ri] += 1
+            busy[ri] += dur
+            starts[i] = start
+            ends[i] = end
+            seq += 1
+            push(events, (end, seq, 0, i))
+
+    def enqueue(i: int, t_ready: float) -> None:
+        ri = res_of[i]
+        if shared[ri]:
+            heap = ch_heap[ri]
+            if heap is None:
+                heap = ch_heap[ri] = []
+            m = ch_n[ri]
+            dt = t_ready - ch_last[ri]
+            if dt > 0.0:                      # advance the virtual clock
+                if m:
+                    srv = servers[ri]
+                    ch_vnow[ri] += dt * (1.0 if m <= srv else srv / m)
+                ch_last[ri] = t_ready
+            ch_n[ri] = m + 1
+            push(heap, (ch_vnow[ri] + durs[i], tids[i], i))
+            starts[i] = t_ready
+            reschedule(ri)
+        else:
+            push(queues[ri], (t_ready, tids[i], i))
+            drain(ri)
+
+    for i in range(n):
+        if indeg[i] == 0:
+            enqueue(i, 0.0)
+
+    while events:
+        now, _, code, payload = pop(events)
+        if code == 0:                       # fifo completion
+            i = payload
+            active[res_of[i]] -= 1
+            n_done += 1
+            for j in dependents[i]:
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    enqueue(j, now)
+            drain(res_of[i])
+        else:                               # channel completion(s)
+            ri, epoch = payload
+            if epoch != ch_epoch[ri]:
+                continue                    # superseded by a re-plan
+            # advance the virtual clock to now
+            m = ch_n[ri]
+            dt = now - ch_last[ri]
+            if dt > 0.0:
+                if m:
+                    srv = servers[ri]
+                    ch_vnow[ri] += dt * (1.0 if m <= srv else srv / m)
+                ch_last[ri] = now
+            # the head is complete by construction (epoch was current);
+            # pop it plus near-ties within the relative epsilon
+            heap = ch_heap[ri]
+            vf0, _, i = pop(heap)
+            if vf0 > ch_vnow[ri]:           # absorb scheduling round-off
+                ch_vnow[ri] = vf0
+            m -= 1
+            done = [i]
+            while heap:
+                vf, _, i2 = heap[0]
+                if vf - vf0 > rel_eps * durs[i2]:
+                    break
+                pop(heap)
+                m -= 1
+                done.append(i2)
+            ch_n[ri] = m
+            if len(done) > 1:
+                done.sort(key=tids.__getitem__)   # complete in tid order
+            for i in done:
+                busy[ri] += durs[i]
+                ends[i] = now
+                n_done += 1
+                for j in dependents[i]:
+                    indeg[j] -= 1
+                    if indeg[j] == 0:
+                        enqueue(j, now)
+            reschedule(ri)
+
+    if n_done != n:
+        stuck = [i for i in range(n) if indeg[i] > 0]
+        raise RuntimeError(
+            f"deadlock/cycle: {len(stuck)} tasks never ran, e.g. "
+            f"{[tasks[i].name for i in stuck[:5]]}")
+
+    makespan = max(ends) if n else 0.0
+    lay_of = cache.layer_of
+    lay_lo = [float("inf")] * len(cache.layer_names)
+    lay_hi = [float("-inf")] * len(cache.layer_names)
+    for i in range(n):
+        li = lay_of[i]
+        s = starts[i]
+        e = ends[i]
+        if s < lay_lo[li]:
+            lay_lo[li] = s
+        if e > lay_hi[li]:
+            lay_hi[li] = e
+    layer_time = {name: (lay_lo[li], lay_hi[li])
+                  for li, name in enumerate(cache.layer_names)}
+    resource_busy = {name: busy[ri]
+                     for ri, name in enumerate(cache.res_names)}
+
+    def materialize() -> List[TaskRecord]:
+        return [TaskRecord(tasks[i], starts[i], ends[i]) for i in range(n)]
+
+    return SimResult(makespan=makespan, records_thunk=materialize,
+                     resource_busy=resource_busy, layer_time=layer_time)

@@ -6,6 +6,11 @@ per hardware resource); :func:`serving_chrome_trace` renders a
 traffic-driven ``ServingReport`` from ``repro.serve_sim`` (replica
 prefill/decode lanes, per-slot request spans, and a queue-depth counter
 track).
+
+Reading ``result.records`` here is what materializes the lazy record
+arrays kept by the engine's fast paths (``simulate_static``, serving
+``ServiceLane``s) — simulations that are never exported pay nothing for
+``TaskRecord`` construction.
 """
 from __future__ import annotations
 
@@ -119,20 +124,25 @@ def serving_chrome_trace(report, path: Optional[str] = None) -> str:
 def ascii_gantt(result: SimResult, width: int = 100,
                 max_rows: int = 24) -> str:
     """Terminal Gantt chart: one row per resource, '#' = busy."""
-    if not result.records or result.makespan <= 0:
+    records = result.records        # materializes lazy records once
+    if not records or result.makespan <= 0:
         return "(empty)"
-    resources = sorted({r.task.resource for r in result.records})[:max_rows]
+    # single pass: group records by resource (the per-resource scan was
+    # O(records x resources) on big traces)
+    by_res: Dict[str, List] = {}
+    for rec in records:
+        by_res.setdefault(rec.task.resource, []).append(rec)
+    resources = sorted(by_res)[:max_rows]
     scale = width / result.makespan
+    glyph = {"compute": "#", "dma": "=", "collective": "~",
+             "launch": ".", "host": "."}
     lines = [f"t=0 {'':{width - 12}} t={result.makespan * 1e3:.3f} ms"]
     for res in resources:
         row = [" "] * width
-        for rec in result.records:
-            if rec.task.resource != res:
-                continue
+        for rec in by_res[res]:
             a = min(width - 1, int(rec.start * scale))
             b = min(width, max(a + 1, int(rec.end * scale)))
-            ch = {"compute": "#", "dma": "=", "collective": "~",
-                  "launch": ".", "host": "."}.get(rec.task.kind, "#")
+            ch = glyph.get(rec.task.kind, "#")
             for i in range(a, b):
                 row[i] = ch
         util = result.utilization(res)

@@ -60,6 +60,11 @@ class CompiledGraph:
     # lazily, shared across re-annotated copies (task order is identical).
     _anno_arrays: Optional[Tuple[np.ndarray, ...]] = field(
         default=None, repr=False, compare=False)
+    # Mutable state shared *by reference* across every re-annotated copy
+    # (they all alias the same task list): holds lazily built structural
+    # caches — the DES engine's StaticCache, estimator per-op arrays —
+    # so whichever what-if variant builds one first, all variants reuse it.
+    _shared: Dict = field(default_factory=dict, repr=False, compare=False)
 
     @property
     def durations(self) -> np.ndarray:
@@ -70,6 +75,16 @@ class CompiledGraph:
         and carries only a fresh duration array.
         """
         return self.anno_arrays()[3]
+
+    def sim_cache(self):
+        """Dependency-CSR cache for the DES fast path
+        (:func:`repro.core.sim.engine.simulate_static`) — built once per
+        task-graph structure and shared across re-annotated variants."""
+        cache = self._shared.get("sim_cache")
+        if cache is None:
+            from repro.core.sim.engine import StaticCache
+            cache = self._shared["sim_cache"] = StaticCache(self.tasks)
+        return cache
 
     def anno_arrays(self) -> Tuple[np.ndarray, ...]:
         if self._anno_arrays is None:
@@ -204,7 +219,8 @@ def reannotate(graph: CompiledGraph,
     # backends do, not ``Task.duration``.
     return CompiledGraph(tasks=graph.tasks, ops=graph.ops, system=system,
                          plan=graph.plan, resources=resource_specs(system),
-                         _anno_arrays=(work, ridx, fidx, new_durs))
+                         _anno_arrays=(work, ridx, fidx, new_durs),
+                         _shared=graph._shared)
 
 
 def compile_ops(ops: List[LayerOp], system: SystemDescription,

@@ -27,13 +27,15 @@ accuracy loop, extended to serving.
 """
 from __future__ import annotations
 
+from bisect import insort
 from collections import deque
 from dataclasses import dataclass, field
+from heapq import heappop, heappush
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.sim.engine import ResourceSpec, SimResult, Simulator, Task
+from repro.core.sim.engine import SimResult, Simulator
 from repro.serve_sim.cost import ServingCostModel
 from repro.serve_sim.scheduler import (BatchScheduler, Decode, InFlight,
                                        Prefill, ReplicaState, Wait)
@@ -137,6 +139,10 @@ class ServingReport:
             f"E2E p99 = {self.e2e.p99:.2f} s")
 
 
+def _slot_of(fl: InFlight) -> int:
+    return fl.slot
+
+
 class ServingSimulator:
     """Replays a :class:`Workload` against replicas of one cost model.
 
@@ -164,11 +170,23 @@ class ServingSimulator:
         self.events: List[Tuple] = []
         self.pending: deque = deque()
         self.metrics: List[RequestMetrics] = []
-        self._sim = Simulator(
-            resources={self._res(r): ResourceSpec(self._res(r))
-                       for r in range(replicas)},
-            on_complete=self._on_task_done)
-        self._handlers: Dict[int, Callable[[float], None]] = {}
+        self._sim = Simulator()
+        # Express path: each replica is a ServiceLane (one phase at a time
+        # on a dedicated single-server resource) — no Task construction or
+        # dependency bookkeeping per decode step, record names deferred.
+        self._lanes = [self._sim.lane(self._res(r), name_fn=self._name_fn(r))
+                       for r in range(replicas)]
+        # Completion handlers are bound once per replica, not per step.
+        self._phase_done = [self._phase_handler(rep) for rep in self.replicas]
+        self._decode_done = [self._decode_handler(rep)
+                             for rep in self.replicas]
+        # Free slots per replica as min-heaps: admission pops the lowest
+        # slot id (the order the old sorted-set-difference scan produced).
+        self._free_slots = [list(range(slots)) for _ in range(replicas)]
+        # Decode-leap state: steps fused into the in-flight decode task and
+        # the exact end time of its first step (token-1 emission).
+        self._decode_k = [1] * replicas
+        self._decode_tfirst = [0.0] * replicas
         self._total_out_tokens = 0
         self._wait_until: Dict[int, float] = {}   # replica -> armed wake-up
 
@@ -176,22 +194,21 @@ class ServingSimulator:
     def _res(r: int) -> str:
         return f"replica{r}"
 
-    # ---- engine plumbing -------------------------------------------------
+    @staticmethod
+    def _name_fn(r: int) -> Callable[[str, object], str]:
+        def fmt(kind: str, info: object) -> str:
+            if kind == "prefill":
+                return f"prefill/r{r}/{'+'.join(str(i) for i in info)}"
+            if isinstance(info, tuple):          # fused decode leap
+                return f"decode/r{r}/b{info[0]}x{info[1]}"
+            return f"decode/r{r}/b{info}"
+        return fmt
 
-    def _submit(self, replica: ReplicaState, name: str, kind: str,
-                duration: float, handler: Callable[[float], None]) -> None:
-        tid = self._sim.next_task_id()
-        task = Task(tid=tid, name=name, layer=self._res(replica.index),
-                    resource=self._res(replica.index), duration=duration,
-                    kind=kind)
-        self._handlers[tid] = handler
-        replica.busy = True
-        self._sim.inject(task)
+    def _phase_handler(self, replica: ReplicaState):
+        return lambda now: self._finish_phase(replica, now)
 
-    def _on_task_done(self, task: Task, now: float) -> None:
-        handler = self._handlers.pop(task.tid, None)
-        if handler is not None:
-            handler(now)
+    def _decode_handler(self, replica: ReplicaState):
+        return lambda now: self._finish_decode(replica, now)
 
     # ---- arrivals --------------------------------------------------------
 
@@ -230,69 +247,111 @@ class ServingSimulator:
 
     def _start_prefill(self, replica: ReplicaState, action: Prefill,
                        now: float) -> None:
-        free = sorted(set(range(replica.slots))
-                      - {f.slot for f in replica.active})
+        free = self._free_slots[replica.index]
         if len(action.reqs) > len(free):
             raise RuntimeError(
                 f"scheduler {self.schedulers[replica.index].name!r} admitted "
                 f"{len(action.reqs)} requests with only {len(free)} free "
                 f"slots on replica{replica.index}")
-        flights = []
-        for req, slot in zip(action.reqs, free):
-            fl = InFlight(req=req, slot=slot, ctx=req.prompt_tokens,
-                          t_admit=now)
-            replica.active.append(fl)
-            flights.append(fl)
-            if self.record_events:
+        record = self.record_events
+        rids = []
+        for req in action.reqs:
+            fl = InFlight(req=req, slot=heappop(free),
+                          ctx=req.prompt_tokens, t_admit=now)
+            # keep actives slot-sorted: decode iteration then matches the
+            # real BatchedServer's per-slot order without re-sorting
+            insort(replica.active, fl, key=_slot_of)
+            rids.append(req.rid)
+            if record:
                 self.events.append(("admit", req.rid))
         dur = self.cost.prefill_time(action.tokens)
-        self._submit(
-            replica, name=f"prefill/r{replica.index}"
-            f"/{'+'.join(str(f.req.rid) for f in flights)}",
-            kind="prefill", duration=dur,
-            handler=lambda t, r=replica: self._finish_phase(r, t))
+        replica.busy = True
+        self._lanes[replica.index].submit(
+            dur, self._phase_done[replica.index], kind="prefill",
+            info=tuple(rids))
 
     def _start_decode(self, replica: ReplicaState, now: float) -> None:
-        sched = self.schedulers[replica.index]
+        idx = replica.index
+        sched = self.schedulers[idx]
+        hold = sched.hold_finished
         # static batching pays for held (finished) slots too
-        batch = replica.active if sched.hold_finished else replica.decoding
-        n = len(batch)
-        ctx = sum(f.ctx for f in batch)
-        dur = self.cost.decode_step_time(n, ctx)
+        n = 0
+        ctx = 0
+        n_dec = 0
+        k_min = 0
+        for f in replica.active:
+            if f.done:
+                if hold:
+                    n += 1
+                    ctx += f.ctx
+                continue
+            n += 1
+            ctx += f.ctx
+            n_dec += 1
+            rem = f.req.output_tokens - f.generated
+            if k_min == 0 or rem < k_min:
+                k_min = rem
+        # Decode leap: until the shortest slot finishes, a steady_decode
+        # policy will issue identical decode steps (admission is blocked:
+        # no free slot, or hold_finished holds the batch) — fuse them into
+        # one task, accumulating the exact per-step costs.
+        k = 1
+        if (k_min > 1 and sched.steady_decode and not self.record_events
+                and (hold or not self._free_slots[idx])):
+            k = k_min
+        step_time = self.cost.decode_step_time
+        c0 = step_time(n, ctx)
+        dur = c0
+        for _ in range(k - 1):
+            ctx += n_dec
+            dur += step_time(n, ctx)
         if self.record_events:
             self.events.append(
-                ("step", tuple(sorted(f.req.rid for f in replica.decoding))))
-        self._submit(
-            replica, name=f"decode/r{replica.index}/b{n}",
-            kind="decode", duration=dur,
-            handler=lambda t, r=replica: self._finish_decode(r, t))
+                ("step", tuple(sorted(f.req.rid for f in replica.active
+                                      if not f.done))))
+        self._decode_k[idx] = k
+        self._decode_tfirst[idx] = now + c0
+        replica.busy = True
+        self._lanes[idx].submit(
+            dur, self._decode_done[idx], kind="decode",
+            info=n if k == 1 else (n, k))
 
     def _finish_phase(self, replica: ReplicaState, now: float) -> None:
         replica.busy = False
         self._kick(replica, now)
 
     def _finish_decode(self, replica: ReplicaState, now: float) -> None:
-        sched = self.schedulers[replica.index]
+        idx = replica.index
+        sched = self.schedulers[idx]
+        k = self._decode_k[idx]
+        t_first = self._decode_tfirst[idx]
         finished: List[InFlight] = []
-        # slot order mirrors the real BatchedServer's finish ordering
-        for fl in sorted(replica.decoding, key=lambda f: f.slot):
-            fl.generated += 1
-            fl.ctx += 1
-            self._total_out_tokens += 1
+        decoding_left = 0
+        tokens = 0
+        # actives are slot-sorted, mirroring the real BatchedServer's
+        # finish ordering
+        for fl in replica.active:
+            if fl.done:
+                continue
+            fl.generated += k
+            fl.ctx += k
+            tokens += k
             if fl.t_first is None:
-                fl.t_first = now
-            if fl.finished:
+                fl.t_first = t_first
+            if fl.generated >= fl.req.output_tokens:
                 fl.done = True
                 finished.append(fl)
-        release = list(finished)
+            else:
+                decoding_left += 1
+        self._total_out_tokens += tokens
+        release = finished
         if sched.hold_finished:
             # the batch drains only when every member is done
-            if replica.decoding:
-                release = []
-            else:
-                release = list(replica.active)
+            release = [] if decoding_left else list(replica.active)
+        free = self._free_slots[replica.index]
         for fl in release:
             replica.active.remove(fl)
+            heappush(free, fl.slot)
         for fl in finished:
             if self.record_events:
                 self.events.append(("finish", fl.req.rid))

@@ -1,0 +1,347 @@
+"""Frozen copy of the pre-PR3 (seed) DES engine, used only by the golden
+parity tests in test_engine_parity.py: the optimized engine (virtual-time
+processor sharing + array-backed static fast path) must reproduce this
+engine's SimResult — makespan, per-record start/end, resource_busy,
+layer times — on real compiled graphs and randomized DAGs.
+
+Known seed defect intentionally preserved: _SharedChannel.pop_done uses
+an absolute 1e-15 completion tolerance, so near-ties within 1e-15 s are
+completed early even when genuinely unfinished; the regression test for
+the relative-epsilon fix therefore asserts a *difference* from this
+reference on picosecond-scale graphs.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+RateAnno = object  # annotation type, unused by the reference loop
+
+
+@dataclass(frozen=True)
+class ResourceSpec:
+    """How a named resource serves tasks."""
+
+    name: str
+    servers: int = 1
+    mode: str = "fifo"           # fifo | shared
+
+    def __post_init__(self):
+        if self.servers < 1:
+            raise ValueError(f"resource {self.name}: servers must be >= 1")
+        if self.mode not in ("fifo", "shared"):
+            raise ValueError(f"resource {self.name}: unknown mode {self.mode}")
+
+
+@dataclass
+class Task:
+    tid: int
+    name: str
+    layer: str                  # grouping key for per-layer stats
+    resource: str               # e.g. "nce", "dma", "ici_model"
+    duration: float             # seconds at full rate
+    deps: Tuple[int, ...] = ()
+    kind: str = "compute"       # compute | dma | collective | launch | host
+    nbytes: int = 0
+    flops: int = 0
+    op_id: int = -1             # index of the originating LayerOp (-1: none)
+    anno: Optional[RateAnno] = None   # re-annotation rule (what-if fast path)
+
+
+@dataclass
+class TaskRecord:
+    task: Task
+    start: float
+    end: float
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    records: List[TaskRecord]
+    resource_busy: Dict[str, float]
+    layer_time: Dict[str, Tuple[float, float]]   # layer -> (start, end)
+
+    def utilization(self, resource: str) -> float:
+        return (self.resource_busy.get(resource, 0.0) / self.makespan
+                if self.makespan > 0 else 0.0)
+
+    def layer_durations(self) -> Dict[str, float]:
+        return {k: e - s for k, (s, e) in self.layer_time.items()}
+
+
+class _SharedChannel:
+    """Processor-sharing state for one ``shared`` resource.
+
+    ``remaining`` holds full-rate seconds of work left per active task;
+    real time stretches by ``n_active / servers`` whenever the channel is
+    oversubscribed.  ``epoch`` invalidates stale completion events.
+    """
+
+    __slots__ = ("servers", "remaining", "start", "last_t", "epoch")
+
+    def __init__(self, servers: int):
+        self.servers = servers
+        self.remaining: Dict[int, float] = {}
+        self.start: Dict[int, float] = {}
+        self.last_t = 0.0
+        self.epoch = 0
+
+    @property
+    def rate(self) -> float:
+        n = len(self.remaining)
+        return min(1.0, self.servers / n) if n else 1.0
+
+    def advance(self, now: float) -> None:
+        dt = now - self.last_t
+        if dt > 0 and self.remaining:
+            r = self.rate
+            for tid in self.remaining:
+                self.remaining[tid] -= dt * r
+        self.last_t = now
+
+    def admit(self, tid: int, work: float, now: float) -> None:
+        self.advance(now)
+        self.remaining[tid] = work
+        self.start[tid] = now
+
+    def next_completion(self, now: float) -> Optional[float]:
+        if not self.remaining:
+            return None
+        rem = min(self.remaining.values())
+        return now + max(rem, 0.0) / self.rate
+
+    def pop_done(self, now: float) -> List[int]:
+        """Task ids whose remaining work is (numerically) exhausted."""
+        self.advance(now)
+        if not self.remaining:
+            return []
+        rem_min = min(self.remaining.values())
+        done = sorted(tid for tid, rem in self.remaining.items()
+                      if rem <= rem_min + 1e-15 or rem <= 1e-18)
+        for tid in done:
+            del self.remaining[tid]
+        return done
+
+
+class Simulator:
+    """Event-driven scheduler over FIFO and bandwidth-shared resources.
+
+    The event loop is instance-level state, so timed callbacks
+    (:meth:`at`) and completion observers (``on_complete``) can inject
+    new tasks (:meth:`inject`) while the simulation is running — dynamic
+    arrivals preempting a static task graph.
+    """
+
+    def __init__(self, tasks: Iterable[Task] = (),
+                 resources: Optional[Dict[str, ResourceSpec]] = None,
+                 durations=None,
+                 on_complete: Optional[Callable[[Task, float], None]] = None):
+        """``durations`` optionally overrides each task's annotated duration
+        (aligned with ``tasks``); the what-if fast path re-annotates a graph
+        by swapping this array, leaving the Task objects untouched."""
+        tasks = list(tasks)
+        self.tasks = {t.tid: t for t in tasks}
+        if len(self.tasks) != len(tasks):
+            raise ValueError("duplicate task ids")
+        if durations is None:
+            self.durations = {t.tid: t.duration for t in tasks}
+        else:
+            if len(durations) != len(tasks):
+                raise ValueError("durations must align with tasks")
+            self.durations = {t.tid: float(d)
+                              for t, d in zip(tasks, durations)}
+        self.resources = dict(resources or {})
+        self.on_complete = on_complete
+        self._validate(tasks)
+        self._next_tid = max(self.tasks, default=-1) + 1
+        # ---- event-loop state (live during run()) ----
+        self._now = 0.0
+        self._seq = 0
+        self._running = False
+        self._completed_ids: set = set()
+        self._n_deps: Dict[int, int] = {}
+        self._dependents: Dict[int, List[int]] = {}
+        # per-FIFO-resource ready queue: (ready_time, tid)
+        self._queues: Dict[str, List[Tuple[float, int]]] = {}
+        self._active: Dict[str, int] = {}     # fifo resource -> active count
+        self._channels: Dict[str, _SharedChannel] = {}
+        self._res_busy: Dict[str, float] = {}
+        self._records: List[TaskRecord] = []
+        # event heap: (time, seq, kind, payload)
+        #   kind 'done'  — a fifo task finished (payload = tid)
+        #   kind 'chan'  — a shared channel may have completions
+        #                  (payload = (resource, epoch))
+        #   kind 'call'  — a timed callback (payload = zero-arg callable)
+        self._events: List[Tuple[float, int, str, object]] = []
+
+    def _validate(self, tasks: List[Task]) -> None:
+        ids = set(self.tasks)
+        for t in tasks:
+            for d in t.deps:
+                if d not in ids:
+                    raise ValueError(f"task {t.tid} depends on unknown {d}")
+
+    def _spec(self, resource: str) -> ResourceSpec:
+        return self.resources.get(resource) or ResourceSpec(name=resource)
+
+    # ------------------------------------------------------------------
+    # Dynamic injection API
+    # ------------------------------------------------------------------
+
+    @property
+    def now(self) -> float:
+        """Current simulation time."""
+        return self._now
+
+    def at(self, t: float, fn: Callable[[], None]) -> None:
+        """Schedule ``fn`` to run inside the event loop at time ``t``.
+
+        Callbacks at equal times run in scheduling order.  ``fn`` may call
+        :meth:`inject` / :meth:`at` — this is how open-loop arrivals and
+        scheduler timeouts enter a running simulation.
+        """
+        if t < self._now - 1e-18:
+            raise ValueError(f"cannot schedule at {t} < now ({self._now})")
+        self._push_event(max(t, self._now), "call", fn)
+
+    def inject(self, task: Task) -> Task:
+        """Add ``task`` to a (possibly running) simulation.
+
+        Dependencies may reference completed or in-flight tasks.  The task
+        becomes ready once its outstanding dependencies finish (immediately
+        if there are none).
+        """
+        if task.tid in self.tasks:
+            raise ValueError(f"duplicate task id {task.tid}")
+        for d in task.deps:
+            if d not in self.tasks:
+                raise ValueError(f"task {task.tid} depends on unknown {d}")
+        self.tasks[task.tid] = task
+        self.durations[task.tid] = task.duration
+        self._next_tid = max(self._next_tid, task.tid + 1)
+        if not self._running:
+            return task
+        outstanding = [d for d in task.deps if d not in self._completed_ids]
+        self._n_deps[task.tid] = len(outstanding)
+        self._dependents.setdefault(task.tid, [])
+        for d in outstanding:
+            self._dependents.setdefault(d, []).append(task.tid)
+        if not outstanding:
+            self._enqueue(task.tid, self._now)
+        return task
+
+    def next_task_id(self) -> int:
+        """A fresh task id (monotone counter above every existing id)."""
+        return self._next_tid
+
+    # ------------------------------------------------------------------
+    # Event loop internals
+    # ------------------------------------------------------------------
+
+    def _push_event(self, t_ev: float, kind: str, payload) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (t_ev, self._seq, kind, payload))
+
+    def _reschedule_channel(self, res: str) -> None:
+        ch = self._channels[res]
+        ch.epoch += 1
+        t_next = ch.next_completion(self._now)
+        if t_next is not None:
+            self._push_event(t_next, "chan", (res, ch.epoch))
+
+    def _enqueue(self, tid: int, t_ready: float) -> None:
+        t = self.tasks[tid]
+        spec = self._spec(t.resource)
+        if spec.mode == "shared":
+            ch = self._channels.get(t.resource)
+            if ch is None:
+                ch = self._channels[t.resource] = _SharedChannel(spec.servers)
+            ch.admit(tid, self.durations[tid], t_ready)
+            self._reschedule_channel(t.resource)
+        else:
+            q = self._queues.setdefault(t.resource, [])
+            heapq.heappush(q, (t_ready, tid))
+            self._drain(t.resource)
+
+    def _drain(self, resource: str) -> None:
+        spec = self._spec(resource)
+        q = self._queues.get(resource)
+        while q and self._active.get(resource, 0) < spec.servers:
+            t_ready, tid = heapq.heappop(q)
+            t = self.tasks[tid]
+            dur = self.durations[tid]
+            start = max(t_ready, self._now)
+            end = start + dur
+            self._active[resource] = self._active.get(resource, 0) + 1
+            self._res_busy[resource] = self._res_busy.get(resource, 0.0) + dur
+            self._records.append(TaskRecord(t, start, end))
+            self._push_event(end, "done", tid)
+
+    def _complete(self, tid: int) -> None:
+        self._completed_ids.add(tid)
+        for dep_tid in self._dependents.get(tid, ()):
+            self._n_deps[dep_tid] -= 1
+            if self._n_deps[dep_tid] == 0:
+                self._enqueue(dep_tid, self._now)
+        if self.on_complete is not None:
+            self.on_complete(self.tasks[tid], self._now)
+
+    def run(self) -> SimResult:
+        if self._running or self._completed_ids:
+            raise RuntimeError("Simulator.run() may only be called once")
+        self._running = True
+        self._n_deps = {tid: len(t.deps) for tid, t in self.tasks.items()}
+        self._dependents = {tid: [] for tid in self.tasks}
+        for t in self.tasks.values():
+            for d in t.deps:
+                self._dependents[d].append(t.tid)
+
+        for tid, n in list(self._n_deps.items()):
+            if n == 0:
+                self._enqueue(tid, 0.0)
+
+        while self._events:
+            self._now, _, kind, payload = heapq.heappop(self._events)
+            if kind == "done":
+                tid = payload
+                t = self.tasks[tid]
+                self._active[t.resource] -= 1
+                self._complete(tid)
+                self._drain(t.resource)
+            elif kind == "call":
+                payload()
+            else:  # 'chan'
+                res, epoch = payload
+                ch = self._channels[res]
+                if epoch != ch.epoch:
+                    continue                      # superseded by a re-plan
+                for tid in ch.pop_done(self._now):
+                    t = self.tasks[tid]
+                    self._res_busy[res] = (self._res_busy.get(res, 0.0)
+                                           + self.durations[tid])
+                    self._records.append(
+                        TaskRecord(t, ch.start.pop(tid), self._now))
+                    self._complete(tid)
+                self._reschedule_channel(res)
+
+        if len(self._completed_ids) != len(self.tasks):
+            stuck = [tid for tid, n in self._n_deps.items() if n > 0]
+            raise RuntimeError(
+                f"deadlock/cycle: {len(stuck)} tasks never ran, e.g. "
+                f"{[self.tasks[t].name for t in stuck[:5]]}")
+        self._running = False
+
+        makespan = max((r.end for r in self._records), default=0.0)
+        layer_time: Dict[str, Tuple[float, float]] = {}
+        for r in self._records:
+            lay = r.task.layer
+            if lay in layer_time:
+                s, e = layer_time[lay]
+                layer_time[lay] = (min(s, r.start), max(e, r.end))
+            else:
+                layer_time[lay] = (r.start, r.end)
+
+        return SimResult(makespan=makespan, records=self._records,
+                         resource_busy=self._res_busy, layer_time=layer_time)
