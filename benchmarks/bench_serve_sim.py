@@ -4,6 +4,12 @@ Measures the virtual serving stack at the scale the ROADMAP asks about:
 
   * sim speed — wall seconds (and simulated requests per wall second) for
     10k requests through continuous batching (acceptance: < 10 s on CPU);
+  * dynamic fast path — the same 10k requests with *full task-graph
+    injection* (chunked phase graphs + KV writes) on the array-backed
+    dynamic engine vs the dict engine (acceptance: >= 3x);
+  * speculative leap — 10k requests under a scheduler that declares only
+    the ``decode_stable`` contract, so every decode fusion takes the
+    snapshot/rollback path;
   * scheduler tails — p99 TTFT of continuous vs static batching under the
     same Poisson traffic (continuous batching should dominate);
   * cost-model derivation — seconds to fit a per-request cost model from
@@ -19,8 +25,19 @@ from repro.core.config import get_arch
 from repro.core.hw import SystemDescription, tpu_v5e_chip
 from repro.core.taskgraph.builders import ShardPlan
 from repro.serve_sim import (ContinuousBatchingScheduler, LengthDist,
-                             ServingCostModelBuilder, StaticBatchScheduler,
-                             poisson_workload, simulate_serving)
+                             ServingCostModelBuilder, ServingSimulator,
+                             StaticBatchScheduler, poisson_workload,
+                             simulate_serving)
+
+
+class SpeculativeContinuousScheduler(ContinuousBatchingScheduler):
+    """Continuous batching declaring only the speculative contract
+    (``decode_stable`` without ``steady_decode``): every decode leap
+    takes the snapshot/rollback path — the non-``steady_decode`` case
+    the speculative leap opened up."""
+
+    name = "continuous_speculative"
+    steady_decode = False
 
 
 def run() -> List[Tuple[str, float, str]]:
@@ -52,6 +69,31 @@ def run() -> List[Tuple[str, float, str]]:
                  f"{rep.n_requests} reqs, {rep.output_tokens} toks, "
                  f"{rep.n_requests / wall:.0f} req/wall-s "
                  f"(accept: wall<10s)"))
+
+    # full task-graph injection: fast dynamic engine vs dict engine
+    # (interleaved best-of-2, so machine-load drifts hit both engines)
+    walls = {"fast": float("inf"), "dict": float("inf")}
+    for _ in range(2):
+        for engine in ("fast", "dict"):
+            t0 = time.perf_counter()
+            g = ServingSimulator(cost, ContinuousBatchingScheduler,
+                                 traffic(10_000), replicas=4, slots=8,
+                                 phase_tasks=4, engine=engine).run()
+            walls[engine] = min(walls[engine], time.perf_counter() - t0)
+    rows.append(("serve_sim_10k_taskgraph", walls["fast"] * 1e6,
+                 f"fast={walls['fast']:.2f}s dict={walls['dict']:.2f}s "
+                 f"speedup={walls['dict'] / walls['fast']:.2f}x "
+                 f"({g.n_requests} reqs, {4 * 2} tasks/phase, accept: >=3x)"))
+
+    # speculative decode leap: decode_stable-only scheduler, rollbacks on
+    t0 = time.perf_counter()
+    spec = simulate_serving(cost, SpeculativeContinuousScheduler,
+                            traffic(10_000), replicas=4, slots=8)
+    wall_spec = time.perf_counter() - t0
+    rows.append(("serve_sim_10k_speculative", wall_spec * 1e6,
+                 f"{spec.n_requests} reqs, "
+                 f"{spec.n_requests / wall_spec:.0f} req/wall-s "
+                 f"(decode_stable-only leap w/ rollback)"))
 
     cont = simulate_serving(cost, ContinuousBatchingScheduler,
                             traffic(2000, rate=60.0), replicas=4, slots=8)

@@ -1,17 +1,21 @@
-"""Machine-readable perf trajectory: writes ``BENCH_pr3.json``.
+"""Machine-readable perf trajectory: writes ``BENCH_pr4.json``.
 
-Collects the current throughput of the three hot paths this PR optimized
-(DES engine events/sec, DSE what-if points/sec, serve_sim requests/sec,
-plus wall times) and records them next to the pre-PR baseline, so the
-perf trajectory is tracked across PRs::
+Collects the current throughput of the hot paths this PR optimized — the
+dynamic-injection fast path (array-backed ``DynamicSimulator`` + template
+instantiation vs the dict engine), the speculative decode leap
+(``decode_stable``-only scheduler, rollbacks armed), and the persistent
+worker pool (first call vs steady-state ``explore()`` sweeps) — next to
+the PR 3 paths (engine events/sec, what-if points/sec, serve-sim
+requests/sec), and records them against the PR 3 measurements::
 
-    PYTHONPATH=src python benchmarks/run.py --json        # BENCH_pr3.json
+    PYTHONPATH=src python benchmarks/run.py --json        # BENCH_pr4.json
     PYTHONPATH=src python benchmarks/perf_record.py       # same, standalone
 
-``BASELINE_PR2`` was measured at commit d90c17b (the PR 2 tree, seed
-dict-based engine with the O(n)-per-event shared channel) on the same
-container that produced the committed ``BENCH_pr3.json``; absolute
-numbers are machine-dependent, the *ratios* are the tracked signal.
+``BASELINE_PR3`` is the ``current`` section of the committed
+``BENCH_pr3.json`` (measured at 4fbf7df on the same container class);
+absolute numbers are machine-dependent, the *ratios* are the tracked
+signal.  Paired comparisons (fast vs dict engine) are measured
+interleaved best-of-N in this process, so load drifts hit both sides.
 """
 from __future__ import annotations
 
@@ -21,14 +25,16 @@ import sys
 import time
 from typing import Dict
 
-# Measured at d90c17b (pre-PR3), same best-of-3 harness as collect() below.
-BASELINE_PR2: Dict = {
-    "engine_fifo_events_per_sec": {"dict": 82_309.0},
+# The "current" section of BENCH_pr3.json, measured at 4fbf7df (PR 3).
+BASELINE_PR3: Dict = {
+    "engine_fifo_events_per_sec": {
+        "dict": 114_660.0, "static_cold": 406_958.0, "static_warm": 525_312.0},
     "engine_shared_tasks_per_sec": {
-        "200": 29_831.0, "800": 8_710.0, "3200": 3_217.0, "6400": 1_548.0},
+        "200": 263_286.0, "800": 224_867.0, "3200": 190_253.0,
+        "6400": 174_760.0},
     "what_if_points_per_sec": {
-        "roofline": 289.5, "analytic": 67.9, "des": 7.0},
-    "serve_sim_10k": {"wall_seconds": 5.235, "requests_per_sec": 1_910.0},
+        "roofline": 590.4, "analytic": 771.2, "des": 24.6},
+    "serve_sim_10k": {"wall_seconds": 0.517, "requests_per_sec": 19_347.0},
 }
 
 
@@ -55,26 +61,124 @@ def _what_if_points_per_sec() -> Dict[str, float]:
     return out
 
 
-def _serve_sim_10k() -> Dict[str, float]:
+def _serve_cost() -> object:
     from repro.core.config import get_arch
     from repro.core.hw import SystemDescription, tpu_v5e_chip
     from repro.core.taskgraph.builders import ShardPlan
-    from repro.serve_sim import (ContinuousBatchingScheduler, LengthDist,
-                                 ServingCostModelBuilder, poisson_workload,
-                                 simulate_serving)
+    from repro.serve_sim import ServingCostModelBuilder
 
     cfg = get_arch("qwen1.5-0.5b").model
     base = SystemDescription(name="v5e_chip", chip=tpu_v5e_chip(), torus=())
-    cost = ServingCostModelBuilder(
+    return ServingCostModelBuilder(
         cfg, shard=ShardPlan(data=1, model=1)).model_for(base)
-    wl = poisson_workload(120.0, 10_000,
-                          prompt=LengthDist(mean=512, cv=0.6),
-                          output=LengthDist(mean=96, cv=0.5), seed=0)
-    t0 = time.perf_counter()
-    rep = simulate_serving(cost, ContinuousBatchingScheduler, wl,
-                           replicas=4, slots=8)
-    wall = time.perf_counter() - t0
+
+
+def _traffic(n=10_000):
+    from repro.serve_sim import LengthDist, poisson_workload
+
+    return poisson_workload(120.0, n,
+                            prompt=LengthDist(mean=512, cv=0.6),
+                            output=LengthDist(mean=96, cv=0.5), seed=0)
+
+
+def _serve_sim_10k() -> Dict[str, float]:
+    import gc
+
+    from repro.serve_sim import ContinuousBatchingScheduler, simulate_serving
+
+    cost = _serve_cost()
+    wall = float("inf")
+    for _ in range(2):
+        gc.collect()
+        t0 = time.perf_counter()
+        rep = simulate_serving(cost, ContinuousBatchingScheduler, _traffic(),
+                               replicas=4, slots=8)
+        wall = min(wall, time.perf_counter() - t0)
     return {"wall_seconds": wall, "requests_per_sec": rep.n_requests / wall}
+
+
+def _serve_sim_10k_taskgraph(reps: int = 3) -> Dict[str, float]:
+    """10k requests with full task-graph injection (4 chunks + KV writes
+    per phase): array-backed dynamic engine vs the PR 3 dict path,
+    interleaved best-of-``reps``."""
+    from repro.serve_sim import ContinuousBatchingScheduler, ServingSimulator
+
+    import gc
+
+    cost = _serve_cost()
+    walls = {"fast": float("inf"), "dict": float("inf")}
+    n = 0
+    for _ in range(reps):
+        for engine in ("fast", "dict"):
+            gc.collect()                     # drain prior suites' garbage
+            t0 = time.perf_counter()
+            rep = ServingSimulator(cost, ContinuousBatchingScheduler,
+                                   _traffic(), replicas=4, slots=8,
+                                   phase_tasks=4, engine=engine).run()
+            walls[engine] = min(walls[engine], time.perf_counter() - t0)
+            n = rep.n_requests
+    return {"fast_wall_seconds": walls["fast"],
+            "dict_wall_seconds": walls["dict"],
+            "fast_requests_per_sec": n / walls["fast"],
+            "speedup_fast_vs_dict": walls["dict"] / walls["fast"]}
+
+
+def _serve_sim_10k_speculative() -> Dict[str, float]:
+    """10k requests under a scheduler declaring only ``decode_stable``:
+    every decode leap is speculative (snapshot + rollback on arrivals) —
+    the non-``steady_decode`` case that previously ran per-step."""
+    import gc
+
+    from benchmarks.bench_serve_sim import SpeculativeContinuousScheduler
+    from repro.serve_sim import simulate_serving
+
+    cost = _serve_cost()
+    wall = float("inf")
+    for _ in range(2):
+        gc.collect()
+        t0 = time.perf_counter()
+        rep = simulate_serving(cost, SpeculativeContinuousScheduler,
+                               _traffic(), replicas=4, slots=8)
+        wall = min(wall, time.perf_counter() - t0)
+    return {"wall_seconds": wall, "requests_per_sec": rep.n_requests / wall}
+
+
+def _persistent_pool() -> Dict[str, float]:
+    """Repeated ``explore(workers=4)`` sweeps: the first call pays the
+    fork + structural-graph broadcast, later calls must show no per-call
+    pool startup (they reuse workers and worker-side caches)."""
+    from repro.core.avsm.model import annotate_system
+    from repro.core.config import LM_SHAPES, get_arch
+    from repro.core.dse import DesignSpaceExplorer
+    from repro.core.hw import tpu_v5e_pod
+    from repro.core.parallel import close_pools
+    from repro.core.taskgraph.builders import ShardPlan, lm_step_ops
+
+    spec = get_arch("qwen1.5-0.5b")
+    ops = lm_step_ops(spec.model, LM_SHAPES["train_4k"], ShardPlan())
+    base = tpu_v5e_pod()
+    systems = {"base": base,
+               "fast_mem": annotate_system(base, mem_bandwidth=1638e9),
+               "fast_link": annotate_system(base, link_bandwidth=200e9),
+               "slow_mem": annotate_system(base, mem_bandwidth=500e9)}
+    dse = DesignSpaceExplorer({"w": ops})
+    t0 = time.perf_counter()
+    serial = dse.explore(systems, keep=4)
+    t_serial = time.perf_counter() - t0
+    close_pools()                            # measure a cold first call
+    calls = []
+    for _ in range(4):
+        t0 = time.perf_counter()
+        parallel = dse.explore(systems, keep=4, workers=4)
+        calls.append(time.perf_counter() - t0)
+    close_pools()
+    assert [(r.system, r.confirmed.step_time) for r in serial] == \
+        [(r.system, r.confirmed.step_time) for r in parallel]
+    steady = min(calls[1:])
+    return {"explore_serial_seconds": t_serial,
+            "explore_first_call_seconds": calls[0],
+            "explore_steady_call_seconds": steady,
+            "steady_vs_first_speedup": calls[0] / steady}
 
 
 def collect() -> Dict:
@@ -83,8 +187,13 @@ def collect() -> Dict:
     return {
         "engine_fifo_events_per_sec": bench_engine.fifo_events_per_sec(),
         "engine_shared_tasks_per_sec": bench_engine.shared_tasks_per_sec(),
+        "engine_dynamic_injection_events_per_sec":
+            bench_engine.dynamic_events_per_sec(),
         "what_if_points_per_sec": _what_if_points_per_sec(),
         "serve_sim_10k": _serve_sim_10k(),
+        "serve_sim_10k_taskgraph": _serve_sim_10k_taskgraph(),
+        "serve_sim_10k_speculative": _serve_sim_10k_speculative(),
+        "persistent_pool": _persistent_pool(),
     }
 
 
@@ -104,18 +213,18 @@ def _speedups(base: Dict, cur: Dict) -> Dict:
     return out
 
 
-def write(path: str = "BENCH_pr3.json") -> Dict:
+def write(path: str = "BENCH_pr4.json") -> Dict:
     current = collect()
     doc = {
-        "pr": 3,
-        "description": "Fast simulation core: virtual-time processor "
-                       "sharing, array-backed DES hot path, vectorized "
-                       "what-if sweeps, parallel DSE",
+        "pr": 4,
+        "description": "Fast dynamic simulation: array-backed event loop "
+                       "for injected task graphs, speculative decode-leap "
+                       "with rollback, persistent DSE worker pool",
         "python": sys.version.split()[0],
         "platform": platform.platform(),
-        "baseline_pr2": BASELINE_PR2,
+        "baseline_pr3": BASELINE_PR3,
         "current": current,
-        "speedup_vs_pr2": _speedups(BASELINE_PR2, current),
+        "speedup_vs_pr3": _speedups(BASELINE_PR3, current),
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=False)
@@ -128,5 +237,9 @@ if __name__ == "__main__":
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-    out = write(sys.argv[1] if len(sys.argv) > 1 else "BENCH_pr3.json")
-    print(json.dumps(out["speedup_vs_pr2"], indent=2))
+    out = write(sys.argv[1] if len(sys.argv) > 1 else "BENCH_pr4.json")
+    print(json.dumps({"speedup_vs_pr3": out["speedup_vs_pr3"],
+                      "taskgraph": out["current"]["serve_sim_10k_taskgraph"],
+                      "speculative":
+                          out["current"]["serve_sim_10k_speculative"],
+                      "pool": out["current"]["persistent_pool"]}, indent=2))

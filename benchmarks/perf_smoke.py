@@ -1,19 +1,26 @@
 """CI perf-smoke: fail if simulation-core throughput regresses.
 
 Runs the DES and serve-sim microbenchmarks and enforces conservative
-floors — roughly a third of the throughput measured on the PR 3 container
-(see ``BENCH_pr3.json``), so ordinary CI-machine variance passes but a
-reintroduced O(n^2) hot path or per-task object churn fails loudly:
+floors — roughly a third of the throughput measured on the PR 3/PR 4
+containers (see ``BENCH_pr3.json`` / ``BENCH_pr4.json``), so ordinary
+CI-machine variance passes but a reintroduced O(n^2) hot path or
+per-task object churn fails loudly:
 
-  * fifo static fast path (warm cache)  >= 120k events/s
-    (seed dict engine: ~86k; PR 3: ~400k)
-  * shared-channel burst, n=3200       >= 25k tasks/s
-    (seed: ~2.3k — the quadratic collapse; PR 3: ~160k)
+  * fifo static fast path (warm cache)  >= 170k events/s
+    (seed dict engine: ~86k; PR 3 measured: ~525k)
+  * shared-channel burst, n=3200       >= 60k tasks/s
+    (seed: ~2.3k — the quadratic collapse; PR 3 measured: ~190k)
   * shared-channel flatness n=6400/200 >= 0.3
     (quadratic scaling gives ~0.12: completions per burst grow 32x while
     per-event cost also grows 32x)
-  * serve_sim 10k requests             >= 4500 req/wall-s
-    (seed: ~1.9k; PR 3: ~14k)
+  * serve_sim 10k requests             >= 6400 req/wall-s
+    (seed: ~1.9k; PR 3 measured: ~19k)
+  * dynamic injection, fast engine     >= 150k events/s
+    (PR 4's array-backed ``DynamicSimulator`` + template instantiation;
+    the dict engine measures ~73k on the same scenario)
+  * serve_sim 10k, speculative leap    >= 7000 req/wall-s
+    (a ``decode_stable``-only scheduler: every decode fusion takes the
+    snapshot/rollback path; these policies ran per-step before PR 4)
 
 Exit code 0 on pass, 1 on any floor violation.
 """
@@ -27,16 +34,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 FLOORS = {
-    "fifo_static_warm_events_per_sec": 120_000.0,
-    "shared_3200_tasks_per_sec": 25_000.0,
+    "fifo_static_warm_events_per_sec": 170_000.0,
+    "shared_3200_tasks_per_sec": 60_000.0,
     "shared_flatness_6400_over_200": 0.3,
-    "serve_sim_requests_per_sec": 4_500.0,
+    "serve_sim_requests_per_sec": 6_400.0,
+    "dynamic_injection_fast_events_per_sec": 150_000.0,
+    "serve_sim_speculative_requests_per_sec": 7_000.0,
 }
 
 
 def main() -> int:
     from benchmarks import bench_engine
-    from benchmarks.perf_record import _serve_sim_10k
+    from benchmarks.perf_record import (_serve_sim_10k,
+                                        _serve_sim_10k_speculative)
 
     measured = {}
     fifo = bench_engine.fifo_events_per_sec()
@@ -45,8 +55,13 @@ def main() -> int:
     measured["shared_3200_tasks_per_sec"] = shared["3200"]
     measured["shared_flatness_6400_over_200"] = \
         shared["6400"] / shared["200"]
+    measured["dynamic_injection_fast_events_per_sec"] = \
+        bench_engine.dynamic_events_per_sec()["fast"]
     serve = _serve_sim_10k()
     measured["serve_sim_requests_per_sec"] = serve["requests_per_sec"]
+    spec = _serve_sim_10k_speculative()
+    measured["serve_sim_speculative_requests_per_sec"] = \
+        spec["requests_per_sec"]
 
     failed = False
     for key, floor in FLOORS.items():

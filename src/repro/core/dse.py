@@ -76,6 +76,24 @@ class ServingSweepResult:
 _structural_key = structural_key
 
 
+def _serving_scenario(common, sc: Tuple[str, str, str]) -> "ServingSweepResult":
+    """Worker-pool job for :meth:`DesignSpaceExplorer.sweep_serving`: one
+    (system, traffic, scheduler) scenario.  Module-level and argument-
+    explicit so it ships to the persistent pool when the factories are
+    picklable; lambda factories transparently fall back to the one-shot
+    fork pool (which inherits ``common`` by memory copy)."""
+    from repro.serve_sim.simulator import simulate_serving
+
+    costs, traffics, schedulers, replicas, slots = common
+    sname, tname, kname = sc
+    rep = simulate_serving(costs[sname], schedulers[kname],
+                           traffics[tname](),
+                           replicas=replicas, slots=slots)
+    rep = dataclasses.replace(rep, sim_result=None)
+    return ServingSweepResult(
+        traffic=tname, scheduler=kname, system=sname, report=rep)
+
+
 class DesignSpaceExplorer:
     """Sweeps named workloads over systems and plans with graph caching."""
 
@@ -105,6 +123,31 @@ class DesignSpaceExplorer:
         self.stats["reannotations"] += 1
         return reannotate(hit, system)
 
+    def _pool_estimates(self, graphs: Sequence[CompiledGraph], backend: str,
+                        workers: int) -> List[EstimateReport]:
+        """Estimate ``graphs`` on the persistent worker pool: each unique
+        structure is broadcast once (``ensure_shared``), each point ships
+        only its duration vector + system annotations, and workers keep
+        their structural caches across points *and across repeated
+        sweep/explore calls* — no per-call pool startup after the first.
+        Falls back to shipping whole graphs if a structure cannot be
+        broadcast."""
+        import numpy as np
+
+        from repro.core.estimator import estimate_and_strip, estimate_variant
+        from repro.core.parallel import ensure_shared
+
+        items = []
+        for g in graphs:
+            key = g.pool_key()
+            if not ensure_shared(workers, key, g):
+                return parallel_map(estimate_and_strip, list(graphs),
+                                    workers, common=backend)
+            items.append((key, np.asarray(g.durations), g.system,
+                          g.resources))
+        return parallel_map(estimate_variant, items, workers,
+                            common=backend)
+
     # ---- sweeping --------------------------------------------------------
 
     def sweep(self, systems: Mapping[str, SystemDescription],
@@ -115,10 +158,12 @@ class DesignSpaceExplorer:
         """Estimate every (workload, system, plan) point with ``backend``,
         sorted fastest-first.
 
-        ``workers > 1`` fans the points out over forked worker processes
-        (results are deterministic and ordered; reports come back with
-        ``sim_result=None``).  Structural compiles happen in the parent
-        first, so children inherit the graph cache copy-on-write.
+        ``workers > 1`` fans the points out over the persistent worker
+        pool (results are deterministic and ordered; reports come back
+        with ``sim_result=None``).  Structural compiles and re-annotation
+        happen in the parent first — workers receive ready compiled
+        graphs, and the pool is reused across repeated ``sweep`` /
+        ``explore`` calls instead of re-forking per call.
         """
         plans = list(plans) if plans else [CompilePlan()]
         names = list(workloads) if workloads else list(self.workloads)
@@ -129,16 +174,9 @@ class DesignSpaceExplorer:
                   for plan in plans]
         self.stats["estimates"] += len(points)
         if workers > 1 and len(points) > 1:
-            for w, sname, plan in points:      # warm the cache pre-fork
-                self.compiled(w, systems[sname], plan)
-
-            def one(pt: Tuple) -> EstimateReport:
-                w, sname, plan = pt
-                rep = est.estimate(self.compiled(w, systems[sname], plan))
-                rep.sim_result = None
-                return rep
-
-            reports = parallel_map(one, points, workers)
+            reports = self._pool_estimates(
+                [self.compiled(w, systems[sname], plan)
+                 for w, sname, plan in points], backend, workers)
         else:
             reports = [est.estimate(self.compiled(w, systems[sname], plan))
                        for w, sname, plan in points]
@@ -170,16 +208,9 @@ class DesignSpaceExplorer:
             survivors.append(r)
         self.stats["estimates"] += len(survivors)
         if workers > 1 and len(survivors) > 1:
-            for r in survivors:                # warm the cache pre-fork
-                self.compiled(r.workload, systems[r.system], r.plan)
-
-            def one(r: SweepResult) -> EstimateReport:
-                rep = confirm.estimate(
-                    self.compiled(r.workload, systems[r.system], r.plan))
-                rep.sim_result = None
-                return rep
-
-            confirmed = parallel_map(one, survivors, workers)
+            confirmed = self._pool_estimates(
+                [self.compiled(r.workload, systems[r.system], r.plan)
+                 for r in survivors], confirm_backend, workers)
         else:
             confirmed = [
                 confirm.estimate(
@@ -206,10 +237,14 @@ class DesignSpaceExplorer:
         factories returning fresh seeded instances per run.  Results are
         sorted by p99 TTFT (best first).
 
-        ``workers > 1`` runs the scenarios on a forked worker pool.  Each
-        scenario builds its workload/scheduler from its own seeded
-        factories, so results are bit-identical to a serial run — asserted
-        by ``tests/test_engine_parity.py`` — except that reports come back
+        ``workers > 1`` runs the scenarios on the persistent worker pool
+        (fork once, reused across repeated sweeps) when the traffic and
+        scheduler factories are picklable — e.g. classes, module-level
+        functions, or ``functools.partial`` — and falls back to a
+        one-shot fork pool for lambda factories.  Each scenario builds
+        its workload/scheduler from its own seeded factories, so results
+        are bit-identical to a serial run — asserted by
+        ``tests/test_engine_parity.py`` — except that reports come back
         with ``sim_result=None`` (traces stay in the worker).
         """
         from repro.serve_sim.simulator import simulate_serving
@@ -221,8 +256,7 @@ class DesignSpaceExplorer:
         self.stats["estimates"] += len(scenarios)
         costs: Dict[str, object] = {}     # one cost model per system
 
-        def run_one(sc: Tuple[str, str, str],
-                    keep_detail: bool = True) -> ServingSweepResult:
+        def run_one(sc: Tuple[str, str, str]) -> ServingSweepResult:
             sname, tname, kname = sc
             cost = costs.get(sname)
             if cost is None:
@@ -230,16 +264,16 @@ class DesignSpaceExplorer:
             rep = simulate_serving(cost, schedulers[kname],
                                    traffics[tname](),
                                    replicas=replicas, slots=slots)
-            if not keep_detail:
-                rep = dataclasses.replace(rep, sim_result=None)
             return ServingSweepResult(
                 traffic=tname, scheduler=kname, system=sname, report=rep)
 
         if workers > 1 and len(scenarios) > 1:
-            for sname, system in systems.items():   # warm pre-fork: children
-                costs[sname] = cost_builder.model_for(system)   # inherit
-            out = parallel_map(lambda sc: run_one(sc, keep_detail=False),
-                               scenarios, workers)
+            for sname, system in systems.items():   # cost models up front
+                costs[sname] = cost_builder.model_for(system)
+            out = parallel_map(
+                _serving_scenario, scenarios, workers,
+                common=(costs, dict(traffics), dict(schedulers),
+                        replicas, slots))
         else:
             out = [run_one(sc) for sc in scenarios]
         out.sort(key=lambda r: r.ttft_p99)

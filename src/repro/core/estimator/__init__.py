@@ -109,23 +109,53 @@ class EstimatorBackend(abc.ABC):
         """Estimate a batch of graphs — typically re-annotated what-if
         variants of one structure (``DesignSpaceExplorer.what_if_sweep``).
 
-        The base implementation loops (optionally across a forked worker
-        pool); the roofline/analytic backends override it with vectorized
-        paths that evaluate every variant as one duration matrix.  When
-        ``workers > 1`` the returned reports carry ``sim_result=None``
-        (simulation traces do not cross the process boundary).
+        The base implementation loops (optionally across the persistent
+        worker pool — the job is a module-level function with the backend
+        name broadcast once, so it ships pickled instead of re-forking a
+        pool per call); the roofline/analytic backends override it with
+        vectorized paths that evaluate every variant as one duration
+        matrix, and the DES backend with a shared-memory duration matrix.
+        When ``workers > 1`` the returned reports carry
+        ``sim_result=None`` (traces do not cross the process boundary).
         """
         graphs = list(graphs)
         if workers > 1 and len(graphs) > 1:
             from repro.core.parallel import parallel_map
 
-            def one(g: CompiledGraph) -> EstimateReport:
-                rep = self.estimate(g)
-                rep.sim_result = None
-                return rep
-
-            return parallel_map(one, graphs, workers)
+            return parallel_map(estimate_and_strip, graphs, workers,
+                                common=self.name)
         return [self.estimate(g) for g in graphs]
+
+
+def estimate_and_strip(backend_name: str,
+                       graph: CompiledGraph) -> EstimateReport:
+    """Worker-pool job: estimate one graph with the named backend and
+    strip the simulation trace (module-level so it pickles by name)."""
+    rep = get_backend(backend_name).estimate(graph)
+    rep.sim_result = None
+    return rep
+
+
+def estimate_variant(backend_name: str, item) -> EstimateReport:
+    """Worker-pool job for sweep points that are re-annotated variants of
+    a broadcast structural graph: ``item = (pool key, durations, system,
+    resources)``.  The heavy task list was shipped once per pool via
+    ``repro.core.parallel.ensure_shared`` (``CompiledGraph.pool_key``);
+    each sweep point reassembles its variant around the stored structure,
+    so the worker's lazily built caches (dependency CSR, per-op arrays)
+    are reused across every point *and every subsequent sweep call*."""
+    from repro.core.parallel import WORKER_STORE
+
+    key, durations, system, resources = item
+    g0: CompiledGraph = WORKER_STORE[key]
+    work, ridx, fidx, _ = g0.anno_arrays()
+    variant = CompiledGraph(
+        tasks=g0.tasks, ops=g0.ops, system=system, plan=g0.plan,
+        resources=resources, _anno_arrays=(work, ridx, fidx, durations),
+        _shared=g0._shared)
+    rep = get_backend(backend_name).estimate(variant)
+    rep.sim_result = None
+    return rep
 
 
 _REGISTRY: Dict[str, Callable[[], EstimatorBackend]] = {}

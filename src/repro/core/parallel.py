@@ -1,32 +1,359 @@
 """Deterministic process-parallel map for sweep fan-out.
 
 The DSE and serving sweeps are embarrassingly parallel — every point is an
-independent, seeded simulation — but the payloads (explorers with compiled
-graph caches, cost-model builders, lambda scheduler factories) are not
-picklable.  ``parallel_map`` therefore uses the fork start method: the
-work function and item list are stashed in a module global *before* the
-pool forks, children inherit them by memory copy, and only the item
-*index* crosses the process boundary.  Results come back pickled in item
-order, so output is deterministic and bit-identical to a serial run
-(each item's computation is self-contained and seeded).
+independent, seeded simulation — and a sweep-heavy ``explore()`` loop
+calls :func:`parallel_map` many times in quick succession.  Three
+execution paths, fastest first:
 
-Falls back to a serial map when ``workers <= 1``, when fork is
-unavailable (non-POSIX platforms), or when the pool fails for any reason
-— parallelism is a pure accelerator, never a semantic change.
+  * **Persistent worker pool** (:class:`WorkerPool`) — ``workers`` forked
+    processes spawned lazily on first use and *reused across calls*, so
+    the ~0.5 s per-call pool startup of the legacy path is paid once per
+    process instead of once per sweep.  Jobs cross the process boundary
+    pickled: the work function (by qualified name) and an optional
+    ``common`` payload are broadcast once per map, then items stream to
+    workers one-in-flight each and results stream back in index order.
+    Requires ``fn``/``common``/items to be picklable — module-level
+    functions with explicit arguments, which is how ``repro.core.dse``
+    and the estimator backends submit their work.
+  * **Legacy per-call fork pool** — for unpicklable payloads (closures,
+    lambda factories): the function and item list are stashed in a module
+    global *before* the pool forks, children inherit them by memory copy,
+    and only the item index crosses the boundary.
+  * **Serial** — ``workers <= 1``, single item, platforms without fork,
+    or any pool failure.
+
+All paths return results in item order, computed by pure seeded
+functions, so output is deterministic and bit-identical to a serial run.
+
+Failure containment: if a pool worker dies mid-map (killed, OOM, crashed
+native code), the parent sees EOF on the result pipe instead of hanging,
+disposes the pool, and finishes the remaining items serially —
+parallelism is a pure accelerator, never a semantic change.  Workers set
+``REPRO_POOL_WORKER=1`` in their environment, and nested ``parallel_map``
+calls inside a worker run serially.
 
 Constraint: the work function must not call into multithreaded native
-runtimes (JAX/XLA) inside the child — forked children inherit the
-parent's thread state without its threads.  The sweep workloads here are
+runtimes (JAX/XLA) inside a child — forked children inherit the parent's
+thread state without its threads.  The sweep workloads here are
 pure-Python/numpy simulations, which is why the fork warning CPython
 emits when JAX is merely *imported* in the parent is suppressed.
 """
 from __future__ import annotations
 
+import atexit
+import os
+import pickle
+import selectors
+import signal
 import warnings
-from typing import Callable, List, Sequence, TypeVar
+from typing import Callable, Dict, List, Optional, Sequence, TypeVar
 
 T = TypeVar("T")
 R = TypeVar("R")
+
+#: set in pool workers' environments; lets work functions (and tests)
+#: detect that they run inside a forked worker.
+WORKER_ENV = "REPRO_POOL_WORKER"
+
+#: per-map scratch space for work functions running inside a pool worker
+#: (e.g. an attached shared-memory duration matrix); cleared when the
+#: worker receives the next map's broadcast.
+WORKER_STATE: Dict = {}
+
+#: sticky per-process object store: :func:`ensure_shared` broadcasts a
+#: heavy payload (e.g. a structural compiled graph) to every pool worker
+#: *once*; subsequent maps ship only a small key per item.  The parent
+#: keeps the object too (by reference, no copy), so a serial fallback
+#: resolves the same keys.  Lives until the pool is closed.
+WORKER_STORE: Dict = {}
+
+_PICKLE_PROTO = pickle.HIGHEST_PROTOCOL
+
+
+class _Unpicklable(Exception):
+    """The payload cannot cross a persistent-pool pipe."""
+
+
+def _serial(fn, items, common) -> List:
+    if common is None:
+        return [fn(x) for x in items]
+    return [fn(common, x) for x in items]
+
+
+def _worker_loop(job_f, res_f) -> None:
+    """Child main loop: consume (begin | item | quit) messages, stream
+    ("ok" | "err", index, value) responses."""
+    fn = common = None
+    while True:
+        try:
+            msg = pickle.load(job_f)
+        except (EOFError, OSError):
+            return
+        tag = msg[0]
+        if tag == "begin":
+            _, fn, common = msg
+            WORKER_STATE.clear()
+        elif tag == "store":
+            _, key, payload = msg
+            WORKER_STORE[key] = payload
+        elif tag == "item":
+            _, idx, item = msg
+            try:
+                val = fn(item) if common is None else fn(common, item)
+                out = ("ok", idx, val)
+            except BaseException as e:          # noqa: BLE001
+                out = ("err", idx, repr(e))
+            try:
+                pickle.dump(out, res_f, protocol=_PICKLE_PROTO)
+            except Exception as e:              # unpicklable result
+                pickle.dump(("err", idx, repr(e)), res_f,
+                            protocol=_PICKLE_PROTO)
+            res_f.flush()
+        else:                                   # "quit"
+            return
+
+
+class _WorkerFailure(Exception):
+    """A worker died or a job failed inside it."""
+
+
+class WorkerPool:
+    """Persistent fork-based worker pool (see the module docstring).
+
+    Lifecycle: construction is free; ``workers`` processes fork lazily on
+    the first :meth:`map` and are reused by every subsequent call until
+    :meth:`close` (or interpreter exit — an ``atexit`` hook closes the
+    module-level pools).  A pool that loses a worker marks itself
+    ``broken``; :func:`get_pool` then replaces it transparently.
+    """
+
+    def __init__(self, workers: int):
+        if workers < 2:
+            raise ValueError("a pool needs workers >= 2")
+        self.workers = workers
+        self.broken = False
+        self._procs: List[List] = []    # [pid, job file(w), result file(r)]
+        self._stored: set = set()       # keys broadcast to every worker
+
+    @property
+    def spawned(self) -> bool:
+        return bool(self._procs)
+
+    @property
+    def pids(self) -> List[int]:
+        return [p[0] for p in self._procs]
+
+    def _spawn(self) -> None:
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message=".*fork.*", category=DeprecationWarning)
+            warnings.filterwarnings(
+                "ignore", message=".*os.fork.*", category=RuntimeWarning)
+            for _ in range(self.workers):
+                job_r, job_w = os.pipe()
+                res_r, res_w = os.pipe()
+                pid = os.fork()
+                if pid == 0:                    # ---- child ----
+                    try:
+                        os.close(job_w)
+                        os.close(res_r)
+                        # drop inherited ends of earlier workers' pipes so
+                        # their EOF-based shutdown still works
+                        for p in self._procs:
+                            p[1].close()
+                            p[2].close()
+                        os.environ[WORKER_ENV] = "1"
+                        _worker_loop(os.fdopen(job_r, "rb"),
+                                     os.fdopen(res_w, "wb"))
+                    finally:
+                        os._exit(0)
+                os.close(job_r)                 # ---- parent ----
+                os.close(res_w)
+                self._procs.append([pid, os.fdopen(job_w, "wb"),
+                                    os.fdopen(res_r, "rb")])
+
+    def ensure(self, key, payload) -> None:
+        """Broadcast ``payload`` under ``key`` to every worker, once per
+        pool lifetime (pipes are FIFO, so a later map's items may safely
+        reference the key).  Raises :class:`_Unpicklable` if it cannot be
+        shipped."""
+        if key in self._stored:
+            return
+        try:
+            blob = pickle.dumps(("store", key, payload),
+                                protocol=_PICKLE_PROTO)
+        except Exception as e:
+            raise _Unpicklable(str(e)) from e
+        if not self._procs:
+            self._spawn()
+        try:
+            for _, job_f, _ in self._procs:
+                job_f.write(blob)
+                job_f.flush()
+        except Exception:
+            self.broken = True
+            self.close()
+            raise _WorkerFailure("broadcast failed")
+        self._stored.add(key)
+
+    def map(self, fn: Callable, items: Sequence, common=None) -> List:
+        """``[fn(x) for x in items]`` (or ``fn(common, x)``), fanned out
+        over the persistent workers.  Raises :class:`_Unpicklable` if the
+        payload cannot be shipped; recovers from dying workers by
+        finishing the remaining items serially."""
+        if self.broken:
+            raise _WorkerFailure("pool is broken")
+        try:
+            begin = pickle.dumps(("begin", fn, common),
+                                 protocol=_PICKLE_PROTO)
+        except Exception as e:
+            raise _Unpicklable(str(e)) from e
+        if not self._procs:
+            self._spawn()
+        n = len(items)
+        nw = min(self.workers, n)
+        results: List = [None] * n
+        done = [False] * n
+        # Static round-robin assignment, one item in flight per worker:
+        # deterministic, deadlock-free (a worker never has more than one
+        # response buffered), and load-balanced within each queue.
+        queues = [list(range(w, n, nw))[::-1] for w in range(nw)]
+
+        def send_item(w: int, idx: int) -> None:
+            # pickle to bytes first: a payload that cannot be pickled is
+            # the *caller's* problem (fall back to the fork pool), not a
+            # pool failure — the workers stay healthy
+            try:
+                blob = pickle.dumps(("item", idx, items[idx]),
+                                    protocol=_PICKLE_PROTO)
+            except Exception as e:
+                raise _Unpicklable(str(e)) from e
+            job_f = self._procs[w][1]
+            job_f.write(blob)
+            job_f.flush()
+
+        sel = selectors.DefaultSelector()
+        in_flight: set = set()       # workers with an unanswered item
+        try:
+            try:
+                for w in range(nw):
+                    self._procs[w][1].write(begin)
+                    send_item(w, queues[w].pop())
+                    sel.register(self._procs[w][2], selectors.EVENT_READ, w)
+                    in_flight.add(w)
+                while in_flight:
+                    for key, _ in sel.select():
+                        w = key.data
+                        tag, idx, val = pickle.load(self._procs[w][2])
+                        if tag == "err":
+                            raise _WorkerFailure(val)
+                        results[idx] = val
+                        done[idx] = True
+                        in_flight.discard(w)
+                        q = queues[w]
+                        if q:
+                            send_item(w, q.pop())
+                            in_flight.add(w)
+                        else:
+                            sel.unregister(key.fileobj)
+                sel.close()
+            except _Unpicklable:
+                # drain in-flight responses so the pool stays reusable,
+                # then let parallel_map retry on the legacy fork path
+                for w in list(in_flight):
+                    try:
+                        tag, idx, val = pickle.load(self._procs[w][2])
+                        if tag == "ok":
+                            results[idx] = val
+                            done[idx] = True
+                    except Exception:
+                        self.broken = True
+                sel.close()
+                if self.broken:
+                    self.close()
+                raise
+        except _Unpicklable:
+            raise
+        except Exception:
+            # A worker died (EOF/BrokenPipe) or a job failed inside one:
+            # dispose the pool and finish every unfinished item serially
+            # in the parent — same results, and a genuine fn error
+            # surfaces exactly as a serial run would raise it.
+            self.broken = True
+            self.close()
+            for i in range(n):
+                if not done[i]:
+                    results[i] = (fn(items[i]) if common is None
+                                  else fn(common, items[i]))
+        return results
+
+    def close(self) -> None:
+        """Terminate the workers (EOF on their job pipes, then SIGKILL as
+        a backstop) and reap them.  Idempotent."""
+        procs, self._procs = self._procs, []
+        for pid, job_f, res_f in procs:
+            try:
+                pickle.dump(("quit",), job_f, protocol=_PICKLE_PROTO)
+                job_f.flush()
+            except Exception:
+                pass
+            for f in (job_f, res_f):
+                try:
+                    f.close()
+                except Exception:
+                    pass
+        for pid, _, _ in procs:
+            try:
+                if os.waitpid(pid, os.WNOHANG)[0] == 0:
+                    os.kill(pid, signal.SIGKILL)
+                    os.waitpid(pid, 0)
+            except (ChildProcessError, ProcessLookupError, OSError):
+                pass
+
+
+_POOLS: Dict[int, WorkerPool] = {}
+
+
+def get_pool(workers: int) -> WorkerPool:
+    """The shared persistent pool for ``workers`` (created lazily,
+    replaced transparently if broken)."""
+    pool = _POOLS.get(workers)
+    if pool is None or pool.broken:
+        pool = _POOLS[workers] = WorkerPool(workers)
+    return pool
+
+
+def ensure_shared(workers: int, key, payload) -> bool:
+    """Make ``payload`` resolvable as ``WORKER_STORE[key]`` both in this
+    process (by reference — serial paths and fallbacks see the original
+    object) and in every persistent-pool worker for ``workers`` (pickled
+    and broadcast once per pool).  Returns False when the payload cannot
+    reach the workers; callers may then skip key-based jobs."""
+    WORKER_STORE[key] = payload
+    if workers <= 1 or not hasattr(os, "fork") \
+            or os.environ.get(WORKER_ENV):
+        return True                     # serial-only: parent store suffices
+    try:
+        get_pool(workers).ensure(key, payload)
+        return True
+    except Exception:
+        return False
+
+
+def close_pools() -> None:
+    """Explicitly shut down every module-level pool (also runs atexit)."""
+    for pool in list(_POOLS.values()):
+        pool.close()
+    _POOLS.clear()
+    WORKER_STORE.clear()
+
+
+atexit.register(close_pools)
+
+
+# ---------------------------------------------------------------------------
+# Legacy per-call fork pool (unpicklable payloads inherit by memory copy)
+# ---------------------------------------------------------------------------
 
 # (fn, items) visible to forked children; only valid while a pool is live.
 _PAYLOAD = None
@@ -37,23 +364,17 @@ def _call_indexed(i: int):
     return fn(items[i])
 
 
-def parallel_map(fn: Callable[[T], R], items: Sequence[T],
-                 workers: int = 1) -> List[R]:
-    """``[fn(x) for x in items]``, fanned out over ``workers`` forked
-    processes when ``workers > 1``.  ``fn``'s return values must be
-    picklable; ``fn`` and the items themselves need not be."""
-    items = list(items)
-    if workers <= 1 or len(items) <= 1:
-        return [fn(x) for x in items]
+def _forked_map(fn, items: List, workers: int) -> Optional[List]:
+    """One-shot fork pool; returns None if it cannot run here."""
     try:
         import multiprocessing as mp
 
         ctx = mp.get_context("fork")
     except (ImportError, ValueError):        # platform without fork
-        return [fn(x) for x in items]
+        return None
     global _PAYLOAD
     if _PAYLOAD is not None:                 # no nested pools
-        return [fn(x) for x in items]
+        return None
     _PAYLOAD = (fn, items)
     try:
         from concurrent.futures import ProcessPoolExecutor
@@ -65,6 +386,40 @@ def parallel_map(fn: Callable[[T], R], items: Sequence[T],
                                      mp_context=ctx) as pool:
                 return list(pool.map(_call_indexed, range(len(items))))
     except Exception:                        # pool/pickling failure
-        return [fn(x) for x in items]
+        return None
     finally:
         _PAYLOAD = None
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def parallel_map(fn: Callable, items: Sequence, workers: int = 1,
+                 common=None) -> List:
+    """``[fn(x) for x in items]`` (or ``[fn(common, x) for x in items]``
+    when ``common`` is given), fanned out over ``workers`` processes when
+    ``workers > 1``.
+
+    Picklable payloads (module-level ``fn``, picklable ``common``/items)
+    run on the persistent :class:`WorkerPool` — fork once, reuse across
+    calls; ``common`` is broadcast once per map.  Unpicklable payloads
+    fall back to the legacy one-shot fork pool; any failure falls back to
+    serial.  Return values must always be picklable.
+    """
+    items = items if isinstance(items, list) else list(items)
+    if workers <= 1 or len(items) <= 1 or not hasattr(os, "fork") \
+            or os.environ.get(WORKER_ENV):
+        return _serial(fn, items, common)
+    try:
+        return get_pool(workers).map(fn, items, common)
+    except _Unpicklable:
+        pass
+    except Exception:
+        return _serial(fn, items, common)
+    wrapped = fn if common is None else (lambda x: fn(common, x))
+    out = _forked_map(wrapped, items, workers)
+    if out is None:
+        return _serial(fn, items, common)
+    return out

@@ -19,6 +19,7 @@ Two artifacts make the what-if loop cheap:
 """
 from __future__ import annotations
 
+import itertools
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -43,6 +44,9 @@ class CompilePlan:
     overlap_grad_comm: bool = True   # grad collectives off the critical path
     weights_resident: bool = False   # pin weights on-chip (paper's NCE mode)
 
+
+# Process-unique suffixes for CompiledGraph.pool_key().
+_POOL_KEYS = itertools.count()
 
 # Index order for the vectorized re-annotation arrays.
 RATE_KEYS = ("matrix", "vector", "mem", "ici", "dcn")
@@ -75,6 +79,27 @@ class CompiledGraph:
         and carries only a fresh duration array.
         """
         return self.anno_arrays()[3]
+
+    def pool_key(self) -> str:
+        """Process-unique sticky token for persistent-pool broadcasts
+        (``repro.core.parallel.ensure_shared``): every re-annotated
+        variant of one structure shares the token (``_shared`` is aliased),
+        so the heavy task list crosses the process boundary once per pool
+        and sweep items ship only duration vectors."""
+        key = self._shared.get("pool_key")
+        if key is None:
+            key = self._shared["pool_key"] = f"graph:{next(_POOL_KEYS)}"
+        return key
+
+    def __getstate__(self):
+        # Persistent-pool jobs ship compiled graphs across process
+        # boundaries; ``_shared`` holds lazily rebuilt structural caches
+        # (dependency CSR, per-op arrays), so don't pay to pickle them —
+        # a worker rebuilds on first use and reuses them for the rest of
+        # its map (the unpickled graph is shared across its items).
+        state = self.__dict__.copy()
+        state["_shared"] = {}
+        return state
 
     def sim_cache(self):
         """Dependency-CSR cache for the DES fast path

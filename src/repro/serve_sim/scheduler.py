@@ -129,6 +129,20 @@ class BatchScheduler(abc.ABC):
     #: whose decisions depend on time or queue state mid-batch must leave
     #: this False.
     steady_decode: bool = False
+    #: weaker contract enabling the *speculative* decode leap: between slot
+    #: finishes, a ``Decode`` decision is a pure function of the queue and
+    #: the slot occupancy — it may change when the queue changes (an
+    #: arrival) but only if admission is possible (a free slot exists and
+    #: no ``hold_finished`` batch is draining); with admission blocked the
+    #: decision must repeat.  The simulator then fuses decode steps
+    #: optimistically even while admission is possible, snapshots the
+    #: per-step boundaries, and rolls the fused task back to the first
+    #: boundary at/after an arrival that lands mid-leap, replaying from
+    #: there per the policy's real decisions — exact parity with per-step
+    #: simulation (tests/test_serve_sim.py).  Policies whose mid-batch
+    #: decisions depend on ``now``, on step count, or on queue depth while
+    #: no slot is free must leave this False.
+    decode_stable: bool = False
 
     @abc.abstractmethod
     def decide(self, replica: ReplicaState, queue: Deque[Request],
@@ -145,6 +159,7 @@ class ContinuousBatchingScheduler(BatchScheduler):
 
     name = "continuous"
     steady_decode = True
+    decode_stable = True
 
     def decide(self, replica: ReplicaState, queue: Deque[Request],
                now: float) -> Action:
@@ -161,6 +176,7 @@ class BucketedPrefillScheduler(BatchScheduler):
 
     name = "bucketed"
     steady_decode = True
+    decode_stable = True
 
     def __init__(self, bucket: int = 128):
         if bucket < 1:
@@ -185,6 +201,7 @@ class StaticBatchScheduler(BatchScheduler):
     name = "static"
     hold_finished = True
     steady_decode = True
+    decode_stable = True
 
     def __init__(self, batch_size: int = 8, max_wait: float = 0.5):
         if batch_size < 1:

@@ -27,7 +27,7 @@ accuracy loop, extended to serving.
 """
 from __future__ import annotations
 
-from bisect import insort
+from bisect import bisect_left, insort
 from collections import deque
 from dataclasses import dataclass, field
 from heapq import heappop, heappush
@@ -35,7 +35,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.sim.engine import SimResult, Simulator
+from repro.core.sim.engine import (DynamicSimulator, GraphTemplate,
+                                   SimResult, Simulator, Task)
 from repro.serve_sim.cost import ServingCostModel
 from repro.serve_sim.scheduler import (BatchScheduler, Decode, InFlight,
                                        Prefill, ReplicaState, Wait)
@@ -157,9 +158,26 @@ class ServingSimulator:
                  workload: Workload,
                  replicas: int = 1,
                  slots: int = 8,
-                 record_events: bool = False):
+                 record_events: bool = False,
+                 phase_tasks: int = 0,
+                 engine: str = "fast"):
+        """``phase_tasks > 0`` switches from the ServiceLane express path
+        to *full task-graph injection*: every prefill/decode phase is
+        injected as a real task graph (``phase_tasks`` chained compute
+        chunks, each followed by a KV-write DMA on a sibling resource)
+        whose chunk durations exact-split the phase cost, so serving
+        metrics match the express path to float round-off while traces
+        show intra-phase structure.  ``engine`` selects the injection
+        engine: ``"fast"`` (array-backed :class:`DynamicSimulator` with
+        :class:`GraphTemplate` instantiation, ~3-4x) or ``"dict"`` (the
+        general :class:`Simulator`, the parity baseline)."""
         if replicas < 1 or slots < 1:
             raise ValueError("need replicas >= 1 and slots >= 1")
+        if phase_tasks < 0:
+            raise ValueError("phase_tasks must be >= 0")
+        if engine not in ("fast", "dict"):
+            raise ValueError(f"unknown engine {engine!r} "
+                             "(expected 'fast' or 'dict')")
         self.cost = cost
         self.workload = workload
         self.replicas = [ReplicaState(index=r, slots=slots)
@@ -167,15 +185,28 @@ class ServingSimulator:
         self.schedulers = [scheduler_factory() for _ in range(replicas)]
         self.slots = slots
         self.record_events = record_events
+        self.phase_tasks = int(phase_tasks)
         self.events: List[Tuple] = []
         self.pending: deque = deque()
         self.metrics: List[RequestMetrics] = []
-        self._sim = Simulator()
-        # Express path: each replica is a ServiceLane (one phase at a time
-        # on a dedicated single-server resource) — no Task construction or
-        # dependency bookkeeping per decode step, record names deferred.
-        self._lanes = [self._sim.lane(self._res(r), name_fn=self._name_fn(r))
-                       for r in range(replicas)]
+        self._lanes: List = []
+        self._templates: Optional[Dict[Tuple[int, str], GraphTemplate]] = None
+        self._tail_handlers: Dict[int, Callable[[float], None]] = {}
+        if self.phase_tasks:
+            if engine == "fast":
+                self._sim = DynamicSimulator()
+                self._templates = {}
+            else:
+                self._sim = Simulator(on_complete=self._task_done)
+        else:
+            self._sim = Simulator()
+            # Express path: each replica is a ServiceLane (one phase at a
+            # time on a dedicated single-server resource) — no Task
+            # construction or dependency bookkeeping per decode step,
+            # record names deferred.
+            self._lanes = [self._sim.lane(self._res(r),
+                                          name_fn=self._name_fn(r))
+                           for r in range(replicas)]
         # Completion handlers are bound once per replica, not per step.
         self._phase_done = [self._phase_handler(rep) for rep in self.replicas]
         self._decode_done = [self._decode_handler(rep)
@@ -187,6 +218,10 @@ class ServingSimulator:
         # the exact end time of its first step (token-1 emission).
         self._decode_k = [1] * replicas
         self._decode_tfirst = [0.0] * replicas
+        # Speculative-leap state per replica: (per-step boundary times,
+        # batch width) while a rollback-able fused decode is in flight.
+        self._leap: List[Optional[Tuple[List[float], int]]] = \
+            [None] * replicas
         self._total_out_tokens = 0
         self._wait_until: Dict[int, float] = {}   # replica -> armed wake-up
 
@@ -210,6 +245,65 @@ class ServingSimulator:
     def _decode_handler(self, replica: ReplicaState):
         return lambda now: self._finish_decode(replica, now)
 
+    # ---- phase submission: ServiceLane express path or task-graph mode --
+
+    def _task_done(self, task: Task, now: float) -> None:
+        """Dict-engine ``on_complete`` observer: dispatch phase-tail
+        completions to the bound replica handler."""
+        h = self._tail_handlers.pop(task.tid, None)
+        if h is not None:
+            h(now)
+
+    def _template(self, idx: int, kind: str) -> GraphTemplate:
+        tpl = self._templates.get((idx, kind))
+        if tpl is None:
+            c = self.phase_tasks
+            res = self._res(idx)
+            kv = res + ":kv"
+            tasks = []
+            for i in range(c):
+                tasks.append(Task(2 * i, f"{kind}/r{idx}/c{i}", res, res,
+                                  0.0, deps=(2 * i - 2,) if i else (),
+                                  kind=kind))
+                tasks.append(Task(2 * i + 1, f"{kind}/r{idx}/kv{i}", kv, kv,
+                                  0.0, deps=(2 * i,), kind="dma"))
+            tpl = GraphTemplate(tasks, tail=2 * c - 2)
+            self._templates[(idx, kind)] = tpl
+        return tpl
+
+    def _submit_phase(self, idx: int, dur: float,
+                      handler: Callable[[float], None],
+                      kind: str, info: object) -> None:
+        c = self.phase_tasks
+        if not c:
+            self._lanes[idx].submit(dur, handler, kind=kind, info=info)
+            return
+        if c == 1:
+            chunk_durs = [dur]
+        else:
+            d = dur / c
+            chunk_durs = [d] * (c - 1)
+            chunk_durs.append(dur - d * (c - 1))
+        sim = self._sim
+        if self._templates is not None:           # fast array-backed engine
+            durs = [0.0] * (2 * c)
+            durs[0::2] = chunk_durs
+            sim.inject_template(self._template(idx, kind), durs,
+                                on_done=handler)
+            return
+        res = self._res(idx)                      # dict engine baseline
+        kv = res + ":kv"
+        tid = sim.next_task_id()
+        prev = -1
+        for i, d in enumerate(chunk_durs):
+            sim.inject(Task(tid, f"{kind}/r{idx}/c{i}", res, res, d,
+                            deps=(prev,) if prev >= 0 else (), kind=kind))
+            sim.inject(Task(tid + 1, f"{kind}/r{idx}/kv{i}", kv, kv, 0.0,
+                            deps=(tid,), kind="dma"))
+            prev = tid
+            tid += 2
+        self._tail_handlers[prev] = handler
+
     # ---- arrivals --------------------------------------------------------
 
     def _arrive(self, req: Request, now: float) -> None:
@@ -217,6 +311,30 @@ class ServingSimulator:
         for replica in self.replicas:
             if not replica.busy:
                 self._kick(replica, now)
+        if self.pending:
+            # The arrival survived the idle replicas, so a mid-flight
+            # speculative decode leap may now be wrong: the scheduler
+            # could decide differently at the next step boundary.  Roll
+            # each armed leap back to the first boundary at/after now.
+            for idx, leap in enumerate(self._leap):
+                if leap is not None:
+                    self._rollback_leap(idx, leap, now)
+
+    def _rollback_leap(self, idx: int,
+                       leap: Tuple[List[float], int], now: float) -> None:
+        """Truncate a speculative decode leap at the first per-step
+        boundary >= ``now``: the steps before it ran exactly as fused
+        (the ``decode_stable`` contract — nothing the policy looks at
+        changed), and from the truncated end the normal finish/kick path
+        replays the policy's real decisions per step."""
+        self._leap[idx] = None
+        bounds, n = leap
+        j = bisect_left(bounds, now)
+        if j >= len(bounds) - 1:
+            return            # lands in the final step: the leap was exact
+        k = j + 1
+        self._decode_k[idx] = k
+        self._lanes[idx].truncate(bounds[j], info=n if k == 1 else (n, k))
 
     def _schedule_arrival(self, req: Request) -> None:
         self._sim.at(max(0.0, req.t_arrive),
@@ -266,9 +384,17 @@ class ServingSimulator:
                 self.events.append(("admit", req.rid))
         dur = self.cost.prefill_time(action.tokens)
         replica.busy = True
-        self._lanes[replica.index].submit(
-            dur, self._phase_done[replica.index], kind="prefill",
-            info=tuple(rids))
+        self._submit_phase(replica.index, dur,
+                           self._phase_done[replica.index],
+                           "prefill", tuple(rids))
+        # This admission consumed queued requests — the other change (in
+        # addition to arrivals) a decode_stable policy's mid-batch
+        # decision may depend on.  Roll back sibling replicas' armed
+        # speculative leaps so their next boundaries consult the policy
+        # against the shrunk queue, exactly like the per-step path.
+        for i, leap in enumerate(self._leap):
+            if leap is not None and i != replica.index:
+                self._rollback_leap(i, leap, now)
 
     def _start_decode(self, replica: ReplicaState, now: float) -> None:
         idx = replica.index
@@ -294,27 +420,66 @@ class ServingSimulator:
         # Decode leap: until the shortest slot finishes, a steady_decode
         # policy will issue identical decode steps (admission is blocked:
         # no free slot, or hold_finished holds the batch) — fuse them into
-        # one task, accumulating the exact per-step costs.
+        # one task, accumulating the exact per-step costs.  When admission
+        # *is* possible, a decode_stable policy still leaps, but
+        # speculatively: the per-step boundaries are kept so an arrival
+        # landing mid-leap rolls the fused task back (express path only —
+        # injected task graphs fuse only under the blocked guarantee).
         k = 1
-        if (k_min > 1 and sched.steady_decode and not self.record_events
-                and (hold or not self._free_slots[idx])):
+        speculate = False
+        leap_ok = k_min > 1 and not self.record_events
+        blocked = hold or not self._free_slots[idx]
+        if leap_ok and blocked and (sched.steady_decode
+                                    or sched.decode_stable):
+            # Admission impossible until a slot finishes: both contracts
+            # guarantee identical decode steps, so the leap is exact with
+            # no snapshot needed.
             k = k_min
-        step_time = self.cost.decode_step_time
-        c0 = step_time(n, ctx)
+        elif (leap_ok and sched.decode_stable and not self.phase_tasks):
+            # Admission possible: leap speculatively and arm rollback (an
+            # arrival may change the next-step decision).  Requires the
+            # express path — truncating an injected task graph is not
+            # supported, so graph mode runs these batches per-step.
+            k = k_min
+            speculate = True
+        # Exact per-step cost accumulation.  For the stock affine
+        # ServingCostModel, decode_step_time(n, ctx) is inlined with
+        # identical arithmetic (bit-for-bit, ~2x fewer ns per fused
+        # step); subclasses overriding the method are honored per step.
+        cost = self.cost
+        affine = (type(cost).decode_step_time
+                  is ServingCostModel.decode_step_time)
+        if affine:
+            f_d = cost.decode_fixed
+            p_n = cost.decode_per_token * n
+            c_d = cost.decode_per_ctx_token
+            c0 = f_d + p_n + c_d * ctx
+        else:
+            c0 = cost.decode_step_time(n, ctx)
         dur = c0
-        for _ in range(k - 1):
-            ctx += n_dec
-            dur += step_time(n, ctx)
+        bounds: Optional[List[float]] = None
+        if speculate:
+            bounds = [now + c0]
+            for _ in range(k - 1):
+                ctx += n_dec
+                dur += (f_d + p_n + c_d * ctx if affine
+                        else cost.decode_step_time(n, ctx))
+                bounds.append(now + dur)
+        else:
+            for _ in range(k - 1):
+                ctx += n_dec
+                dur += (f_d + p_n + c_d * ctx if affine
+                        else cost.decode_step_time(n, ctx))
         if self.record_events:
             self.events.append(
                 ("step", tuple(sorted(f.req.rid for f in replica.active
                                       if not f.done))))
         self._decode_k[idx] = k
         self._decode_tfirst[idx] = now + c0
+        self._leap[idx] = (bounds, n) if bounds is not None else None
         replica.busy = True
-        self._lanes[idx].submit(
-            dur, self._decode_done[idx], kind="decode",
-            info=n if k == 1 else (n, k))
+        self._submit_phase(idx, dur, self._decode_done[idx], "decode",
+                           n if k == 1 else (n, k))
 
     def _finish_phase(self, replica: ReplicaState, now: float) -> None:
         replica.busy = False
@@ -322,6 +487,7 @@ class ServingSimulator:
 
     def _finish_decode(self, replica: ReplicaState, now: float) -> None:
         idx = replica.index
+        self._leap[idx] = None
         sched = self.schedulers[idx]
         k = self._decode_k[idx]
         t_first = self._decode_tfirst[idx]

@@ -15,6 +15,8 @@ Plus the regression test for the shared-channel completion tolerance:
 near-ties are now grouped by a *relative* epsilon scaled by each task's
 full-rate duration, not the seed's absolute 1e-15 seconds.
 """
+import random
+
 import numpy as np
 import pytest
 import reference_engine
@@ -24,7 +26,8 @@ from repro.core.config import LM_SHAPES, get_arch
 from repro.core.dse import DesignSpaceExplorer
 from repro.core.estimator import get_backend
 from repro.core.hw import tpu_v5e_pod, virtex7_nce_system
-from repro.core.sim.engine import (ResourceSpec, Simulator, StaticCache,
+from repro.core.sim.engine import (DynamicSimulator, GraphTemplate,
+                                   ResourceSpec, Simulator, StaticCache,
                                    Task, simulate_static)
 from repro.core.taskgraph.builders import ShardPlan, convnet_ops, lm_step_ops
 from repro.core.taskgraph.compiler import compile_ops
@@ -172,6 +175,156 @@ def test_static_cache_is_reusable_across_duration_vectors():
                                          durations=durs).run()
         fast = simulate_static(tasks, specs, durs, cache=cache)
         _assert_same_result(ref, fast)
+
+
+# ---------------------------------------------------------------------------
+# dynamic fast path: DynamicSimulator vs the dict engine (PR 4)
+# ---------------------------------------------------------------------------
+
+
+def _assert_identical_result(ref, fast):
+    """Bit-exact parity: the array engine performs the same arithmetic in
+    the same order as the dict engine."""
+    assert fast.makespan == ref.makespan
+    assert _spans(fast) == _spans(ref)
+    assert fast.resource_busy == ref.resource_busy
+    assert fast.layer_time == ref.layer_time
+
+
+@pytest.mark.parametrize("name", ["vgg", "lm"])
+def test_dynamic_engine_matches_dict_engine_on_compiled_graph(
+        compiled_graphs, name):
+    g = compiled_graphs[name]
+    ref = Simulator(g.tasks, resources=g.resources,
+                    durations=g.durations).run()
+    fast = DynamicSimulator(g.tasks, resources=g.resources,
+                            durations=g.durations, cache=g.sim_cache()).run()
+    _assert_identical_result(ref, fast)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_random_dag_parity_dynamic_engine(data):
+    n = data.draw(st.integers(2, 50))
+    tasks, specs = _random_tasks(data, n)
+    ref = Simulator(tasks, resources=specs).run()
+    fast = DynamicSimulator(tasks, resources=specs).run()
+    _assert_identical_result(ref, fast)
+
+
+def _traffic_script(seed=11, n_arrivals=40):
+    """A seeded mid-flight injection scenario: a static prefix plus timed
+    arrivals that inject chains depending on completed *and* in-flight
+    tasks, driven identically on both engines."""
+    rng = random.Random(seed)
+    static = [Task(i, f"s{i}", f"L{i % 3}", f"r{i % 3}", rng.uniform(0.1, 2),
+                   deps=(i - 1,) if i and rng.random() < 0.5 else ())
+              for i in range(10)]
+    specs = {"r0": ResourceSpec("r0", servers=2),
+             "r1": ResourceSpec("r1", servers=1),
+             "r2": ResourceSpec("r2", servers=2, mode="shared")}
+    arrivals = []
+    tid = 10
+    for _ in range(n_arrivals):
+        t = rng.uniform(0.0, 20.0)
+        chain = []
+        prev = rng.randrange(tid) if rng.random() < 0.5 else None
+        for _ in range(rng.randint(1, 3)):
+            chain.append((tid, rng.choice(["r0", "r1", "r2"]),
+                          rng.uniform(0.05, 1.0),
+                          (prev,) if prev is not None else ()))
+            prev = tid
+            tid += 1
+        arrivals.append((t, chain))
+    return static, specs, arrivals
+
+
+def _run_traffic(sim_cls):
+    static, specs, arrivals = _traffic_script()
+    completed = []
+    sim = sim_cls(static, resources=specs,
+                  on_complete=lambda t, now: completed.append((t.tid, now)))
+
+    def make_inject(chain):
+        def fire():
+            for tid, res, dur, deps in chain:
+                # deps may reference completed or in-flight tasks
+                deps = tuple(d for d in deps if d in sim_injected)
+                sim.inject(Task(tid, f"d{tid}", "dyn", res, dur, deps=deps))
+                sim_injected.add(tid)
+        return fire
+
+    sim_injected = set(range(len(static)))
+    for t, chain in arrivals:
+        sim.at(t, make_inject(chain))
+    return sim.run(), completed
+
+
+def test_dynamic_engine_traffic_injection_parity():
+    """Task-for-task golden parity on a seeded traffic scenario with
+    mid-flight injection: spans, completion order, aggregates."""
+    ref, ref_completed = _run_traffic(Simulator)
+    fast, fast_completed = _run_traffic(DynamicSimulator)
+    _assert_identical_result(ref, fast)
+    assert fast_completed == ref_completed        # same causal order
+
+
+def test_dynamic_engine_template_matches_individual_injection():
+    """A GraphTemplate instance must behave exactly like injecting its
+    tasks one by one on the dict engine."""
+    tpl_tasks = [Task(0, "c0", "lay", "rep", 1.0),
+                 Task(1, "kv0", "kv", "rep:kv", 0.0, deps=(0,)),
+                 Task(2, "c1", "lay", "rep", 1.0, deps=(0,)),
+                 Task(3, "kv1", "kv", "rep:kv", 0.0, deps=(2,))]
+    tpl = GraphTemplate(tpl_tasks, tail=2)
+    fired = []
+    fast = DynamicSimulator()
+    for k, t0 in enumerate((0.5, 1.25, 4.0)):
+        fast.at(t0, lambda k=k: fast.inject_template(
+            tpl, [0.4, 0.0, 0.3, 0.0],
+            on_done=lambda now, k=k: fired.append((k, now))))
+    res_fast = fast.run()
+
+    ref = Simulator()
+    ref_fired = []
+    durs = [0.4, 0.0, 0.3, 0.0]
+
+    def inject_all(base):
+        for t, d in zip(tpl_tasks, durs):
+            ref.inject(Task(base + t.tid, t.name, t.layer, t.resource, d,
+                            deps=tuple(base + x for x in t.deps),
+                            kind=t.kind))
+    for k, t0 in enumerate((0.5, 1.25, 4.0)):
+        ref.at(t0, lambda k=k: inject_all(4 * k))
+    ref.on_complete = lambda t, now: (
+        ref_fired.append((t.tid // 4, now)) if t.tid % 4 == 2 else None)
+    res_ref = ref.run()
+    assert res_fast.makespan == res_ref.makespan
+    assert fired == ref_fired
+    assert _spans(res_fast) == _spans(res_ref)
+    assert res_fast.resource_busy == res_ref.resource_busy
+
+
+def test_dynamic_engine_rejects_duplicate_and_unknown():
+    sim = DynamicSimulator([Task(0, "a", "L", "r", 1.0)])
+    with pytest.raises(ValueError):
+        sim.inject(Task(0, "dup", "L", "r", 1.0))
+    with pytest.raises(ValueError):
+        sim.inject(Task(5, "b", "L", "r", 1.0, deps=(99,)))
+    with pytest.raises(ValueError):
+        sim.at(-1.0, lambda: None)
+
+
+def test_dynamic_cache_seeded_from_static_cache(compiled_graphs):
+    """Seeding from CompiledGraph.sim_cache() reuses the CSR and yields
+    the same result as building from the task list."""
+    g = compiled_graphs["vgg"]
+    seeded = DynamicSimulator(g.tasks, resources=g.resources,
+                              durations=g.durations,
+                              cache=g.sim_cache()).run()
+    scratch = DynamicSimulator(g.tasks, resources=g.resources,
+                               durations=g.durations).run()
+    _assert_identical_result(scratch, seeded)
 
 
 # ---------------------------------------------------------------------------

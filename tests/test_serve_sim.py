@@ -9,6 +9,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core.sim.engine import ResourceSpec, Simulator, Task
 from repro.core.sim.trace import serving_chrome_trace
+from repro.serve_sim.scheduler import Decode, Prefill
 from repro.serve_sim import (SLO, BucketedPrefillScheduler, CapacityPlanner,
                              ClosedLoopWorkload, ContinuousBatchingScheduler,
                              LengthDist, ServingCostModel,
@@ -267,6 +268,271 @@ def test_closed_loop_serving_completes():
                             seed=9)
     rep = simulate_serving(TOY, ContinuousBatchingScheduler, wl, slots=4)
     assert rep.n_requests == 30
+
+
+# ---------------------------------------------------------------------------
+# task-graph injection mode: fast array engine vs dict engine (PR 4)
+# ---------------------------------------------------------------------------
+
+
+def _metric_rows(rep):
+    return [(m.rid, m.t_admit, m.t_first, m.t_done) for m in rep.requests]
+
+
+@pytest.mark.parametrize("chunks", [1, 3])
+def test_graph_mode_fast_matches_dict_engine_exactly(chunks):
+    """Full task-graph injection: the array-backed engine must reproduce
+    the dict engine task-for-task and metric-for-metric (bit-identical —
+    same arithmetic, same event order)."""
+    fast = ServingSimulator(TOY, ContinuousBatchingScheduler, toy_poisson(250),
+                            replicas=2, slots=4, phase_tasks=chunks,
+                            engine="fast").run()
+    dict_ = ServingSimulator(TOY, ContinuousBatchingScheduler, toy_poisson(250),
+                             replicas=2, slots=4, phase_tasks=chunks,
+                             engine="dict").run()
+    assert fast.duration == dict_.duration
+    assert fast.output_tokens == dict_.output_tokens
+    assert _metric_rows(fast) == _metric_rows(dict_)
+    for stat in ("ttft", "tpot", "e2e", "queue_delay"):
+        assert getattr(fast, stat) == getattr(dict_, stat)
+    fast_spans = sorted((r.task.tid, r.task.name, r.start, r.end)
+                        for r in fast.sim_result.records)
+    dict_spans = sorted((r.task.tid, r.task.name, r.start, r.end)
+                        for r in dict_.sim_result.records)
+    assert fast_spans == dict_spans
+
+
+def test_graph_mode_matches_express_lane_metrics():
+    """Chunked phase graphs exact-split the phase cost, so serving
+    metrics equal the ServiceLane express path to float round-off."""
+    lane = simulate_serving(TOY, ContinuousBatchingScheduler,
+                            toy_poisson(200), slots=4)
+    graph = ServingSimulator(TOY, ContinuousBatchingScheduler,
+                             toy_poisson(200), slots=4,
+                             phase_tasks=4).run()
+    assert graph.n_requests == lane.n_requests
+    for stat in ("ttft", "tpot", "e2e"):
+        a, b = getattr(lane, stat), getattr(graph, stat)
+        assert b.p50 == pytest.approx(a.p50, rel=1e-9)
+        assert b.p99 == pytest.approx(a.p99, rel=1e-9)
+        assert b.mean == pytest.approx(a.mean, rel=1e-9)
+
+
+def test_graph_mode_records_real_task_structure():
+    rep = ServingSimulator(TOY, ContinuousBatchingScheduler, toy_poisson(30),
+                           replicas=1, slots=2, phase_tasks=2).run()
+    names = [r.task.name for r in rep.sim_result.records]
+    assert any(n.startswith("prefill/r0/c0") for n in names)
+    assert any(n.startswith("decode/r0/c1") for n in names)
+    assert any("/kv" in n for n in names)
+    resources = {r.task.resource for r in rep.sim_result.records}
+    assert resources == {"replica0", "replica0:kv"}
+    # KV writes depend on their chunk: they never precede it
+    by_tid = {r.task.tid: r for r in rep.sim_result.records}
+    for r in rep.sim_result.records:
+        for d in r.task.deps:
+            assert by_tid[d].end <= r.start + 1e-12
+
+
+def test_graph_mode_rejects_bad_args():
+    with pytest.raises(ValueError):
+        ServingSimulator(TOY, ContinuousBatchingScheduler, toy_poisson(5),
+                         phase_tasks=-1)
+    with pytest.raises(ValueError):
+        ServingSimulator(TOY, ContinuousBatchingScheduler, toy_poisson(5),
+                         engine="verilog")
+
+
+# ---------------------------------------------------------------------------
+# speculative decode leap with rollback (PR 4)
+# ---------------------------------------------------------------------------
+
+
+class ScriptedInterveningScheduler(BucketedPrefillScheduler):
+    """A custom policy that is decode-stable but *not* steady: it
+    interrupts a decode batch to admit whatever arrived, even while slots
+    are free — exactly the case the old steady_decode leap had to skip.
+    Inherits bucketed admission; declares only the speculative contract."""
+
+    name = "scripted"
+    steady_decode = False
+    decode_stable = True
+
+
+def _light_traffic(n=300, seed=4):
+    # low rate + long outputs: replicas decode with free slots, so leaps
+    # are speculative and arrivals frequently land mid-leap
+    return poisson_workload(6.0, n, prompt=LengthDist(mean=64, cv=0.5),
+                            output=LengthDist(mean=64, cv=0.6), seed=seed)
+
+
+def test_speculative_leap_exact_rollback_parity():
+    """Scripted mid-leap interventions: metrics must match the per-step
+    simulation (record_events=True disables all fusion) to round-off."""
+    per_step = simulate_serving(TOY, lambda: ScriptedInterveningScheduler(32),
+                                _light_traffic(), slots=8,
+                                record_events=True)
+    leaped = simulate_serving(TOY, lambda: ScriptedInterveningScheduler(32),
+                              _light_traffic(), slots=8)
+    assert leaped.n_requests == per_step.n_requests
+    assert leaped.output_tokens == per_step.output_tokens
+    a, b = _metric_rows(per_step), _metric_rows(leaped)
+    for ra, rb in zip(a, b):
+        assert ra[0] == rb[0]
+        for va, vb in zip(ra[1:], rb[1:]):
+            assert vb == pytest.approx(va, rel=1e-9, abs=1e-12)
+    for stat in ("ttft", "tpot", "e2e"):
+        assert getattr(leaped, stat).p99 == pytest.approx(
+            getattr(per_step, stat).p99, rel=1e-9)
+
+
+def test_speculative_leap_actually_fuses_and_rolls_back():
+    """The fast path must engage (fewer decode tasks than steps) and
+    truncated leaps must appear in the records."""
+    leaped = simulate_serving(TOY, lambda: ScriptedInterveningScheduler(32),
+                              _light_traffic(), slots=8)
+    per_step = simulate_serving(TOY, lambda: ScriptedInterveningScheduler(32),
+                                _light_traffic(), slots=8,
+                                record_events=True)
+    decode_leaped = [r for r in leaped.sim_result.records
+                     if r.task.kind == "decode"]
+    decode_steps = [r for r in per_step.sim_result.records
+                    if r.task.kind == "decode"]
+    assert len(decode_leaped) < 0.7 * len(decode_steps)   # fusion engaged
+    fused = [r for r in decode_leaped if "x" in r.task.name.split("/")[-1]]
+    assert fused                                          # k>1 leaps exist
+
+
+def test_speculative_leap_continuous_matches_per_step():
+    per_step = simulate_serving(TOY, ContinuousBatchingScheduler,
+                                _light_traffic(seed=9), slots=8,
+                                record_events=True)
+    leaped = simulate_serving(TOY, ContinuousBatchingScheduler,
+                              _light_traffic(seed=9), slots=8)
+    for ra, rb in zip(_metric_rows(per_step), _metric_rows(leaped)):
+        assert ra[0] == rb[0]
+        for va, vb in zip(ra[1:], rb[1:]):
+            assert vb == pytest.approx(va, rel=1e-9, abs=1e-12)
+
+
+class _QuadraticCost(ServingCostModel):
+    """Overrides the documented decode_step_time hook (non-affine in
+    ctx): the leap's inlined affine fast path must not bypass it."""
+
+    def decode_step_time(self, n_active, total_ctx):
+        base = ServingCostModel.decode_step_time(self, n_active, total_ctx)
+        return base * (1.0 + 1e-5 * max(0, total_ctx))
+
+
+def test_decode_step_time_override_honored_by_leap():
+    cost = _QuadraticCost(name="quad", prefill_fixed=1e-3,
+                          prefill_per_token=2e-5, decode_fixed=2e-3,
+                          decode_per_token=5e-4, decode_per_ctx_token=1e-7)
+    per_step = simulate_serving(cost, ContinuousBatchingScheduler,
+                                toy_poisson(150, seed=6), slots=4,
+                                record_events=True)
+    leaped = simulate_serving(cost, ContinuousBatchingScheduler,
+                              toy_poisson(150, seed=6), slots=4)
+    for ra, rb in zip(_metric_rows(per_step), _metric_rows(leaped)):
+        assert ra[0] == rb[0]
+        for va, vb in zip(ra[1:], rb[1:]):
+            assert vb == pytest.approx(va, rel=1e-9, abs=1e-12)
+    # and the override actually changes the outcome vs the affine model
+    affine = simulate_serving(
+        ServingCostModel(name="aff", prefill_fixed=1e-3,
+                         prefill_per_token=2e-5, decode_fixed=2e-3,
+                         decode_per_token=5e-4, decode_per_ctx_token=1e-7),
+        ContinuousBatchingScheduler, toy_poisson(150, seed=6), slots=4)
+    assert leaped.e2e.p99 > affine.e2e.p99
+
+
+class _ThresholdAdmitScheduler(ContinuousBatchingScheduler):
+    """decode_stable policy whose mid-batch decision depends on queue
+    *depth*: it interrupts decoding to admit only when >= 2 requests are
+    queued, so a sibling replica popping the queue mid-leap changes its
+    next decision (the rollback trigger beyond arrivals)."""
+
+    name = "threshold"
+    steady_decode = False
+    decode_stable = True
+
+    def decide(self, replica, queue, now):
+        if replica.free_slots > 0 and len(queue) >= 2:
+            n = min(replica.free_slots, len(queue))
+            reqs = [queue.popleft() for _ in range(n)]
+            return Prefill(tuple(reqs),
+                           sum(r.prompt_tokens for r in reqs))
+        if replica.any_decoding:
+            return Decode()
+        if queue and replica.free_slots > 0:    # drain the tail
+            req = queue.popleft()
+            return Prefill((req,), req.prompt_tokens)
+        return None
+
+
+def test_sibling_queue_pop_rolls_back_leap_multi_replica():
+    """Queue-depth-sensitive decode_stable policy on two replicas:
+    leaped metrics must match the per-step ground truth exactly."""
+    wl = lambda: poisson_workload(    # noqa: E731
+        8.0, 400, prompt=LengthDist(mean=64, cv=0.5),
+        output=LengthDist(mean=48, cv=0.6), seed=12)
+    per_step = simulate_serving(TOY, _ThresholdAdmitScheduler, wl(),
+                                replicas=2, slots=4, record_events=True)
+    leaped = simulate_serving(TOY, _ThresholdAdmitScheduler, wl(),
+                              replicas=2, slots=4)
+    assert leaped.n_requests == per_step.n_requests
+    for ra, rb in zip(_metric_rows(per_step), _metric_rows(leaped)):
+        assert ra[0] == rb[0]
+        for va, vb in zip(ra[1:], rb[1:]):
+            assert vb == pytest.approx(va, rel=1e-9, abs=1e-12)
+
+
+def test_sibling_admission_truncates_armed_leap():
+    """White-box: an admission on replica 0 (queue shrinkage) must roll
+    replica 1's armed speculative leap back to the next step boundary —
+    a decode_stable policy's mid-batch decision may depend on queue
+    depth, not just on arrivals."""
+    wl = toy_poisson(4)
+    sim = ServingSimulator(TOY, ContinuousBatchingScheduler, wl,
+                           replicas=2, slots=2)
+    lane1 = sim._lanes[1]
+    # fabricate an in-flight fused decode (10 steps, 0.1s apart) on r1
+    lane1.busy = True
+    lane1.starts.append(0.0)
+    lane1.ends.append(1.0)
+    lane1.kinds.append("decode")
+    lane1.infos.append((2, 10))
+    lane1._handler = lambda now: None
+    lane1.busy_time += 1.0
+    bounds = [round(0.1 * i, 10) for i in range(1, 11)]
+    sim._leap[1] = (bounds, 2)
+    sim._decode_k[1] = 10
+    # replica 0 admits a queued request at t=0.25
+    req = wl.requests[0]
+    sim._start_prefill(sim.replicas[0], Prefill((req,), req.prompt_tokens),
+                       now=0.25)
+    assert sim._leap[1] is None                  # disarmed
+    assert sim._decode_k[1] == 3                 # boundary 0.3 = step 3
+    assert lane1.ends[-1] == pytest.approx(0.3)  # fused task truncated
+    assert lane1.epoch == 1                      # stale completion voided
+    assert lane1.infos[-1] == (2, 3)             # record reflects truth
+
+
+def test_non_stable_scheduler_never_leaps():
+    """A policy that declares neither contract must run per-step even
+    when fusing would be possible."""
+
+    class PlainScheduler(ContinuousBatchingScheduler):
+        name = "plain"
+        steady_decode = False
+        decode_stable = False
+
+    rep = simulate_serving(TOY, PlainScheduler, _light_traffic(n=60),
+                           slots=4)
+    decode_names = [r.task.name for r in rep.sim_result.records
+                    if r.task.kind == "decode"]
+    assert decode_names
+    assert not any("x" in n.split("/")[-1] for n in decode_names)
 
 
 # ---------------------------------------------------------------------------
