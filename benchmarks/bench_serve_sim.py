@@ -10,6 +10,9 @@ Measures the virtual serving stack at the scale the ROADMAP asks about:
   * speculative leap — 10k requests under a scheduler that declares only
     the ``decode_stable`` contract, so every decode fusion takes the
     snapshot/rollback path;
+  * Monte-Carlo seed batch — 16 seeds x 10k requests in one
+    ``MonteCarloServingSimulator`` call on the fused continuous-batching
+    fast path, reporting cross-seed mean and 95% CI for p99 TTFT;
   * scheduler tails — p99 TTFT of continuous vs static batching under the
     same Poisson traffic (continuous batching should dominate);
   * cost-model derivation — seconds to fit a per-request cost model from
@@ -25,9 +28,10 @@ from repro.core.config import get_arch
 from repro.core.hw import SystemDescription, tpu_v5e_chip
 from repro.core.taskgraph.builders import ShardPlan
 from repro.serve_sim import (ContinuousBatchingScheduler, LengthDist,
+                             MonteCarloServingSimulator,
                              ServingCostModelBuilder, ServingSimulator,
                              StaticBatchScheduler, poisson_workload,
-                             simulate_serving)
+                             poisson_workload_batch, simulate_serving)
 
 
 class SpeculativeContinuousScheduler(ContinuousBatchingScheduler):
@@ -94,6 +98,21 @@ def run() -> List[Tuple[str, float, str]]:
                  f"{spec.n_requests} reqs, "
                  f"{spec.n_requests / wall_spec:.0f} req/wall-s "
                  f"(decode_stable-only leap w/ rollback)"))
+
+    # seed-batched Monte-Carlo: 16 seeds through the fused fast path
+    batch = poisson_workload_batch(300.0, 10_000,
+                                   prompt=LengthDist(mean=512, cv=0.6),
+                                   output=LengthDist(mean=96, cv=0.5),
+                                   seeds=16)
+    t0 = time.perf_counter()
+    mc = MonteCarloServingSimulator(cost, ContinuousBatchingScheduler,
+                                    batch, replicas=4, slots=32).run()
+    wall_mc = time.perf_counter() - t0
+    s = mc.stat("ttft_p99")
+    rows.append(("serve_sim_mc_16x10k", wall_mc * 1e6,
+                 f"{mc.n_requests / wall_mc:.0f} "
+                 f"seed-req/wall-s, ttft_p99={s.mean * 1e3:.2f}ms "
+                 f"ci95=[{s.ci_lo * 1e3:.2f}, {s.ci_hi * 1e3:.2f}]ms"))
 
     cont = simulate_serving(cost, ContinuousBatchingScheduler,
                             traffic(2000, rate=60.0), replicas=4, slots=8)

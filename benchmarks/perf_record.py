@@ -1,40 +1,63 @@
-"""Machine-readable perf trajectory: writes ``BENCH_pr4.json``.
+"""Machine-readable perf trajectory: writes ``BENCH_pr6.json``.
 
 Collects the current throughput of the hot paths this PR optimized — the
-dynamic-injection fast path (array-backed ``DynamicSimulator`` + template
-instantiation vs the dict engine), the speculative decode leap
-(``decode_stable``-only scheduler, rollbacks armed), and the persistent
-worker pool (first call vs steady-state ``explore()`` sweeps) — next to
-the PR 3 paths (engine events/sec, what-if points/sec, serve-sim
-requests/sec), and records them against the PR 3 measurements::
+seed-batched Monte-Carlo serving simulator (one
+``MonteCarloServingSimulator`` call over 64 pre-generated seed rows vs
+looping the scalar simulator) and the ``num_seeds=64`` DSE design point
+(must stay within 3x of the single-seed point) — next to the PR 3/4
+paths (engine events/sec, what-if points/sec, serve-sim requests/sec)::
 
-    PYTHONPATH=src python benchmarks/run.py --json        # BENCH_pr4.json
+    PYTHONPATH=src python benchmarks/run.py --json        # BENCH_pr6.json
     PYTHONPATH=src python benchmarks/perf_record.py       # same, standalone
+    PYTHONPATH=src python benchmarks/perf_record.py --trials 3   # medians
 
-``BASELINE_PR3`` is the ``current`` section of the committed
-``BENCH_pr3.json`` (measured at 4fbf7df on the same container class);
-absolute numbers are machine-dependent, the *ratios* are the tracked
-signal.  Paired comparisons (fast vs dict engine) are measured
-interleaved best-of-N in this process, so load drifts hit both sides.
+``BASELINE_PR4`` is the ``current`` section of the committed
+``BENCH_pr4.json``; absolute numbers are machine-dependent, the *ratios*
+are the tracked signal.  Paired comparisons (MC vs scalar loop, fast vs
+dict engine) are measured interleaved in this process, so load drifts
+hit both sides.
+
+A note on the PR 4 absolute numbers: they show a uniform ~0.6x drop on
+the pure-Python benches vs PR 3 (fifo dict 114.7k -> 67.1k ev/s) while
+numpy-heavy benches *rose* — the signature of a contended recording
+container, not a code change.  Replaying the PR 3 tree interleaved with
+the current one on one machine confirms it: current code matches or
+beats PR 3 on every fifo metric (dict ~137k vs ~129k ev/s).  The
+``--trials N`` median mode exists so future recordings are robust to a
+single bad window: each trial runs the full suite, and every leaf metric
+reports the across-trial median.
 """
 from __future__ import annotations
 
 import json
 import platform
+import statistics
 import sys
 import time
-from typing import Dict
+from typing import Dict, List
 
-# The "current" section of BENCH_pr3.json, measured at 4fbf7df (PR 3).
-BASELINE_PR3: Dict = {
+# The "current" section of BENCH_pr4.json, measured at 44edf76 (PR 4).
+BASELINE_PR4: Dict = {
     "engine_fifo_events_per_sec": {
-        "dict": 114_660.0, "static_cold": 406_958.0, "static_warm": 525_312.0},
+        "dict": 67_110.4, "static_cold": 280_771.3, "static_warm": 353_703.6},
     "engine_shared_tasks_per_sec": {
-        "200": 263_286.0, "800": 224_867.0, "3200": 190_253.0,
-        "6400": 174_760.0},
+        "200": 176_430.2, "800": 171_743.9, "3200": 159_026.5,
+        "6400": 139_543.5},
+    "engine_dynamic_injection_events_per_sec": {
+        "dict": 68_446.5, "fast": 284_920.5},
     "what_if_points_per_sec": {
-        "roofline": 590.4, "analytic": 771.2, "des": 24.6},
-    "serve_sim_10k": {"wall_seconds": 0.517, "requests_per_sec": 19_347.0},
+        "roofline": 910.6, "analytic": 947.2, "des": 27.4},
+    "serve_sim_10k": {"wall_seconds": 0.6187, "requests_per_sec": 16_163.9},
+    "serve_sim_10k_taskgraph": {
+        "fast_wall_seconds": 1.0869, "dict_wall_seconds": 4.7604,
+        "fast_requests_per_sec": 9_200.4, "speedup_fast_vs_dict": 4.38},
+    "serve_sim_10k_speculative": {
+        "wall_seconds": 0.4316, "requests_per_sec": 23_169.4},
+    "persistent_pool": {
+        "explore_serial_seconds": 0.2958,
+        "explore_first_call_seconds": 2.2242,
+        "explore_steady_call_seconds": 0.1327,
+        "steady_vs_first_speedup": 16.77},
 }
 
 
@@ -143,6 +166,92 @@ def _serve_sim_10k_speculative() -> Dict[str, float]:
     return {"wall_seconds": wall, "requests_per_sec": rep.n_requests / wall}
 
 
+def _monte_carlo() -> Dict[str, float]:
+    """Seed-batched Monte-Carlo serving vs looping the scalar simulator.
+
+    Headline: 64 seeds x 10k requests through continuous batching
+    (replicas=4, slots=32, 300 rps Poisson) in one
+    ``MonteCarloServingSimulator`` call, against the scalar
+    ``simulate_serving`` loop over the same seed rows — measured on
+    ``scalar_ref_seeds`` rows and scaled linearly (per-seed scalar cost
+    is independent across seeds).  Acceptance: the MC path sustains
+    >= 5x (seeds x requests)/wall-second.
+
+    Second check: one ``sweep_serving`` design point at slots=256 with
+    ``num_seeds=64`` vs the single-seed point.  Acceptance: <= 3x —
+    decode bursts dominate at large batch, and the MC fast path
+    advances one in O(log slots) (packed completion heap) where the
+    scalar simulator scans all slots.
+    """
+    import functools
+    import gc
+
+    from repro.core.config import get_arch
+    from repro.core.dse import DesignSpaceExplorer
+    from repro.core.hw import SystemDescription, tpu_v5e_chip
+    from repro.core.taskgraph.builders import ShardPlan
+    from repro.core.taskgraph.ops import matmul_op
+    from repro.serve_sim import (ContinuousBatchingScheduler, LengthDist,
+                                 MonteCarloServingSimulator,
+                                 ServingCostModelBuilder,
+                                 poisson_workload, poisson_workload_batch,
+                                 simulate_serving)
+
+    cost = _serve_cost()
+    dists = dict(prompt=LengthDist(mean=512, cv=0.6),
+                 output=LengthDist(mean=96, cv=0.5))
+    seeds, n = 64, 10_000
+    batch = poisson_workload_batch(300.0, n, seeds=seeds, **dists)
+    sim = MonteCarloServingSimulator(cost, ContinuousBatchingScheduler,
+                                     batch, replicas=4, slots=32)
+    assert sim.fast_path, "headline scenario must hit the fused fast path"
+    gc.collect()
+    t0 = time.perf_counter()
+    sim.run()
+    mc_wall = time.perf_counter() - t0
+    ref = 8                                  # scalar loop sample (i.i.d.)
+    gc.collect()
+    t0 = time.perf_counter()
+    for k in range(ref):
+        simulate_serving(cost, ContinuousBatchingScheduler,
+                         batch.workload(k), replicas=4, slots=32)
+    scalar_wall = (time.perf_counter() - t0) * (seeds / ref)
+    out = {
+        "seeds": seeds, "requests_per_seed": n, "scalar_ref_seeds": ref,
+        "mc_wall_seconds": mc_wall,
+        "scalar_loop_wall_seconds_est": scalar_wall,
+        "mc_seed_requests_per_sec": seeds * n / mc_wall,
+        "scalar_seed_requests_per_sec": seeds * n / scalar_wall,
+        "speedup_mc_vs_scalar_loop": scalar_wall / mc_wall,
+    }
+
+    # one sweep_serving design point: num_seeds=64 vs num_seeds=1
+    base = SystemDescription(name="v5e_chip", chip=tpu_v5e_chip(), torus=())
+    dse = DesignSpaceExplorer({"w": [matmul_op("m", "m", 64, 64, 64)]})
+    builder = ServingCostModelBuilder(
+        get_arch("qwen1.5-0.5b").model, shard=ShardPlan(data=1, model=1))
+    sched = {"continuous": ContinuousBatchingScheduler}
+    walls = {}
+    gc.collect()
+    for label, traffic, kw in (
+            ("single", functools.partial(poisson_workload, 1000.0, n,
+                                         seed=0, **dists), {}),
+            ("mc64", functools.partial(poisson_workload_batch, 1000.0, n,
+                                       seeds=seeds, **dists),
+             {"num_seeds": seeds})):
+        t0 = time.perf_counter()
+        dse.sweep_serving({"v5e": base}, {"poisson": traffic}, sched,
+                          cost_builder=builder, replicas=4, slots=256, **kw)
+        walls[label] = time.perf_counter() - t0
+    out.update({
+        "sweep_point_slots": 256,
+        "sweep_single_seed_seconds": walls["single"],
+        "sweep_64seed_seconds": walls["mc64"],
+        "sweep_64seed_cost_vs_single": walls["mc64"] / walls["single"],
+    })
+    return out
+
+
 def _persistent_pool() -> Dict[str, float]:
     """Repeated ``explore(workers=4)`` sweeps: the first call pays the
     fork + structural-graph broadcast, later calls must show no per-call
@@ -181,50 +290,82 @@ def _persistent_pool() -> Dict[str, float]:
             "steady_vs_first_speedup": calls[0] / steady}
 
 
-def collect() -> Dict:
-    from benchmarks import bench_engine
-
-    return {
-        "engine_fifo_events_per_sec": bench_engine.fifo_events_per_sec(),
-        "engine_shared_tasks_per_sec": bench_engine.shared_tasks_per_sec(),
-        "engine_dynamic_injection_events_per_sec":
-            bench_engine.dynamic_events_per_sec(),
-        "what_if_points_per_sec": _what_if_points_per_sec(),
-        "serve_sim_10k": _serve_sim_10k(),
-        "serve_sim_10k_taskgraph": _serve_sim_10k_taskgraph(),
-        "serve_sim_10k_speculative": _serve_sim_10k_speculative(),
-        "persistent_pool": _persistent_pool(),
-    }
-
-
-def _speedups(base: Dict, cur: Dict) -> Dict:
+def _median_merge(docs: List[Dict]) -> Dict:
+    """Element-wise median across identically-shaped metric dicts."""
     out: Dict = {}
-    for key, bval in base.items():
-        cval = cur.get(key)
-        if isinstance(bval, dict):
-            out[key] = {k: round(cval[k] / v, 2) if k in cval and v else None
-                        for k, v in bval.items()}
-        elif bval:
-            out[key] = round(cval / bval, 2)
-    # wall times speed up as baseline/current
-    ws = out.get("serve_sim_10k", {})
-    if "wall_seconds" in ws and ws["wall_seconds"]:
-        ws["wall_seconds"] = round(1.0 / ws["wall_seconds"], 2)
+    for key, v in docs[0].items():
+        if isinstance(v, dict):
+            out[key] = _median_merge([d[key] for d in docs])
+        elif isinstance(v, (int, float)):
+            out[key] = statistics.median(d[key] for d in docs)
+        else:
+            out[key] = v
     return out
 
 
-def write(path: str = "BENCH_pr4.json") -> Dict:
-    current = collect()
+def collect(trials: int = 1) -> Dict:
+    """One full suite pass — or, with ``trials > 1``, the per-metric
+    median over that many passes (robust to a transiently loaded
+    machine; see the module docstring on the PR 4 recording)."""
+    from benchmarks import bench_engine
+
+    def once() -> Dict:
+        return {
+            "engine_fifo_events_per_sec": bench_engine.fifo_events_per_sec(),
+            "engine_shared_tasks_per_sec":
+                bench_engine.shared_tasks_per_sec(),
+            "engine_dynamic_injection_events_per_sec":
+                bench_engine.dynamic_events_per_sec(),
+            "what_if_points_per_sec": _what_if_points_per_sec(),
+            "serve_sim_10k": _serve_sim_10k(),
+            "serve_sim_10k_taskgraph": _serve_sim_10k_taskgraph(),
+            "serve_sim_10k_speculative": _serve_sim_10k_speculative(),
+            "monte_carlo": _monte_carlo(),
+            "persistent_pool": _persistent_pool(),
+        }
+
+    if trials <= 1:
+        return once()
+    return _median_merge([once() for _ in range(trials)])
+
+
+def _speedups(base: Dict, cur: Dict) -> Dict:
+    """Per-metric current/baseline ratios; keys measured in seconds
+    invert (baseline/current) so that > 1 always means faster."""
+    out: Dict = {}
+    for key, bval in base.items():
+        if key not in cur:
+            continue
+        cval = cur[key]
+        if isinstance(bval, dict):
+            sub = {}
+            for k, v in bval.items():
+                if k not in cval or not v:
+                    sub[k] = None
+                elif k.endswith("seconds"):
+                    sub[k] = round(v / cval[k], 2)
+                else:
+                    sub[k] = round(cval[k] / v, 2)
+            out[key] = sub
+        elif bval:
+            out[key] = round(cval / bval, 2)
+    return out
+
+
+def write(path: str = "BENCH_pr6.json", trials: int = 1) -> Dict:
+    current = collect(trials=trials)
     doc = {
-        "pr": 4,
-        "description": "Fast dynamic simulation: array-backed event loop "
-                       "for injected task graphs, speculative decode-leap "
-                       "with rollback, persistent DSE worker pool",
+        "pr": 6,
+        "description": "Seed-batched Monte-Carlo serving: policy/advance "
+                       "split, fused continuous-batching fast path, "
+                       "num_seeds DSE sweeps and CI-aware capacity "
+                       "planning",
         "python": sys.version.split()[0],
         "platform": platform.platform(),
-        "baseline_pr3": BASELINE_PR3,
+        "trials": trials,
+        "baseline_pr4": BASELINE_PR4,
         "current": current,
-        "speedup_vs_pr3": _speedups(BASELINE_PR3, current),
+        "speedup_vs_pr4": _speedups(BASELINE_PR4, current),
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=False)
@@ -237,9 +378,13 @@ if __name__ == "__main__":
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-    out = write(sys.argv[1] if len(sys.argv) > 1 else "BENCH_pr4.json")
-    print(json.dumps({"speedup_vs_pr3": out["speedup_vs_pr3"],
-                      "taskgraph": out["current"]["serve_sim_10k_taskgraph"],
-                      "speculative":
-                          out["current"]["serve_sim_10k_speculative"],
+    argv = sys.argv[1:]
+    trials = 1
+    if "--trials" in argv:
+        i = argv.index("--trials")
+        trials = int(argv[i + 1])
+        del argv[i:i + 2]
+    out = write(argv[0] if argv else "BENCH_pr6.json", trials=trials)
+    print(json.dumps({"speedup_vs_pr4": out["speedup_vs_pr4"],
+                      "monte_carlo": out["current"]["monte_carlo"],
                       "pool": out["current"]["persistent_pool"]}, indent=2))

@@ -17,9 +17,17 @@ Three stages:
   3. bisect replica count per system for a stated SLO
      (``CapacityPlanner``) and report the smallest feasible deployment.
 
-Run:  PYTHONPATH=src python examples/serve_capacity_planning.py [--smoke]
+With ``--num-seeds K`` (K > 1) stages 2b/3 switch to the seed-batched
+Monte-Carlo simulator: tail latencies come back as cross-seed mean with a
+95% confidence interval, and the capacity bisection only accepts a
+configuration whose CI upper bound meets the SLO — one lucky traffic draw
+can no longer size the fleet.
+
+Run:  PYTHONPATH=src python examples/serve_capacity_planning.py \
+          [--smoke] [--num-seeds K]
 """
 import argparse
+import functools
 import os
 import sys
 import time
@@ -36,7 +44,8 @@ from repro.serve_sim import (SLO, BucketedPrefillScheduler, CapacityPlanner,
                              ClosedLoopWorkload, ContinuousBatchingScheduler,
                              LengthDist, ServingCostModelBuilder,
                              StaticBatchScheduler, bursty_workload,
-                             poisson_workload, simulate_serving)
+                             monte_carlo_serving, poisson_workload,
+                             poisson_workload_batch, simulate_serving)
 
 ARCH = "qwen1.5-0.5b"
 SLOTS = 8
@@ -46,8 +55,14 @@ def main():
     p = argparse.ArgumentParser()
     p.add_argument("--smoke", action="store_true",
                    help="small request counts (CI)")
+    p.add_argument("--num-seeds", type=int, default=1, metavar="K",
+                   help="seed-batched Monte-Carlo: K traffic draws per "
+                        "estimate, CI-aware capacity planning (default 1)")
     args = p.parse_args()
     n_req = 300 if args.smoke else 2000
+    K = args.num_seeds
+    if K < 1:
+        p.error("--num-seeds must be >= 1")
 
     cfg = get_arch(ARCH).model
     base = SystemDescription(name="v5e_chip", chip=tpu_v5e_chip(), torus=())
@@ -107,20 +122,54 @@ def main():
               f"{rep.throughput_rps:7.1f} {rep.replica_util:6.1%}")
     print(f"  ({len(results)} scenarios in {wall:.1f}s)")
 
+    if K > 1:
+        print(f"\n--- Monte-Carlo serving: {K} seeds x {n_req} requests "
+              f"(poisson, continuous batching, 2 replicas x {SLOTS} "
+              f"slots) ---")
+        batch = poisson_workload_batch(40.0, n_req, prompt=prompt,
+                                       output=output, seeds=K)
+        t0 = time.perf_counter()
+        for name, system in systems.items():
+            mc = monte_carlo_serving(builder.model_for(system),
+                                     ContinuousBatchingScheduler, batch,
+                                     replicas=2, slots=SLOTS)
+            t, d = mc.stat("ttft_p99"), mc.stat("tpot_p99")
+            print(f"  {name:12s} p99 TTFT {t.mean * 1e3:7.1f}ms "
+                  f"+/-{t.half_width * 1e3:5.1f}ms   "
+                  f"p99 TPOT {d.mean * 1e3:6.2f}ms "
+                  f"+/-{d.half_width * 1e3:4.2f}ms   (95% CI)")
+        print(f"  ({K} seeds x {len(systems)} systems in "
+              f"{time.perf_counter() - t0:.1f}s; one fused call per "
+              f"system, not {K} scalar runs)")
+
     slo = SLO(ttft_p99=0.75, tpot_p99=0.012)
+    mode = (f"CI upper bound over {K} seeds" if K > 1
+            else "single seeded draw")
     print(f"\n--- capacity planning: smallest replicas meeting {slo} "
-          f"(poisson traffic, continuous batching) ---")
+          f"(poisson traffic, continuous batching, {mode}) ---")
     for name, system in systems.items():
+        wf = (functools.partial(poisson_workload_batch, 40.0, n_req,
+                                prompt=prompt, output=output, seeds=K)
+              if K > 1 else traffics["poisson"])
         planner = CapacityPlanner(builder.model_for(system),
                                   ContinuousBatchingScheduler,
-                                  traffics["poisson"], slo)
+                                  wf, slo, num_seeds=K)
         plan = planner.plan(axis="replicas", cap=32, slots=SLOTS)
         rep = plan.report
         status = "meets SLO" if plan.feasible else "infeasible at cap"
-        print(f"  {name:12s} -> {plan.value} replicas ({status}; "
-              f"p99 TTFT {rep.ttft.p99 * 1e3:.0f}ms, "
-              f"p99 TPOT {rep.tpot.p99 * 1e3:.2f}ms, "
-              f"{len(plan.probes)} probes)")
+        if K > 1:
+            t, d = rep.stat("ttft_p99"), rep.stat("tpot_p99")
+            print(f"  {name:12s} -> {plan.value} replicas ({status}; "
+                  f"p99 TTFT {t.mean * 1e3:.0f}"
+                  f"+/-{t.half_width * 1e3:.0f}ms, "
+                  f"p99 TPOT {d.mean * 1e3:.2f}"
+                  f"+/-{d.half_width * 1e3:.2f}ms, "
+                  f"{len(plan.probes)} probes x {K} seeds)")
+        else:
+            print(f"  {name:12s} -> {plan.value} replicas ({status}; "
+                  f"p99 TTFT {rep.ttft.p99 * 1e3:.0f}ms, "
+                  f"p99 TPOT {rep.tpot.p99 * 1e3:.2f}ms, "
+                  f"{len(plan.probes)} probes)")
 
     # export one serving timeline for chrome://tracing / Perfetto
     best = results[0]

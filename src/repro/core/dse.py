@@ -54,8 +54,12 @@ class SweepResult:
 class ServingSweepResult:
     """One evaluated (traffic, scheduler, system) serving scenario.
 
-    ``report`` is a ``repro.serve_sim.simulator.ServingReport`` (typed
-    loosely: core.dse stays importable without the serving subsystem)."""
+    ``report`` is a ``repro.serve_sim.simulator.ServingReport`` — or a
+    ``repro.serve_sim.monte_carlo.MonteCarloServingReport`` when the
+    sweep ran with ``num_seeds > 1`` (typed loosely: core.dse stays
+    importable without the serving subsystem).  The p99 properties
+    return the scalar draw in the first case and the cross-seed mean in
+    the second, so ranking code works unchanged."""
 
     traffic: str
     scheduler: str
@@ -64,11 +68,17 @@ class ServingSweepResult:
 
     @property
     def ttft_p99(self) -> float:
-        return self.report.ttft.p99
+        r = self.report
+        if hasattr(r, "stats"):             # MonteCarloServingReport
+            return r.stat("ttft_p99").mean
+        return r.ttft.p99
 
     @property
     def tpot_p99(self) -> float:
-        return self.report.tpot.p99
+        r = self.report
+        if hasattr(r, "stats"):
+            return r.stat("tpot_p99").mean
+        return r.tpot.p99
 
 
 # Chip parameters that change the *tiling* (anything else is handled by
@@ -92,6 +102,26 @@ def _serving_scenario(common, sc: Tuple[str, str, str]) -> "ServingSweepResult":
     rep = dataclasses.replace(rep, sim_result=None)
     return ServingSweepResult(
         traffic=tname, scheduler=kname, system=sname, report=rep)
+
+
+def _serving_scenario_seeds(common, job):
+    """Worker-pool job for ``sweep_serving(num_seeds > 1)``: one seed
+    chunk ``[lo, hi)`` of one (system, traffic, scheduler) scenario.
+    The parent concatenates chunks back into one per-scenario
+    ``MonteCarloServingReport``.  Returns per-seed ``ServingReport``\\ s
+    with ``sim_result``/``events`` stripped; per-request columns ride
+    along (they pickle as compact arrays and, over a persistent pool,
+    ship via shared memory when large)."""
+    from repro.serve_sim.monte_carlo import MonteCarloServingSimulator
+
+    costs, batches, schedulers, replicas, slots = common
+    sname, tname, kname, lo, hi = job
+    sim = MonteCarloServingSimulator(
+        costs[sname], schedulers[kname], batches[tname].rows(lo, hi),
+        replicas=replicas, slots=slots)
+    return [dataclasses.replace(sim._run_seed(k), sim_result=None,
+                                events=[])
+            for k in range(hi - lo)]
 
 
 class DesignSpaceExplorer:
@@ -228,7 +258,8 @@ class DesignSpaceExplorer:
                       schedulers: Mapping[str, Callable[[], object]],
                       cost_builder, replicas: int = 1,
                       slots: int = 8,
-                      workers: int = 1) -> List[ServingSweepResult]:
+                      workers: int = 1,
+                      num_seeds: int = 1) -> List[ServingSweepResult]:
         """Traffic-driven serving axis: every (system, traffic, scheduler)
         scenario is simulated with ``repro.serve_sim`` on a cost model the
         ``cost_builder`` derives from this explorer's compiled-graph fast
@@ -237,15 +268,25 @@ class DesignSpaceExplorer:
         factories returning fresh seeded instances per run.  Results are
         sorted by p99 TTFT (best first).
 
+        ``num_seeds > 1`` turns every design point into a seed-batched
+        Monte-Carlo estimate: the traffic factories must then return a
+        ``repro.serve_sim.workload.RequestBatch`` with ``num_seeds``
+        rows, one ``MonteCarloServingSimulator`` call evaluates all seeds
+        per scenario, and each result carries a
+        ``MonteCarloServingReport`` (cross-seed mean/CI per percentile)
+        instead of a single-draw ``ServingReport`` — ranking properties
+        transparently switch to the cross-seed mean.
+
         ``workers > 1`` runs the scenarios on the persistent worker pool
         (fork once, reused across repeated sweeps) when the traffic and
         scheduler factories are picklable — e.g. classes, module-level
         functions, or ``functools.partial`` — and falls back to a
-        one-shot fork pool for lambda factories.  Each scenario builds
-        its workload/scheduler from its own seeded factories, so results
-        are bit-identical to a serial run — asserted by
-        ``tests/test_engine_parity.py`` — except that reports come back
-        with ``sim_result=None`` (traces stay in the worker).
+        one-shot fork pool for lambda factories.  Seed-batched sweeps fan
+        out seed *chunks*, so a single design point parallelizes too.
+        Each scenario builds its workload/scheduler from its own seeded
+        factories, so results are bit-identical to a serial run —
+        asserted by ``tests/test_engine_parity.py`` — except that reports
+        come back with ``sim_result=None`` (traces stay in the worker).
         """
         from repro.serve_sim.simulator import simulate_serving
 
@@ -255,6 +296,11 @@ class DesignSpaceExplorer:
                      for kname in schedulers]
         self.stats["estimates"] += len(scenarios)
         costs: Dict[str, object] = {}     # one cost model per system
+
+        if num_seeds > 1:
+            return self._sweep_serving_mc(
+                systems, traffics, schedulers, cost_builder, replicas,
+                slots, workers, num_seeds, scenarios)
 
         def run_one(sc: Tuple[str, str, str]) -> ServingSweepResult:
             sname, tname, kname = sc
@@ -276,6 +322,63 @@ class DesignSpaceExplorer:
                         replicas, slots))
         else:
             out = [run_one(sc) for sc in scenarios]
+        out.sort(key=lambda r: r.ttft_p99)
+        return out
+
+    def _sweep_serving_mc(self, systems, traffics, schedulers, cost_builder,
+                          replicas, slots, workers, num_seeds,
+                          scenarios) -> List[ServingSweepResult]:
+        """Seed-batched serving sweep: one Monte-Carlo evaluation per
+        scenario, optionally fanned out over the pool in seed chunks."""
+        from repro.serve_sim.monte_carlo import (MonteCarloServingReport,
+                                                 MonteCarloServingSimulator,
+                                                 _cross_seed_stats)
+        from repro.serve_sim.workload import RequestBatch
+
+        costs = {sname: cost_builder.model_for(system)
+                 for sname, system in systems.items()}
+        batches: Dict[str, RequestBatch] = {}
+        for tname, factory in traffics.items():
+            batch = factory()
+            if not isinstance(batch, RequestBatch):
+                raise TypeError(
+                    "num_seeds > 1 needs traffic factories returning "
+                    f"RequestBatch, got {type(batch)!r} for {tname!r}")
+            if batch.num_seeds != num_seeds:
+                raise ValueError(f"traffic {tname!r} has {batch.num_seeds} "
+                                 f"seed rows, sweep wants {num_seeds}")
+            batches[tname] = batch
+
+        if workers > 1 and num_seeds * len(scenarios) > 1:
+            chunk = max(1, -(-num_seeds // workers))
+            jobs = [(sname, tname, kname, lo, min(lo + chunk, num_seeds))
+                    for sname, tname, kname in scenarios
+                    for lo in range(0, num_seeds, chunk)]
+            parts = parallel_map(
+                _serving_scenario_seeds, jobs, workers,
+                common=(costs, batches, dict(schedulers), replicas, slots))
+            out = []
+            i = 0
+            for sname, tname, kname in scenarios:
+                reports = []
+                while i < len(jobs) and jobs[i][:3] == (sname, tname, kname):
+                    reports.extend(parts[i])
+                    i += 1
+                batch = batches[tname]
+                mc = MonteCarloServingReport(
+                    workload=batch.name, scheduler=schedulers[kname]().name,
+                    cost_model=costs[sname].name, replicas=replicas,
+                    slots=slots, seeds=batch.seeds, reports=reports,
+                    stats=_cross_seed_stats(reports))
+                out.append(ServingSweepResult(
+                    traffic=tname, scheduler=kname, system=sname, report=mc))
+        else:
+            out = [ServingSweepResult(
+                       traffic=tname, scheduler=kname, system=sname,
+                       report=MonteCarloServingSimulator(
+                           costs[sname], schedulers[kname], batches[tname],
+                           replicas=replicas, slots=slots).run())
+                   for sname, tname, kname in scenarios]
         out.sort(key=lambda r: r.ttft_p99)
         return out
 

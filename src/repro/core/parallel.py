@@ -11,7 +11,10 @@ execution paths, fastest first:
     process instead of once per sweep.  Jobs cross the process boundary
     pickled: the work function (by qualified name) and an optional
     ``common`` payload are broadcast once per map, then items stream to
-    workers one-in-flight each and results stream back in index order.
+    workers one-in-flight each and results stream back in index order
+    (large results via ``/dev/shm`` shared-memory files rather than the
+    pipe — see :func:`_ship_result`).  At most a couple of pools stay
+    alive at once; distinct ``workers`` counts evict LRU-style.
     Requires ``fn``/``common``/items to be picklable — module-level
     functions with explicit arguments, which is how ``repro.core.dse``
     and the estimator backends submit their work.
@@ -45,6 +48,7 @@ import os
 import pickle
 import selectors
 import signal
+import tempfile
 import warnings
 from typing import Callable, Dict, List, Optional, Sequence, TypeVar
 
@@ -69,6 +73,13 @@ WORKER_STORE: Dict = {}
 
 _PICKLE_PROTO = pickle.HIGHEST_PROTOCOL
 
+#: results whose pickle exceeds this ship as a shared-memory file
+#: (``/dev/shm``) instead of streaming through the result pipe — large
+#: sweep reports (per-request metric columns, event traces) transfer at
+#: memcpy speed and never stall the pipe's ~64 KiB kernel buffer.
+_SHM_MIN_BYTES = 1 << 18
+_SHM_DIR = "/dev/shm"
+
 
 class _Unpicklable(Exception):
     """The payload cannot cross a persistent-pool pipe."""
@@ -80,9 +91,58 @@ def _serial(fn, items, common) -> List:
     return [fn(common, x) for x in items]
 
 
+def _ship_result(out, res_f) -> None:
+    """Send one ("ok" | "err", index, value) response: small pickles go
+    down the pipe, large ones via an unlinked-after-read ``/dev/shm``
+    file referenced by a ("shm", index, path) message.  Falls back to
+    the pipe if the shared-memory write fails."""
+    try:
+        blob = pickle.dumps(out, protocol=_PICKLE_PROTO)
+    except Exception as e:                      # unpicklable result
+        blob = pickle.dumps(("err", out[1], repr(e)),
+                            protocol=_PICKLE_PROTO)
+    if len(blob) >= _SHM_MIN_BYTES and os.path.isdir(_SHM_DIR):
+        path = None
+        try:
+            fd, path = tempfile.mkstemp(prefix="repro-pool-", dir=_SHM_DIR)
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+            pickle.dump(("shm", out[1], path), res_f,
+                        protocol=_PICKLE_PROTO)
+            res_f.flush()
+            return
+        except Exception:
+            if path is not None:
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+    res_f.write(blob)
+    res_f.flush()
+
+
+def _load_result(res_f):
+    """Parent-side twin of :func:`_ship_result`: resolve a ("shm", ...)
+    indirection (read + unlink the file) into the plain response."""
+    msg = pickle.load(res_f)
+    if msg[0] != "shm":
+        return msg
+    _, idx, path = msg
+    try:
+        with open(path, "rb") as f:
+            blob = f.read()
+    finally:
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+    return pickle.loads(blob)
+
+
 def _worker_loop(job_f, res_f) -> None:
     """Child main loop: consume (begin | item | quit) messages, stream
-    ("ok" | "err", index, value) responses."""
+    ("ok" | "err", index, value) responses (large values via
+    :func:`_ship_result`'s shared-memory path)."""
     fn = common = None
     while True:
         try:
@@ -103,12 +163,7 @@ def _worker_loop(job_f, res_f) -> None:
                 out = ("ok", idx, val)
             except BaseException as e:          # noqa: BLE001
                 out = ("err", idx, repr(e))
-            try:
-                pickle.dump(out, res_f, protocol=_PICKLE_PROTO)
-            except Exception as e:              # unpicklable result
-                pickle.dump(("err", idx, repr(e)), res_f,
-                            protocol=_PICKLE_PROTO)
-            res_f.flush()
+            _ship_result(out, res_f)
         else:                                   # "quit"
             return
 
@@ -244,7 +299,7 @@ class WorkerPool:
                 while in_flight:
                     for key, _ in sel.select():
                         w = key.data
-                        tag, idx, val = pickle.load(self._procs[w][2])
+                        tag, idx, val = _load_result(self._procs[w][2])
                         if tag == "err":
                             raise _WorkerFailure(val)
                         results[idx] = val
@@ -262,7 +317,7 @@ class WorkerPool:
                 # then let parallel_map retry on the legacy fork path
                 for w in list(in_flight):
                     try:
-                        tag, idx, val = pickle.load(self._procs[w][2])
+                        tag, idx, val = _load_result(self._procs[w][2])
                         if tag == "ok":
                             results[idx] = val
                             done[idx] = True
@@ -313,13 +368,27 @@ class WorkerPool:
 
 _POOLS: Dict[int, WorkerPool] = {}
 
+#: live persistent pools are capped: callers that sweep with varying
+#: ``workers`` counts would otherwise accumulate one forked pool (and
+#: its resident workers) per distinct count for the process lifetime.
+_MAX_POOLS = 2
+
 
 def get_pool(workers: int) -> WorkerPool:
     """The shared persistent pool for ``workers`` (created lazily,
-    replaced transparently if broken)."""
-    pool = _POOLS.get(workers)
-    if pool is None or pool.broken:
-        pool = _POOLS[workers] = WorkerPool(workers)
+    replaced transparently if broken).  At most :data:`_MAX_POOLS` pools
+    stay alive; requesting a new count evicts and closes the
+    least-recently-used pool."""
+    pool = _POOLS.pop(workers, None)
+    if pool is not None and pool.broken:
+        pool.close()
+        pool = None
+    if pool is None:
+        pool = WorkerPool(workers)
+    _POOLS[workers] = pool              # reinsert: most-recently-used last
+    while len(_POOLS) > _MAX_POOLS:
+        lru = next(k for k in _POOLS if k != workers)
+        _POOLS.pop(lru).close()
     return pool
 
 

@@ -21,25 +21,34 @@ Quickstart::
 """
 from repro.serve_sim.capacity import SLO, CapacityPlan, CapacityPlanner
 from repro.serve_sim.cost import ServingCostModel, ServingCostModelBuilder
+from repro.serve_sim.monte_carlo import (MonteCarloServingReport,
+                                         MonteCarloServingSimulator,
+                                         SeedStats, monte_carlo_serving)
 from repro.serve_sim.scheduler import (SCHEDULERS, BatchScheduler,
                                        BucketedPrefillScheduler,
                                        ContinuousBatchingScheduler,
                                        StaticBatchScheduler, make_scheduler)
-from repro.serve_sim.simulator import (LatencyStats, RequestMetrics,
-                                       ServingReport, ServingSimulator,
-                                       simulate_serving)
+from repro.serve_sim.simulator import (LaneStateArrays, LatencyStats,
+                                       RequestMetrics, ServingReport,
+                                       ServingSimulator, simulate_serving)
 from repro.serve_sim.workload import (ClosedLoopWorkload, LengthDist,
-                                      OpenLoopWorkload, Request, Workload,
-                                      bursty_workload, poisson_workload,
-                                      trace_workload)
+                                      OpenLoopWorkload, Request, RequestBatch,
+                                      Workload, bursty_workload,
+                                      bursty_workload_batch, poisson_workload,
+                                      poisson_workload_batch, trace_workload,
+                                      trace_workload_batch)
 
 __all__ = [
     "SLO", "CapacityPlan", "CapacityPlanner",
     "ServingCostModel", "ServingCostModelBuilder",
+    "MonteCarloServingReport", "MonteCarloServingSimulator", "SeedStats",
+    "monte_carlo_serving",
     "SCHEDULERS", "BatchScheduler", "BucketedPrefillScheduler",
     "ContinuousBatchingScheduler", "StaticBatchScheduler", "make_scheduler",
-    "LatencyStats", "RequestMetrics", "ServingReport", "ServingSimulator",
-    "simulate_serving",
+    "LaneStateArrays", "LatencyStats", "RequestMetrics", "ServingReport",
+    "ServingSimulator", "simulate_serving",
     "ClosedLoopWorkload", "LengthDist", "OpenLoopWorkload", "Request",
-    "Workload", "bursty_workload", "poisson_workload", "trace_workload",
+    "RequestBatch", "Workload", "bursty_workload", "bursty_workload_batch",
+    "poisson_workload", "poisson_workload_batch", "trace_workload",
+    "trace_workload_batch",
 ]

@@ -39,6 +39,16 @@ class SLO:
                 and report.tpot.p99 <= self.tpot_p99
                 and report.e2e.p99 <= self.e2e_p99)
 
+    def satisfied_by_ci(self, report) -> bool:
+        """CI-conservative attainment for a seed-batched
+        :class:`~repro.serve_sim.monte_carlo.MonteCarloServingReport`:
+        every constrained metric must meet its target at the *upper* 95%
+        confidence bound of the cross-seed mean, so one lucky draw cannot
+        declare a configuration feasible."""
+        return (report.stat("ttft_p99").ci_hi <= self.ttft_p99
+                and report.stat("tpot_p99").ci_hi <= self.tpot_p99
+                and report.stat("e2e_p99").ci_hi <= self.e2e_p99)
+
     def __str__(self) -> str:
         terms = []
         if math.isfinite(self.ttft_p99):
@@ -57,7 +67,9 @@ class CapacityPlan:
     axis: str                      # "replicas" | "slots"
     value: int                     # smallest feasible probe (or cap if none)
     feasible: bool
-    report: Optional[ServingReport]
+    #: the winning probe's :class:`ServingReport` — or, when the planner
+    #: ran with ``num_seeds > 1``, its ``MonteCarloServingReport``
+    report: Optional[object]
     probes: Dict[int, bool] = field(default_factory=dict)
 
     def __str__(self) -> str:
@@ -71,21 +83,52 @@ class CapacityPlanner:
     ``workload_factory`` must return a *fresh, identically-seeded* workload
     per call (closed-loop workloads are stateful); likewise
     ``scheduler_factory`` returns a fresh policy per replica.
+
+    With ``num_seeds > 1`` the factory must instead return a
+    ``repro.serve_sim.workload.RequestBatch`` with that many rows; every
+    probe then runs the seed-batched Monte-Carlo simulator and the
+    bisection decides feasibility on the cross-seed confidence interval
+    (:meth:`SLO.satisfied_by_ci`) instead of a single draw — a
+    configuration only counts as feasible when the upper 95% bound of
+    each constrained p99 meets its target.
     """
 
     def __init__(self, cost: ServingCostModel,
                  scheduler_factory: Callable[[], BatchScheduler],
                  workload_factory: Callable[[], Workload],
-                 slo: SLO):
+                 slo: SLO, num_seeds: int = 1):
+        if num_seeds < 1:
+            raise ValueError("need num_seeds >= 1")
         self.cost = cost
         self.scheduler_factory = scheduler_factory
         self.workload_factory = workload_factory
         self.slo = slo
+        self.num_seeds = num_seeds
 
-    def _evaluate(self, replicas: int, slots: int) -> ServingReport:
+    def _evaluate(self, replicas: int, slots: int):
+        if self.num_seeds > 1:
+            from repro.serve_sim.monte_carlo import MonteCarloServingSimulator
+            from repro.serve_sim.workload import RequestBatch
+
+            batch = self.workload_factory()
+            if not isinstance(batch, RequestBatch):
+                raise TypeError(
+                    "num_seeds > 1 needs a workload_factory returning a "
+                    f"RequestBatch, got {type(batch)!r}")
+            if batch.num_seeds != self.num_seeds:
+                raise ValueError(f"batch has {batch.num_seeds} seed rows, "
+                                 f"planner wants {self.num_seeds}")
+            return MonteCarloServingSimulator(
+                self.cost, self.scheduler_factory, batch,
+                replicas=replicas, slots=slots).run()
         return simulate_serving(self.cost, self.scheduler_factory,
                                 self.workload_factory(),
                                 replicas=replicas, slots=slots)
+
+    def _feasible(self, report) -> bool:
+        if self.num_seeds > 1:
+            return self.slo.satisfied_by_ci(report)
+        return self.slo.satisfied_by(report)
 
     def plan(self, axis: str = "replicas", lo: int = 1, cap: int = 64,
              replicas: int = 1, slots: int = 8) -> CapacityPlan:
@@ -95,14 +138,14 @@ class CapacityPlanner:
             raise ValueError("axis must be 'replicas' or 'slots'")
 
         probes: Dict[int, bool] = {}
-        reports: Dict[int, ServingReport] = {}
+        reports: Dict[int, object] = {}
 
         def feasible(v: int) -> bool:
             if v not in probes:
                 r = self._evaluate(v if axis == "replicas" else replicas,
                                    v if axis == "slots" else slots)
                 reports[v] = r
-                probes[v] = self.slo.satisfied_by(r)
+                probes[v] = self._feasible(r)
             return probes[v]
 
         # doubling phase: find a feasible upper bound

@@ -1,0 +1,579 @@
+"""Seed-batched Monte-Carlo serving simulation.
+
+Tail-latency questions (p99 TTFT under stochastic traffic) need many
+traffic seeds per design point; looping the scalar
+:class:`~repro.serve_sim.simulator.ServingSimulator` makes each seed pay
+the full event-machinery cost (DES heap, ``Request``/``InFlight``
+objects, closure dispatch).  This module makes seed replication cheap by
+splitting the hot loop along the tentpole's policy/advance seam:
+
+* **generation** — a :class:`~repro.serve_sim.workload.RequestBatch`
+  pre-generates all ``K`` seeds' arrival/length arrays without building
+  a single ``Request`` object;
+* **state advance** — per-request timestamps live in
+  :class:`~repro.serve_sim.simulator.LaneStateArrays` columns (one SoA
+  per seed), latency populations and cross-seed summaries reduce to
+  vectorized column arithmetic, and fused decode-leap spans accumulate
+  via ``np.add.accumulate`` (:func:`~repro.serve_sim.simulator._leap_spans`);
+* **policy** — the branchy per-event decisions.  For the stock
+  :class:`~repro.serve_sim.scheduler.ContinuousBatchingScheduler` under
+  the stock affine :class:`~repro.serve_sim.cost.ServingCostModel` the
+  decision sequence is replayed by a specialized tight loop
+  (:func:`_simulate_continuous_fast`) with plain-list replica state and
+  no event heap — bit-identical to the scalar simulator by construction
+  (golden tests in ``tests/test_monte_carlo.py``), several times faster
+  per seed.  Everything else (custom schedulers, overridden cost
+  methods, unsorted traces) falls back to the scalar simulator per seed,
+  so parity is unconditional.
+
+Cross-seed lock-step arrays (advance all seeds in one NumPy/`jax.vmap`
+step) were evaluated and deliberately not used for the event loop: the
+decode-leap fusion that makes the scalar path fast makes the per-seed
+step *irregular* (each seed leaps a different number of steps per
+event), so a lock-step backend must either desugar to ~per-token steps
+(1e6+ tiny masked array ops for a 10k-request trace — slower than the
+tight loop) or give up fusion.  The array batching therefore lives where
+the work really is uniform: workload generation, leap-span
+accumulation, per-seed metric columns, and cross-seed statistics.  See
+ROADMAP for the `lax.scan` regular-step design that would change this.
+
+The emitted :class:`MonteCarloServingReport` carries one
+:class:`~repro.serve_sim.simulator.ServingReport` per seed plus
+:class:`SeedStats` (mean / sample std / 95% normal-approximation CI over
+seeds) for every TTFT/TPOT/E2E/queue-delay percentile, which
+``DesignSpaceExplorer.sweep_serving(num_seeds=K)`` and the capacity
+planner's CI-conservative bisection consume.
+"""
+from __future__ import annotations
+
+from bisect import bisect_left, bisect_right, insort
+from collections import deque
+from dataclasses import dataclass
+from heapq import heappop, heappush
+from math import sqrt
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.serve_sim.cost import ServingCostModel
+from repro.serve_sim.scheduler import (BatchScheduler,
+                                       ContinuousBatchingScheduler)
+from repro.serve_sim.simulator import (LaneStateArrays, ServingReport,
+                                       ServingSimulator, _LazyRequests,
+                                       _LeapScratch, _leap_spans)
+from repro.serve_sim.workload import RequestBatch
+
+
+@dataclass(frozen=True)
+class SeedStats:
+    """Cross-seed distribution of one scalar metric (e.g. TTFT p99).
+
+    ``ci_lo``/``ci_hi`` bound the *mean* at 95% confidence via the
+    normal approximation (mean ± 1.96·std/√K, sample std); with K < 2
+    the interval collapses to the point estimate.  ``values`` keeps the
+    per-seed draws for attainment counts and convergence plots.
+    """
+
+    n: int
+    mean: float
+    std: float
+    ci_lo: float
+    ci_hi: float
+    values: Tuple[float, ...] = ()
+
+    @property
+    def half_width(self) -> float:
+        return (self.ci_hi - self.ci_lo) / 2.0
+
+    @staticmethod
+    def of(values) -> "SeedStats":
+        vals = tuple(float(v) for v in values)
+        k = len(vals)
+        if k == 0:
+            return SeedStats(0, 0.0, 0.0, 0.0, 0.0, ())
+        a = np.asarray(vals)
+        mean = float(a.mean())
+        if k < 2:
+            return SeedStats(k, mean, 0.0, mean, mean, vals)
+        std = float(a.std(ddof=1))
+        hw = 1.96 * std / sqrt(k)
+        return SeedStats(k, mean, std, mean - hw, mean + hw, vals)
+
+    def __str__(self) -> str:
+        return f"{self.mean:g} ± {self.half_width:g} (95% CI, n={self.n})"
+
+
+#: latency populations × summaries exposed as cross-seed :class:`SeedStats`
+_METRIC_KEYS = tuple(f"{m}_{p}"
+                     for m in ("ttft", "tpot", "e2e", "queue_delay")
+                     for p in ("mean", "p50", "p95", "p99"))
+
+
+@dataclass
+class MonteCarloServingReport:
+    """Cross-seed serving estimate: per-seed reports + summary statistics."""
+
+    workload: str
+    scheduler: str
+    cost_model: str
+    replicas: int
+    slots: int
+    seeds: Tuple[int, ...]
+    reports: List[ServingReport]
+    stats: Dict[str, SeedStats]
+
+    @property
+    def num_seeds(self) -> int:
+        return len(self.seeds)
+
+    @property
+    def n_requests(self) -> int:
+        """Total requests simulated across all seeds."""
+        return sum(r.n_requests for r in self.reports)
+
+    def stat(self, name: str) -> SeedStats:
+        """Cross-seed stats for ``"<metric>_<summary>"`` (e.g.
+        ``"ttft_p99"``), ``"throughput_rps"``, or ``"duration"``."""
+        return self.stats[name]
+
+    @property
+    def ttft_p99(self) -> SeedStats:
+        return self.stats["ttft_p99"]
+
+    @property
+    def tpot_p99(self) -> SeedStats:
+        return self.stats["tpot_p99"]
+
+    @property
+    def e2e_p99(self) -> SeedStats:
+        return self.stats["e2e_p99"]
+
+    @property
+    def throughput_rps(self) -> SeedStats:
+        return self.stats["throughput_rps"]
+
+    def attainment(self, slo) -> float:
+        """Fraction of seeds whose report satisfies ``slo``
+        (anything with a ``satisfied_by(report) -> bool``)."""
+        if not self.reports:
+            return 0.0
+        ok = sum(1 for r in self.reports if slo.satisfied_by(r))
+        return ok / len(self.reports)
+
+    def summary(self) -> str:
+        t = self.stats["ttft_p99"]
+        o = self.stats["tpot_p99"]
+        e = self.stats["e2e_p99"]
+        x = self.stats["throughput_rps"]
+        return (
+            f"mc-serve[{self.cost_model}|{self.scheduler}|{self.workload}] "
+            f"{self.replicas}x{self.slots} slots, {self.num_seeds} seeds: "
+            f"{x.mean:.2f} ± {x.half_width:.2f} req/s\n"
+            f"  TTFT p99 = {t.mean * 1e3:.0f} ± {t.half_width * 1e3:.0f} ms"
+            f"   TPOT p99 = {o.mean * 1e3:.2f} ± {o.half_width * 1e3:.2f} ms"
+            f"   E2E p99 = {e.mean:.2f} ± {e.half_width:.2f} s"
+            f"   (95% CI over seeds)")
+
+
+def _cross_seed_stats(reports: List[ServingReport]) -> Dict[str, SeedStats]:
+    stats: Dict[str, SeedStats] = {}
+    for key in _METRIC_KEYS:
+        metric, _, pct = key.rpartition("_")
+        stats[key] = SeedStats.of(
+            [getattr(getattr(r, metric), pct) for r in reports])
+    stats["throughput_rps"] = SeedStats.of(
+        [r.throughput_rps for r in reports])
+    stats["duration"] = SeedStats.of([r.duration for r in reports])
+    return stats
+
+
+def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
+                              prompts: List[int], outputs: List[int],
+                              replicas: int, slots: int,
+                              wl_name: str) -> ServingReport:
+    """Specialized replay of one open-loop trace under
+    :class:`ContinuousBatchingScheduler` + the stock affine cost model.
+
+    Re-implements exactly the event sequence the scalar
+    :class:`ServingSimulator` express path produces — same tie-breaking
+    (arrivals always precede same-time lane completions because they are
+    enqueued first; lane-vs-lane ties resolve by submission sequence),
+    same decode-leap fusion/speculation/rollback arithmetic (shared
+    :func:`_leap_spans`), same ``busy_time``/makespan accumulation order
+    — but with O(1) bookkeeping per event instead of the DES heap,
+    ``Request``/``InFlight`` objects, and per-slot advance loops:
+
+    * per-replica ``dec_total`` counts cumulative fused decode steps;
+      a slot admitted at count ``a`` with ``o`` output tokens finishes
+      when ``dec_total`` reaches ``a + o``, so slot finishes pop off a
+      per-replica min-heap of packed integer keys
+      (``threshold * slots + slot`` — plain ints heap-compare in C) and
+      the scalar path's per-slot ``rem``/``ctx`` advance loop disappears
+      (its values are recovered exactly from the counters — all
+      integers);
+    * the minimum remaining-token count (the fused-leap length) is
+      ``heap[0] // slots - dec_total``, O(1) instead of a slot scan;
+    * the next lane completion is ``min()`` over per-lane
+      ``(end, seq, lane)`` tuples — a C tuple-compare pass instead of a
+      Python scan per event;
+    * finished-request rows buffer in a plain list and fill the
+      :class:`LaneStateArrays` columns in one vectorized pass at the end.
+
+    Bit-identical output is the contract; ``tests/test_monte_carlo.py``
+    enforces it.
+    """
+    pf, pp = cost.prefill_fixed, cost.prefill_per_token
+    df, dt, dc = (cost.decode_fixed, cost.decode_per_token,
+                  cost.decode_per_ctx_token)
+    R, S = replicas, slots
+    n_req = len(times)
+    scratch = _LeapScratch()
+    INF = float("inf")
+
+    rows: List[tuple] = []       # finished (rid, r, slot, admit, first, done)
+    rows_append = rows.append
+    pending: deque = deque()
+    busy = [False] * R
+    is_decode = [False] * R
+    idle_key = [(INF, 0, r) for r in range(R)]
+    ekey = list(idle_key)        # (phase end, seq, lane): min() = next event
+    busy_time = [0.0] * R
+    free = [list(range(S)) for _ in range(R)]     # free-slot min-heaps
+    occ = [0] * R                # occupied-slot count
+    thresh = [[] for _ in range(R)]  # min-heap of threshold * S + slot
+    s_req = [[0] * S for _ in range(R)]           # slot -> request index
+    s_adm = [[0] * S for _ in range(R)]           # slot -> dec_total at admit
+    s_tadmit = [[0.0] * S for _ in range(R)]
+    s_tfirst = [[0.0] * S for _ in range(R)]
+    need_tf = [[] for _ in range(R)]  # slots admitted since last decode
+    dec_total = [0] * R          # cumulative decode steps on this replica
+    ctx_sum = [0] * R            # sum of active slots' cached tokens
+    dec_k = [1] * R              # fused steps in the in-flight decode
+    dec_tf = [0.0] * R           # end of its first step (token-1 time)
+    leap = [None] * R            # armed speculative leap: step bounds
+    armed = 0                    # count of non-None entries in `leap`
+    busy_count = 0
+    total_out = 0
+    seqc = n_req                 # arrivals implicitly hold seq 0..n_req-1
+    makespan = 0.0
+
+    def submit(r: int, now: float, dur: float, decode: bool) -> None:
+        nonlocal busy_count, seqc
+        busy[r] = True
+        busy_count += 1
+        busy_time[r] += dur
+        seqc += 1
+        ekey[r] = (now + dur, seqc, r)
+        is_decode[r] = decode
+
+    def rollback(r: int, now: float) -> None:
+        # mirrors ServingSimulator._rollback_leap + ServiceLane.truncate
+        nonlocal armed, seqc
+        bounds = leap[r]
+        leap[r] = None
+        armed -= 1
+        j = bisect_left(bounds, now)
+        if j >= len(bounds) - 1:
+            return               # lands in the final step: leap was exact
+        dec_k[r] = j + 1
+        new_end = bounds[j]
+        old_end = ekey[r][0]
+        if new_end >= old_end:
+            return               # zero-length tail: completion stands
+        busy_time[r] -= old_end - new_end
+        seqc += 1
+        ekey[r] = (new_end, seqc, r)
+
+    def start_decode(r: int, now: float) -> None:
+        nonlocal armed
+        n = occ[r]
+        ctx = ctx_sum[r]
+        k_min = thresh[r][0] // S - dec_total[r]
+        base = df + dt * n
+        c0 = base + dc * ctx
+        if k_min > 1:
+            speculate = bool(free[r])   # admission possible -> arm rollback
+            dur, bounds = _leap_spans(now, c0, base, dc, ctx, n, k_min,
+                                      speculate, scratch)
+            dec_k[r] = k_min
+            if bounds is not None:
+                leap[r] = bounds
+                armed += 1
+        else:
+            dur = c0
+            dec_k[r] = 1
+        dec_tf[r] = now + c0
+        submit(r, now, dur, True)
+
+    def kick(r: int, now: float) -> None:
+        if pending and occ[r] < S:
+            i = pending.popleft()
+            s = heappop(free[r])
+            occ[r] += 1
+            p = prompts[i]
+            s_req[r][s] = i
+            s_adm[r][s] = dec_total[r]
+            s_tadmit[r][s] = now
+            need_tf[r].append(s)
+            heappush(thresh[r], (dec_total[r] + outputs[i]) * S + s)
+            ctx_sum[r] += p
+            submit(r, now, pf + pp * (p if p > 0 else 0), False)
+            if armed:                   # admission invalidates sibling leaps
+                for r2 in range(R):
+                    if r2 != r and leap[r2] is not None:
+                        rollback(r2, now)
+        elif occ[r]:
+            start_decode(r, now)
+
+    # The lane-completion path below inlines finish-decode bookkeeping,
+    # the kick, decode start, and submission — it runs once per lane
+    # event and the call overhead is measurable at Monte-Carlo scale.
+    # The closures above cover the arrival-side kicks and rollbacks
+    # (rare under load); both encode the same policy, and the golden
+    # parity tests exercise both.
+    ai = 0
+    na = INF                     # next clamped arrival time
+    if n_req:
+        t = times[0]
+        na = t if t > 0.0 else 0.0
+    while True:
+        m = min(ekey)
+        bt = m[0]
+        if na <= bt:                    # arrivals win same-time ties
+            if na == INF:
+                break                   # both streams exhausted
+            if armed == 0 and busy_count == R:
+                # No idle replica to kick, no leap to roll back:
+                # every arrival up to (and at) the next completion is
+                # a pure queue append — take them in one jump.
+                j = bisect_right(times, bt, ai)
+                pending.extend(range(ai, j))
+                ai = j
+            else:
+                pending.append(ai)
+                ai += 1
+                if busy_count < R:
+                    for r in range(R):
+                        if not busy[r]:
+                            kick(r, na)
+                if pending and armed:
+                    for r in range(R):
+                        if leap[r] is not None:
+                            rollback(r, na)
+            if ai < n_req:
+                t = times[ai]
+                na = t if t > 0.0 else 0.0
+            else:
+                na = INF
+            continue
+        r = m[2]
+        now = bt
+        busy[r] = False
+        busy_count -= 1
+        ekey[r] = idle_key[r]
+        if now > makespan:
+            makespan = now
+        if is_decode[r]:
+            # ---- finish the fused decode (inline finish_decode) ----
+            if leap[r] is not None:
+                leap[r] = None
+                armed -= 1
+            k = dec_k[r]
+            n = occ[r]
+            total_out += k * n
+            ctx_sum[r] += k * n
+            a = dec_total[r] + k
+            dec_total[r] = a
+            ntf = need_tf[r]
+            if ntf:
+                tf = dec_tf[r]
+                tf_r = s_tfirst[r]
+                for s in ntf:
+                    tf_r[s] = tf
+                ntf.clear()
+            th = thresh[r]
+            lim = (a + 1) * S           # packed key < lim  <=>  threshold <= a
+            if th and th[0] < lim:
+                # slot finishes, in slot order (matching the scalar
+                # path's slot-sorted active iteration)
+                done = [heappop(th) % S]
+                while th and th[0] < lim:
+                    done.append(heappop(th) % S)
+                if len(done) > 1:
+                    done.sort()
+                fr = free[r]
+                req_r, adm_r = s_req[r], s_adm[r]
+                ta_r, tf_r = s_tadmit[r], s_tfirst[r]
+                for s in done:
+                    heappush(fr, s)
+                    # released ctx = prompt + every step it participated
+                    # in (the last fused leap may overshoot its output
+                    # count, exactly as the scalar fl.ctx += k does)
+                    ctx_sum[r] -= prompts[req_r[s]] + (a - adm_r[s])
+                occ[r] = n - len(done)
+                for s in done:
+                    rows_append((req_r[s], r, s, ta_r[s], tf_r[s], now))
+        # ---- kick the now-idle replica (inline kick) ----
+        if pending and occ[r] < S:
+            i = pending.popleft()
+            s = heappop(free[r])
+            occ[r] += 1
+            s_req[r][s] = i
+            s_adm[r][s] = dec_total[r]
+            s_tadmit[r][s] = now
+            need_tf[r].append(s)
+            heappush(thresh[r], (dec_total[r] + outputs[i]) * S + s)
+            p = prompts[i]
+            ctx_sum[r] += p
+            dur = pf + pp * (p if p > 0 else 0)
+            busy[r] = True
+            busy_count += 1
+            busy_time[r] += dur
+            seqc += 1
+            ekey[r] = (now + dur, seqc, r)
+            is_decode[r] = False
+            if armed:                   # admission invalidates sibling leaps
+                for r2 in range(R):
+                    if r2 != r and leap[r2] is not None:
+                        rollback(r2, now)
+        elif occ[r]:
+            # ---- issue the next fused decode (inline start_decode,
+            # with _leap_spans' small-k Python path unrolled in place:
+            # same `ctx += n; dur += base + dc*ctx` accumulation) ----
+            n = occ[r]
+            ctx = ctx_sum[r]
+            k_min = thresh[r][0] // S - dec_total[r]
+            base = df + dt * n
+            c0 = base + dc * ctx
+            dec_tf[r] = now + c0
+            if k_min > 1:
+                dec_k[r] = k_min
+                if free[r]:             # admission possible -> arm rollback
+                    if k_min < 16:
+                        dur = c0
+                        bounds = [now + c0]
+                        ba = bounds.append
+                        cx = ctx
+                        for _ in range(k_min - 1):
+                            cx += n
+                            dur += base + dc * cx
+                            ba(now + dur)
+                    else:
+                        dur, bounds = _leap_spans(now, c0, base, dc, ctx,
+                                                  n, k_min, True, scratch)
+                    leap[r] = bounds
+                    armed += 1
+                elif k_min < 16:
+                    dur = c0
+                    cx = ctx
+                    for _ in range(k_min - 1):
+                        cx += n
+                        dur += base + dc * cx
+                else:
+                    dur, _nb = _leap_spans(now, c0, base, dc, ctx, n,
+                                           k_min, False, scratch)
+            else:
+                dur = c0
+                dec_k[r] = 1
+            busy[r] = True
+            busy_count += 1
+            busy_time[r] += dur
+            seqc += 1
+            ekey[r] = (now + dur, seqc, r)
+            is_decode[r] = True
+
+    # one vectorized fill of the SoA columns from the buffered rows
+    nf = len(rows)
+    ls = LaneStateArrays(capacity=nf)
+    if nf:
+        rid, rep, slot, t_admit, t_first, t_done = zip(*rows)
+        ls.rid[:nf] = rid
+        ls.replica[:nf] = rep
+        ls.slot[:nf] = slot
+        ls.t_admit[:nf] = t_admit
+        ls.t_first[:nf] = t_first
+        ls.t_done[:nf] = t_done
+        rid_arr = ls.rid[:nf]
+        ls.t_arrive[:nf] = np.asarray(times)[rid_arr]
+        ls.prompt[:nf] = np.asarray(prompts)[rid_arr]
+        ls.output[:nf] = np.asarray(outputs)[rid_arr]
+    ls.n = nf
+    ls.sort_by_rid()
+    ttft, tpot, e2e, queue_delay = ls.stats()
+    util = 0.0
+    if makespan > 0:
+        util = sum(busy_time) / (R * makespan)
+    return ServingReport(
+        workload=wl_name, scheduler="continuous", cost_model=cost.name,
+        replicas=R, slots=S, n_requests=ls.n, duration=makespan,
+        output_tokens=total_out, ttft=ttft, tpot=tpot, e2e=e2e,
+        queue_delay=queue_delay, replica_util=util,
+        requests=_LazyRequests(ls), sim_result=None, events=[])
+
+
+class MonteCarloServingSimulator:
+    """Replays every row of a :class:`RequestBatch` against one
+    (cost model, scheduler, replicas, slots) design point.
+
+    Rows eligible for the specialized continuous-batching loop (stock
+    :class:`ContinuousBatchingScheduler`, stock affine cost methods,
+    time-sorted arrivals) run through :func:`_simulate_continuous_fast`;
+    anything else runs the scalar :class:`ServingSimulator` per seed.
+    Both paths produce identical per-seed :class:`ServingReport`\\ s, so
+    switching paths never changes results — only speed.
+    """
+
+    def __init__(self, cost: ServingCostModel,
+                 scheduler_factory: Callable[[], BatchScheduler],
+                 batch: RequestBatch,
+                 replicas: int = 1,
+                 slots: int = 8):
+        if replicas < 1 or slots < 1:
+            raise ValueError("need replicas >= 1 and slots >= 1")
+        if not isinstance(batch, RequestBatch):
+            raise TypeError(f"expected a RequestBatch, got {type(batch)!r}")
+        self.cost = cost
+        self.scheduler_factory = scheduler_factory
+        self.batch = batch
+        self.replicas = replicas
+        self.slots = slots
+        probe = scheduler_factory()
+        self.scheduler_name = probe.name
+        cls = type(cost)
+        self.fast_path = (
+            type(probe) is ContinuousBatchingScheduler
+            and cls.decode_step_time is ServingCostModel.decode_step_time
+            and cls.prefill_time is ServingCostModel.prefill_time
+            and bool(np.all(np.diff(batch.t_arrive, axis=1) >= 0.0)))
+
+    def _run_seed(self, k: int) -> ServingReport:
+        b = self.batch
+        if self.fast_path:
+            return _simulate_continuous_fast(
+                self.cost, b.t_arrive[k].tolist(), b.prompt[k].tolist(),
+                b.output[k].tolist(), self.replicas, self.slots,
+                f"{b.name}/seed{b.seeds[k]}")
+        return ServingSimulator(self.cost, self.scheduler_factory,
+                                b.workload(k), replicas=self.replicas,
+                                slots=self.slots).run()
+
+    def run(self) -> MonteCarloServingReport:
+        reports = [self._run_seed(k) for k in range(self.batch.num_seeds)]
+        return MonteCarloServingReport(
+            workload=self.batch.name,
+            scheduler=self.scheduler_name,
+            cost_model=self.cost.name,
+            replicas=self.replicas, slots=self.slots,
+            seeds=self.batch.seeds,
+            reports=reports,
+            stats=_cross_seed_stats(reports))
+
+
+def monte_carlo_serving(cost: ServingCostModel,
+                        scheduler_factory: Callable[[], BatchScheduler],
+                        batch: RequestBatch, replicas: int = 1,
+                        slots: int = 8) -> MonteCarloServingReport:
+    """One-shot convenience wrapper around
+    :class:`MonteCarloServingSimulator`."""
+    return MonteCarloServingSimulator(cost, scheduler_factory, batch,
+                                      replicas=replicas, slots=slots).run()

@@ -31,7 +31,7 @@ from bisect import bisect_left, insort
 from collections import deque
 from dataclasses import dataclass, field
 from heapq import heappop, heappush
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -55,8 +55,9 @@ class LatencyStats:
     max: float
 
     @staticmethod
-    def of(values: List[float]) -> "LatencyStats":
-        if not values:
+    def of(values) -> "LatencyStats":
+        """Summarize a list or 1-D array of latency values."""
+        if len(values) == 0:
             return LatencyStats(0, 0.0, 0.0, 0.0, 0.0, 0.0)
         a = np.asarray(values, dtype=np.float64)
         p50, p95, p99 = np.percentile(a, (50, 95, 99))
@@ -97,6 +98,219 @@ class RequestMetrics:
         return (self.t_done - self.t_first) / (n - 1) if n > 1 else 0.0
 
 
+class LaneStateArrays:
+    """Structure-of-arrays serving state — the *state advance* half of the
+    simulator split.
+
+    The serving hot loop separates into branchy per-lane *policy
+    decisions* (which request to admit, when to decode — driven by
+    :class:`~repro.serve_sim.scheduler.BatchScheduler` and the per-lane
+    event machinery) and a uniform *state advance* (arrival/admit/first/
+    finish timestamps, slot placement, token counts) that is identical
+    arithmetic for every request.  This class holds the advance side as
+    flat NumPy columns: the scalar :class:`ServingSimulator` records each
+    finished request into one instance, and the seed-batched
+    :class:`~repro.serve_sim.monte_carlo.MonteCarloServingSimulator`
+    allocates one per seed so cross-seed statistics reduce to vectorized
+    column arithmetic.
+
+    Latency populations (TTFT/TPOT/E2E/queue delay) are derived from the
+    columns bit-identically to the per-row :class:`RequestMetrics`
+    properties they replace; ``RequestMetrics`` rows themselves are
+    materialized lazily (:class:`_LazyRequests`) only when a consumer
+    asks for them.
+    """
+
+    __slots__ = ("n", "rid", "replica", "slot", "t_arrive", "t_admit",
+                 "t_first", "t_done", "prompt", "output")
+
+    def __init__(self, capacity: int = 0):
+        cap = max(int(capacity), 16)
+        self.n = 0
+        self.rid = np.empty(cap, np.int64)
+        self.replica = np.empty(cap, np.int32)
+        self.slot = np.empty(cap, np.int32)
+        self.t_arrive = np.empty(cap, np.float64)
+        self.t_admit = np.empty(cap, np.float64)
+        self.t_first = np.empty(cap, np.float64)
+        self.t_done = np.empty(cap, np.float64)
+        self.prompt = np.empty(cap, np.int64)
+        self.output = np.empty(cap, np.int64)
+
+    def _grow(self) -> None:
+        for name in self.__slots__[1:]:
+            col = getattr(self, name)
+            new = np.empty(2 * len(col), col.dtype)
+            new[:self.n] = col[:self.n]
+            setattr(self, name, new)
+
+    def record(self, rid: int, replica: int, slot: int, t_arrive: float,
+               t_admit: float, t_first: float, t_done: float,
+               prompt: int, output: int) -> None:
+        i = self.n
+        if i >= len(self.rid):
+            self._grow()
+        self.rid[i] = rid
+        self.replica[i] = replica
+        self.slot[i] = slot
+        self.t_arrive[i] = t_arrive
+        self.t_admit[i] = t_admit
+        self.t_first[i] = t_first
+        self.t_done[i] = t_done
+        self.prompt[i] = prompt
+        self.output[i] = output
+        self.n = i + 1
+
+    def sort_by_rid(self) -> None:
+        n = self.n
+        order = np.argsort(self.rid[:n], kind="stable")
+        for name in self.__slots__[1:]:
+            col = getattr(self, name)
+            col[:n] = col[:n][order]
+
+    # ---- derived latency populations (vectorized column arithmetic) ----
+
+    def stats(self) -> Tuple["LatencyStats", "LatencyStats",
+                             "LatencyStats", "LatencyStats"]:
+        """(ttft, tpot, e2e, queue_delay) percentile summaries."""
+        n = self.n
+        t_arrive = self.t_arrive[:n]
+        t_first = self.t_first[:n]
+        t_done = self.t_done[:n]
+        out = self.output[:n]
+        mask = out > 1
+        tpot = (t_done[mask] - t_first[mask]) / (out[mask] - 1)
+        return (LatencyStats.of(t_first - t_arrive),
+                LatencyStats.of(tpot),
+                LatencyStats.of(t_done - t_arrive),
+                LatencyStats.of(self.t_admit[:n] - t_arrive))
+
+    def to_request_metrics(self) -> List["RequestMetrics"]:
+        return [RequestMetrics(
+            rid=int(self.rid[i]), replica=int(self.replica[i]),
+            slot=int(self.slot[i]), t_arrive=float(self.t_arrive[i]),
+            t_admit=float(self.t_admit[i]), t_first=float(self.t_first[i]),
+            t_done=float(self.t_done[i]), prompt_tokens=int(self.prompt[i]),
+            output_tokens=int(self.output[i])) for i in range(self.n)]
+
+
+class _LazyRequests(Sequence):
+    """Sequence view over :class:`LaneStateArrays` that materializes
+    :class:`RequestMetrics` rows on first access — reports stay cheap to
+    build and to pickle (only the columns cross process boundaries)."""
+
+    __slots__ = ("_arrays", "_rows")
+
+    def __init__(self, arrays: LaneStateArrays):
+        self._arrays = arrays
+        self._rows: Optional[List[RequestMetrics]] = None
+
+    def _materialize(self) -> List[RequestMetrics]:
+        if self._rows is None:
+            self._rows = self._arrays.to_request_metrics()
+        return self._rows
+
+    def __len__(self) -> int:
+        return self._arrays.n
+
+    def __bool__(self) -> bool:
+        return self._arrays.n > 0
+
+    def __getitem__(self, i):
+        return self._materialize()[i]
+
+    def __iter__(self):
+        return iter(self._materialize())
+
+    def __reduce__(self):
+        return (_LazyRequests, (self._arrays,))
+
+
+#: leap length from which the fused-step accumulation switches to
+#: ``np.add.accumulate`` (same left-to-right addition order as the Python
+#: loop, so the switch is bit-invisible; below this the loop is faster).
+_LEAP_NUMPY_MIN = 16
+
+#: shared step-index cache for the numpy leap path (grown on demand;
+#: read-only views are sliced out, so sharing across simulators is safe)
+_ARANGE = np.arange(1024, dtype=np.int64)
+
+
+def _arange1(k: int) -> np.ndarray:
+    """Cached ``np.arange(1, k)`` view."""
+    global _ARANGE
+    if k > len(_ARANGE):
+        _ARANGE = np.arange(max(k, 2 * len(_ARANGE)), dtype=np.int64)
+    return _ARANGE[1:k]
+
+
+class _LeapScratch:
+    """Reusable buffers for :func:`_leap_spans`' numpy path — one fused
+    decode leap per call makes the per-call ``np.empty``/``np.arange``
+    allocations the hot path's dominant constant; a scratch instance per
+    simulator removes them without touching the arithmetic."""
+
+    __slots__ = ("f", "i")
+
+    def __init__(self):
+        self.f = np.empty(64)
+        self.i = np.empty(64, np.int64)
+
+    def resize(self, k: int) -> None:
+        if len(self.f) < k:
+            n = max(k, 2 * len(self.f))
+            self.f = np.empty(n)
+            self.i = np.empty(n, np.int64)
+
+
+def _leap_spans(now: float, c0: float, base: float, c_d: float,
+                ctx: int, n_dec: int, k: int, speculate: bool,
+                scratch: Optional[_LeapScratch] = None):
+    """Fused decode-leap state advance under the affine cost model.
+
+    Accumulates the exact per-step costs of a ``k``-step leap starting
+    from ``ctx`` cached tokens (``base = decode_fixed +
+    decode_per_token * n`` is the ctx-independent part of one step).
+    Returns ``(total_duration, bounds)`` where ``bounds`` are the
+    absolute per-step boundary times (only when ``speculate`` — they arm
+    the rollback) — bit-identical whether the sequential Python loop or
+    the vectorized ``np.add.accumulate`` path ran (and whether or not a
+    ``scratch`` buffer set is supplied: every elementwise op and the
+    left-to-right accumulation order are unchanged).
+    """
+    if k >= _LEAP_NUMPY_MIN:
+        ar = _arange1(k)
+        if scratch is not None:
+            scratch.resize(k)
+            steps = scratch.f[:k]
+            ints = scratch.i[1:k]
+            np.multiply(ar, n_dec, out=ints)
+            np.add(ints, ctx, out=ints)
+            tail = steps[1:]
+            np.multiply(ints, c_d, out=tail)
+            np.add(tail, base, out=tail)
+            steps[0] = c0
+            cum = np.add.accumulate(steps, out=steps)
+        else:
+            steps = np.empty(k)
+            steps[0] = c0
+            steps[1:] = base + c_d * (ctx + n_dec * ar)
+            cum = np.add.accumulate(steps)
+        return float(cum[-1]), (now + cum if speculate else None)
+    dur = c0
+    if speculate:
+        bounds = [now + c0]
+        for _ in range(k - 1):
+            ctx += n_dec
+            dur += base + c_d * ctx
+            bounds.append(now + dur)
+        return dur, bounds
+    for _ in range(k - 1):
+        ctx += n_dec
+        dur += base + c_d * ctx
+    return dur, None
+
+
 @dataclass
 class ServingReport:
     """End-to-end serving estimate for one (system, scheduler, traffic)."""
@@ -114,7 +328,9 @@ class ServingReport:
     e2e: LatencyStats
     queue_delay: LatencyStats
     replica_util: float                # mean busy fraction across replicas
-    requests: List[RequestMetrics] = field(default_factory=list)
+    #: per-request rows; a list, or a :class:`_LazyRequests` view that
+    #: materializes :class:`RequestMetrics` on first access
+    requests: Sequence[RequestMetrics] = field(default_factory=list)
     sim_result: Optional[SimResult] = None
     events: List[Tuple] = field(default_factory=list)
 
@@ -188,7 +404,11 @@ class ServingSimulator:
         self.phase_tasks = int(phase_tasks)
         self.events: List[Tuple] = []
         self.pending: deque = deque()
-        self.metrics: List[RequestMetrics] = []
+        try:
+            cap = int(workload.n_requests)
+        except Exception:
+            cap = 0
+        self.lane_state = LaneStateArrays(capacity=cap)
         self._lanes: List = []
         self._templates: Optional[Dict[Tuple[int, str], GraphTemplate]] = None
         self._tail_handlers: Dict[int, Callable[[float], None]] = {}
@@ -224,6 +444,7 @@ class ServingSimulator:
             [None] * replicas
         self._total_out_tokens = 0
         self._wait_until: Dict[int, float] = {}   # replica -> armed wake-up
+        self._leap_scratch = _LeapScratch()
 
     @staticmethod
     def _res(r: int) -> str:
@@ -450,26 +671,25 @@ class ServingSimulator:
         affine = (type(cost).decode_step_time
                   is ServingCostModel.decode_step_time)
         if affine:
-            f_d = cost.decode_fixed
-            p_n = cost.decode_per_token * n
+            base = cost.decode_fixed + cost.decode_per_token * n
             c_d = cost.decode_per_ctx_token
-            c0 = f_d + p_n + c_d * ctx
+            c0 = base + c_d * ctx
+            dur, bounds = _leap_spans(now, c0, base, c_d, ctx, n_dec, k,
+                                      speculate, self._leap_scratch)
         else:
             c0 = cost.decode_step_time(n, ctx)
-        dur = c0
-        bounds: Optional[List[float]] = None
-        if speculate:
-            bounds = [now + c0]
-            for _ in range(k - 1):
-                ctx += n_dec
-                dur += (f_d + p_n + c_d * ctx if affine
-                        else cost.decode_step_time(n, ctx))
-                bounds.append(now + dur)
-        else:
-            for _ in range(k - 1):
-                ctx += n_dec
-                dur += (f_d + p_n + c_d * ctx if affine
-                        else cost.decode_step_time(n, ctx))
+            dur = c0
+            bounds = None
+            if speculate:
+                bounds = [now + c0]
+                for _ in range(k - 1):
+                    ctx += n_dec
+                    dur += cost.decode_step_time(n, ctx)
+                    bounds.append(now + dur)
+            else:
+                for _ in range(k - 1):
+                    ctx += n_dec
+                    dur += cost.decode_step_time(n, ctx)
         if self.record_events:
             self.events.append(
                 ("step", tuple(sorted(f.req.rid for f in replica.active
@@ -521,12 +741,10 @@ class ServingSimulator:
         for fl in finished:
             if self.record_events:
                 self.events.append(("finish", fl.req.rid))
-            self.metrics.append(RequestMetrics(
-                rid=fl.req.rid, replica=replica.index, slot=fl.slot,
-                t_arrive=fl.req.t_arrive, t_admit=fl.t_admit,
-                t_first=fl.t_first, t_done=now,
-                prompt_tokens=fl.req.prompt_tokens,
-                output_tokens=fl.req.output_tokens))
+            self.lane_state.record(
+                fl.req.rid, replica.index, fl.slot, fl.req.t_arrive,
+                fl.t_admit, fl.t_first, now, fl.req.prompt_tokens,
+                fl.req.output_tokens)
             follow = self.workload.on_complete(fl.req, now)
             if follow is not None:
                 self._schedule_arrival(follow)
@@ -547,23 +765,20 @@ class ServingSimulator:
                 for r in self.replicas
             ) / (len(self.replicas) * sim_result.makespan)
 
-        self.metrics.sort(key=lambda m: m.rid)
+        ls = self.lane_state
+        ls.sort_by_rid()
+        ttft, tpot, e2e, queue_delay = ls.stats()
         return ServingReport(
             workload=self.workload.name,
             scheduler=self.schedulers[0].name,
             cost_model=self.cost.name,
             replicas=len(self.replicas), slots=self.slots,
-            n_requests=len(self.metrics),
+            n_requests=ls.n,
             duration=sim_result.makespan,
             output_tokens=self._total_out_tokens,
-            ttft=LatencyStats.of([m.ttft for m in self.metrics]),
-            tpot=LatencyStats.of([m.tpot for m in self.metrics
-                                  if m.output_tokens > 1]),
-            e2e=LatencyStats.of([m.e2e for m in self.metrics]),
-            queue_delay=LatencyStats.of([m.queue_delay
-                                         for m in self.metrics]),
+            ttft=ttft, tpot=tpot, e2e=e2e, queue_delay=queue_delay,
             replica_util=util,
-            requests=self.metrics,
+            requests=_LazyRequests(ls),
             sim_result=sim_result,
             events=self.events)
 

@@ -23,6 +23,13 @@ arrival rate adapts to system speed, as in interactive serving.
 Everything is driven by a seeded ``numpy`` generator: the same seed
 reproduces the same trace bit-for-bit, which the capacity planner relies
 on when comparing configurations.
+
+Each open-loop generator has a seed-batched twin
+(:func:`poisson_workload_batch`, :func:`bursty_workload_batch`,
+:func:`trace_workload_batch`) returning a :class:`RequestBatch` — ``(K, N)``
+arrival/length arrays whose rows are bit-identical to the scalar traces
+for the same seeds, generated without building ``Request`` objects.  The
+Monte-Carlo serving simulator consumes these directly.
 """
 from __future__ import annotations
 
@@ -144,36 +151,86 @@ def _make_requests(times: np.ndarray, prompt: LengthDist, output: LengthDist,
             for i in range(n)]
 
 
-def poisson_workload(rate: float, n_requests: int,
-                     prompt: LengthDist = LengthDist(mean=512),
-                     output: LengthDist = LengthDist(mean=128),
-                     seed: int = 0) -> OpenLoopWorkload:
-    """Open-loop Poisson arrivals at ``rate`` requests/second."""
-    if rate <= 0:
-        raise ValueError("rate must be > 0")
-    rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / rate, size=n_requests)
-    times = np.cumsum(gaps)
-    wl = OpenLoopWorkload(_make_requests(times, prompt, output, rng))
-    wl.name = f"poisson@{rate:g}rps"
-    return wl
+# ---- seed-batched traces (Monte-Carlo serving) ----------------------------
 
 
-def bursty_workload(rate_low: float, rate_high: float, n_requests: int,
-                    mean_dwell: float = 10.0,
-                    prompt: LengthDist = LengthDist(mean=512),
-                    output: LengthDist = LengthDist(mean=128),
-                    seed: int = 0) -> OpenLoopWorkload:
-    """Two-state MMPP: Poisson at ``rate_low`` / ``rate_high``, switching
-    state after exponential dwell times with mean ``mean_dwell`` seconds."""
-    if min(rate_low, rate_high) <= 0:
-        raise ValueError("rates must be > 0")
-    rng = np.random.default_rng(seed)
-    times = np.empty(n_requests)
+@dataclass(frozen=True)
+class RequestBatch:
+    """``num_seeds`` pre-generated open-loop traces as ``(K, N)`` arrays.
+
+    The array form is what the seed-batched
+    :class:`~repro.serve_sim.monte_carlo.MonteCarloServingSimulator`
+    consumes: no per-request :class:`Request` objects are built on the
+    generation path (that object churn dominates scalar workload cost at
+    Monte-Carlo scale).  Row ``k`` is bit-identical to the trace the
+    matching scalar generator produces for ``seeds[k]`` — the parity
+    contract ``tests/test_monte_carlo.py`` enforces — because both paths
+    draw from the same seeded generator in the same order.
+    """
+
+    t_arrive: np.ndarray        # (K, N) float64, non-decreasing per row
+    prompt: np.ndarray          # (K, N) int64
+    output: np.ndarray          # (K, N) int64
+    seeds: Tuple[int, ...]
+    name: str = "batch"
+
+    def __post_init__(self):
+        shape = self.t_arrive.shape
+        if (len(shape) != 2 or self.prompt.shape != shape
+                or self.output.shape != shape):
+            raise ValueError("t_arrive/prompt/output must share one "
+                             "(num_seeds, n_requests) shape")
+        if len(self.seeds) != shape[0]:
+            raise ValueError(f"{len(self.seeds)} seeds for {shape[0]} rows")
+
+    @property
+    def num_seeds(self) -> int:
+        return self.t_arrive.shape[0]
+
+    @property
+    def n_requests(self) -> int:
+        return self.t_arrive.shape[1]
+
+    def rows(self, lo: int, hi: int) -> "RequestBatch":
+        """Seed-slice view ``[lo, hi)`` — shares the underlying arrays;
+        used to fan a batch out over pool workers seed-chunk-wise."""
+        return RequestBatch(t_arrive=self.t_arrive[lo:hi],
+                            prompt=self.prompt[lo:hi],
+                            output=self.output[lo:hi],
+                            seeds=self.seeds[lo:hi], name=self.name)
+
+    def workload(self, k: int) -> OpenLoopWorkload:
+        """Materialize row ``k`` as a scalar workload (the fallback path
+        of the Monte-Carlo simulator, and the parity reference)."""
+        t, p, o = self.t_arrive[k], self.prompt[k], self.output[k]
+        reqs = [Request(rid=i, t_arrive=float(t[i]), prompt_tokens=int(p[i]),
+                        output_tokens=int(o[i]))
+                for i in range(self.n_requests)]
+        wl = OpenLoopWorkload(reqs)
+        wl.name = f"{self.name}/seed{self.seeds[k]}"
+        return wl
+
+
+def _seed_tuple(seeds) -> Tuple[int, ...]:
+    """``K`` (an int) means seeds ``0..K-1``; otherwise an explicit list."""
+    if isinstance(seeds, (int, np.integer)):
+        return tuple(range(int(seeds)))
+    return tuple(int(s) for s in seeds)
+
+
+def _poisson_times(rng: np.random.Generator, rate: float,
+                   n: int) -> np.ndarray:
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return np.cumsum(gaps)
+
+
+def _bursty_times(rng: np.random.Generator, rate_low: float,
+                  rate_high: float, n: int, mean_dwell: float) -> np.ndarray:
+    times = np.empty(n)
     t = 0.0
     hi = False
     t_switch = rng.exponential(mean_dwell)
-    for i in range(n_requests):
+    for i in range(n):
         rate = rate_high if hi else rate_low
         gap = rng.exponential(1.0 / rate)
         while t + gap > t_switch:
@@ -186,9 +243,89 @@ def bursty_workload(rate_low: float, rate_high: float, n_requests: int,
             t_switch += rng.exponential(mean_dwell)
         t += gap
         times[i] = t
+    return times
+
+
+def _batch_rows(times_fn, n: int, prompt: LengthDist, output: LengthDist,
+                seeds: Tuple[int, ...], name: str) -> RequestBatch:
+    """Stack per-seed array generation into a :class:`RequestBatch`.
+
+    Each row replays the scalar generator's exact draw order (arrival
+    times, then prompts, then outputs, from ``default_rng(seed)``), so
+    rows are bit-identical to the scalar traces; the batching win is
+    skipping ``Request`` materialization, not reordering the RNG stream.
+    """
+    k = len(seeds)
+    t_arrive = np.empty((k, n))
+    prompts = np.empty((k, n), np.int64)
+    outputs = np.empty((k, n), np.int64)
+    for row, seed in enumerate(seeds):
+        rng = np.random.default_rng(seed)
+        t_arrive[row] = times_fn(rng)
+        prompts[row] = prompt.sample(rng, n)
+        outputs[row] = output.sample(rng, n)
+    return RequestBatch(t_arrive=t_arrive, prompt=prompts, output=outputs,
+                        seeds=seeds, name=name)
+
+
+def poisson_workload(rate: float, n_requests: int,
+                     prompt: LengthDist = LengthDist(mean=512),
+                     output: LengthDist = LengthDist(mean=128),
+                     seed: int = 0) -> OpenLoopWorkload:
+    """Open-loop Poisson arrivals at ``rate`` requests/second."""
+    if rate <= 0:
+        raise ValueError("rate must be > 0")
+    rng = np.random.default_rng(seed)
+    times = _poisson_times(rng, rate, n_requests)
+    wl = OpenLoopWorkload(_make_requests(times, prompt, output, rng))
+    wl.name = f"poisson@{rate:g}rps"
+    return wl
+
+
+def poisson_workload_batch(rate: float, n_requests: int,
+                           prompt: LengthDist = LengthDist(mean=512),
+                           output: LengthDist = LengthDist(mean=128),
+                           seeds=1) -> RequestBatch:
+    """Seed-batched :func:`poisson_workload`: one bit-identical trace row
+    per seed (``seeds`` is an int ``K`` for seeds ``0..K-1``, or an
+    explicit sequence)."""
+    if rate <= 0:
+        raise ValueError("rate must be > 0")
+    return _batch_rows(lambda rng: _poisson_times(rng, rate, n_requests),
+                       n_requests, prompt, output, _seed_tuple(seeds),
+                       f"poisson@{rate:g}rps")
+
+
+def bursty_workload(rate_low: float, rate_high: float, n_requests: int,
+                    mean_dwell: float = 10.0,
+                    prompt: LengthDist = LengthDist(mean=512),
+                    output: LengthDist = LengthDist(mean=128),
+                    seed: int = 0) -> OpenLoopWorkload:
+    """Two-state MMPP: Poisson at ``rate_low`` / ``rate_high``, switching
+    state after exponential dwell times with mean ``mean_dwell`` seconds."""
+    if min(rate_low, rate_high) <= 0:
+        raise ValueError("rates must be > 0")
+    rng = np.random.default_rng(seed)
+    times = _bursty_times(rng, rate_low, rate_high, n_requests, mean_dwell)
     wl = OpenLoopWorkload(_make_requests(times, prompt, output, rng))
     wl.name = f"bursty@{rate_low:g}/{rate_high:g}rps"
     return wl
+
+
+def bursty_workload_batch(rate_low: float, rate_high: float, n_requests: int,
+                          mean_dwell: float = 10.0,
+                          prompt: LengthDist = LengthDist(mean=512),
+                          output: LengthDist = LengthDist(mean=128),
+                          seeds=1) -> RequestBatch:
+    """Seed-batched :func:`bursty_workload` (same per-row bit-parity
+    contract as :func:`poisson_workload_batch`)."""
+    if min(rate_low, rate_high) <= 0:
+        raise ValueError("rates must be > 0")
+    return _batch_rows(
+        lambda rng: _bursty_times(rng, rate_low, rate_high, n_requests,
+                                  mean_dwell),
+        n_requests, prompt, output, _seed_tuple(seeds),
+        f"bursty@{rate_low:g}/{rate_high:g}rps")
 
 
 def trace_workload(trace: Iterable[Tuple[float, int, int]],
@@ -202,6 +339,24 @@ def trace_workload(trace: Iterable[Tuple[float, int, int]],
     wl = OpenLoopWorkload(reqs)
     wl.name = name
     return wl
+
+
+def trace_workload_batch(trace: Iterable[Tuple[float, int, int]],
+                         seeds=1, name: str = "trace") -> RequestBatch:
+    """Seed-batched :func:`trace_workload`: the replay is deterministic,
+    so every row is the same sorted trace (seeds only label the rows —
+    useful to mix trace replay into a seeded Monte-Carlo sweep)."""
+    rows = sorted(trace, key=lambda r: r[0])
+    seeds_t = _seed_tuple(seeds)
+    k, n = len(seeds_t), len(rows)
+    t = np.array([r[0] for r in rows], dtype=np.float64)
+    p = np.array([int(r[1]) for r in rows], dtype=np.int64)
+    o = np.array([int(r[2]) for r in rows], dtype=np.int64)
+    return RequestBatch(
+        t_arrive=np.broadcast_to(t, (k, n)).copy(),
+        prompt=np.broadcast_to(p, (k, n)).copy(),
+        output=np.broadcast_to(o, (k, n)).copy(),
+        seeds=seeds_t, name=name)
 
 
 @dataclass

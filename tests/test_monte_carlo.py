@@ -1,0 +1,409 @@
+"""Seed-batched Monte-Carlo serving: golden bit-parity with the scalar
+simulator, batched workload generation parity, cross-seed statistics, and
+the DSE / capacity-planner ``num_seeds`` integration (PR 6).
+
+The central contract: ``MonteCarloServingSimulator`` with ``num_seeds=K``
+is **bit-identical** to ``K`` scalar ``ServingSimulator`` runs over the
+same traces — for the specialized continuous-batching fast loop and for
+the scalar-fallback path alike.  Every numeric assertion here is ``==``,
+not ``approx``.
+"""
+import functools
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.parallel import close_pools
+from repro.serve_sim import (SLO, CapacityPlanner, ContinuousBatchingScheduler,
+                             LengthDist, MonteCarloServingSimulator,
+                             RequestBatch, SeedStats, ServingCostModel,
+                             ServingSimulator, StaticBatchScheduler,
+                             bursty_workload, bursty_workload_batch,
+                             monte_carlo_serving, poisson_workload,
+                             poisson_workload_batch, trace_workload,
+                             trace_workload_batch)
+
+TOY = ServingCostModel(name="toy", prefill_fixed=1e-3, prefill_per_token=2e-5,
+                       decode_fixed=2e-3, decode_per_token=5e-4,
+                       decode_per_ctx_token=1e-7)
+PROMPT = LengthDist(mean=128, cv=0.5)
+OUTPUT = LengthDist(mean=32, cv=0.5)
+
+
+def _assert_report_identical(mc_rep, scalar_rep):
+    assert mc_rep.duration == scalar_rep.duration
+    assert mc_rep.n_requests == scalar_rep.n_requests
+    assert mc_rep.output_tokens == scalar_rep.output_tokens
+    assert mc_rep.replica_util == scalar_rep.replica_util
+    assert mc_rep.workload == scalar_rep.workload
+    for metric in ("ttft", "tpot", "e2e", "queue_delay"):
+        a = getattr(mc_rep, metric)
+        b = getattr(scalar_rep, metric)
+        for stat in ("mean", "p50", "p95", "p99"):
+            assert getattr(a, stat) == getattr(b, stat), (metric, stat)
+    rows_a, rows_b = list(mc_rep.requests), list(scalar_rep.requests)
+    assert len(rows_a) == len(rows_b)
+    for x, y in zip(rows_a, rows_b):
+        assert x == y
+
+
+def _assert_mc_matches_scalar_loop(batch, scheduler_factory, replicas, slots):
+    mc = MonteCarloServingSimulator(TOY, scheduler_factory, batch,
+                                    replicas=replicas, slots=slots)
+    rep = mc.run()
+    assert rep.num_seeds == batch.num_seeds
+    for k in range(batch.num_seeds):
+        scalar = ServingSimulator(TOY, scheduler_factory, batch.workload(k),
+                                  replicas=replicas, slots=slots).run()
+        _assert_report_identical(rep.reports[k], scalar)
+    return mc, rep
+
+
+# ---------------------------------------------------------------------------
+# golden parity: fast continuous loop and scalar fallback
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("replicas,slots,batch_fn", [
+    (1, 1, lambda: bursty_workload_batch(6.0, 30.0, 150, prompt=PROMPT,
+                                         output=OUTPUT, seeds=3)),
+    (3, 4, lambda: poisson_workload_batch(40.0, 250, prompt=PROMPT,
+                                          output=OUTPUT, seeds=3)),
+    (2, 3, lambda: bursty_workload_batch(20.0, 90.0, 300, prompt=PROMPT,
+                                         output=OUTPUT, seeds=3)),
+    (2, 16, lambda: poisson_workload_batch(120.0, 400, prompt=PROMPT,
+                                           output=OUTPUT, seeds=2)),
+])
+def test_continuous_fast_path_bit_parity(replicas, slots, batch_fn):
+    """decode_stable scheduler: the specialized array/counter loop must be
+    bit-identical to a per-seed scalar simulator loop."""
+    mc, _ = _assert_mc_matches_scalar_loop(
+        batch_fn(), ContinuousBatchingScheduler, replicas, slots)
+    assert mc.fast_path
+
+
+def test_static_scheduler_fallback_bit_parity():
+    """Non-decode_stable scheduler (StaticBatchScheduler holds finished
+    requests): Monte-Carlo must dispatch to the scalar fallback and stay
+    bit-identical."""
+    batch = poisson_workload_batch(30.0, 150, prompt=PROMPT, output=OUTPUT,
+                                   seeds=3)
+    mc, _ = _assert_mc_matches_scalar_loop(
+        batch, functools.partial(StaticBatchScheduler, 4, 0.1), 2, 4)
+    assert not mc.fast_path
+
+
+def test_zero_prompt_and_tiny_traces_parity():
+    trace = [(0.0, 0, 3), (0.0, 5, 1), (0.5, 2, 4), (0.5, 0, 2)]
+    batch = trace_workload_batch(trace, seeds=2)
+    mc, _ = _assert_mc_matches_scalar_loop(
+        batch, ContinuousBatchingScheduler, 1, 2)
+    assert mc.fast_path
+
+
+def test_fast_path_gates():
+    batch = poisson_workload_batch(30.0, 50, prompt=PROMPT, output=OUTPUT,
+                                   seeds=2)
+
+    class TweakedCost(ServingCostModel):
+        def decode_step_time(self, batch_size, ctx_tokens):
+            return 1e-3 * batch_size
+
+    class TweakedSched(ContinuousBatchingScheduler):
+        pass
+
+    assert MonteCarloServingSimulator(
+        TOY, ContinuousBatchingScheduler, batch).fast_path
+    # overridden cost methods and scheduler subclasses must fall back
+    assert not MonteCarloServingSimulator(
+        TweakedCost(name="t"), ContinuousBatchingScheduler, batch).fast_path
+    assert not MonteCarloServingSimulator(
+        TOY, TweakedSched, batch).fast_path
+    # unsorted arrivals must fall back (scalar loop assumes sorted scan)
+    shuffled = RequestBatch(
+        t_arrive=batch.t_arrive[:, ::-1].copy(), prompt=batch.prompt.copy(),
+        output=batch.output.copy(), seeds=batch.seeds, name="shuffled")
+    assert not MonteCarloServingSimulator(
+        TOY, ContinuousBatchingScheduler, shuffled).fast_path
+
+
+def test_fallback_equals_fast_path_results():
+    """Forcing the eligible config down the fallback path changes nothing:
+    the two implementations are interchangeable."""
+    batch = poisson_workload_batch(40.0, 200, prompt=PROMPT, output=OUTPUT,
+                                   seeds=2)
+    fast = MonteCarloServingSimulator(TOY, ContinuousBatchingScheduler,
+                                      batch, replicas=2, slots=4)
+    assert fast.fast_path
+    slow = MonteCarloServingSimulator(TOY, ContinuousBatchingScheduler,
+                                      batch, replicas=2, slots=4)
+    slow.fast_path = False
+    a, b = fast.run(), slow.run()
+    for ra, rb in zip(a.reports, b.reports):
+        _assert_report_identical(ra, rb)
+    assert a.stats == b.stats
+
+
+# ---------------------------------------------------------------------------
+# batched workload generation: bit-identical to per-seed scalar generation
+# ---------------------------------------------------------------------------
+
+
+def _assert_rows_match_scalar(batch, scalar_fn, seeds):
+    for row, seed in enumerate(seeds):
+        wl = scalar_fn(seed)
+        reqs = wl.requests if hasattr(wl, "requests") else list(wl)
+        assert len(reqs) == batch.n_requests
+        for i, r in enumerate(reqs):
+            assert batch.t_arrive[row, i] == r.t_arrive
+            assert batch.prompt[row, i] == r.prompt_tokens
+            assert batch.output[row, i] == r.output_tokens
+
+
+@pytest.mark.parametrize("seeds", [(0, 1, 2), (7, 11, 0)])
+def test_poisson_batch_rows_bit_identical(seeds):
+    batch = poisson_workload_batch(12.5, 200, prompt=PROMPT, output=OUTPUT,
+                                   seeds=seeds)
+    _assert_rows_match_scalar(
+        batch,
+        lambda s: poisson_workload(12.5, 200, prompt=PROMPT, output=OUTPUT,
+                                   seed=s),
+        seeds)
+
+
+@pytest.mark.parametrize("seeds", [(0, 1, 2), (5, 3)])
+def test_bursty_batch_rows_bit_identical(seeds):
+    batch = bursty_workload_batch(4.0, 33.0, 180, mean_dwell=2.5,
+                                  prompt=PROMPT, output=OUTPUT, seeds=seeds)
+    _assert_rows_match_scalar(
+        batch,
+        lambda s: bursty_workload(4.0, 33.0, 180, mean_dwell=2.5,
+                                  prompt=PROMPT, output=OUTPUT, seed=s),
+        seeds)
+
+
+def test_trace_batch_rows_bit_identical():
+    trace = [(3.0, 10, 5), (1.0, 7, 2), (2.0, 4, 9)]
+    batch = trace_workload_batch(trace, seeds=2)
+    wl = trace_workload(trace)
+    for row in range(2):
+        for i, r in enumerate(wl.requests):
+            assert batch.t_arrive[row, i] == r.t_arrive
+            assert batch.prompt[row, i] == r.prompt_tokens
+            assert batch.output[row, i] == r.output_tokens
+
+
+@settings(max_examples=20, deadline=None)
+@given(rate=st.floats(0.5, 200.0), n=st.integers(1, 80),
+       seed=st.integers(0, 2**20))
+def test_poisson_batch_property_bit_identical(rate, n, seed):
+    batch = poisson_workload_batch(rate, n, prompt=PROMPT, output=OUTPUT,
+                                   seeds=(seed,))
+    _assert_rows_match_scalar(
+        batch,
+        lambda s: poisson_workload(rate, n, prompt=PROMPT, output=OUTPUT,
+                                   seed=s),
+        (seed,))
+
+
+def test_batch_workload_row_names_and_seeds():
+    batch = poisson_workload_batch(10.0, 20, seeds=(4, 9))
+    assert batch.workload(1).name == f"{batch.name}/seed9"
+    mc = MonteCarloServingSimulator(TOY, ContinuousBatchingScheduler, batch)
+    rep = mc.run()
+    assert rep.seeds == (4, 9)
+    assert rep.reports[0].workload.endswith("/seed4")
+
+
+def test_batch_rows_slice():
+    batch = poisson_workload_batch(10.0, 30, seeds=5)
+    part = batch.rows(1, 4)
+    assert part.num_seeds == 3 and part.seeds == (1, 2, 3)
+    assert np.array_equal(part.t_arrive, batch.t_arrive[1:4])
+    # a view, not a copy
+    assert part.prompt.base is batch.prompt
+
+
+def test_batch_shape_validation():
+    with pytest.raises(ValueError):
+        RequestBatch(t_arrive=np.zeros((2, 3)), prompt=np.zeros((2, 4)),
+                     output=np.zeros((2, 3)), seeds=(0, 1))
+    with pytest.raises(ValueError):
+        RequestBatch(t_arrive=np.zeros((2, 3)), prompt=np.zeros((2, 3)),
+                     output=np.zeros((2, 3)), seeds=(0,))
+
+
+# ---------------------------------------------------------------------------
+# cross-seed statistics
+# ---------------------------------------------------------------------------
+
+
+def test_seed_stats_edge_cases():
+    empty = SeedStats.of([])
+    assert empty.n == 0 and empty.mean == 0.0
+    one = SeedStats.of([2.5])
+    assert (one.n, one.mean, one.std) == (1, 2.5, 0.0)
+    assert one.ci_lo == one.ci_hi == 2.5       # no spread estimate with K=1
+    s = SeedStats.of([1.0, 2.0, 3.0, 4.0])
+    assert s.mean == 2.5
+    assert s.std == pytest.approx(np.std([1, 2, 3, 4], ddof=1))
+    assert s.ci_lo < s.mean < s.ci_hi
+    assert s.half_width == pytest.approx(1.96 * s.std / 2.0)
+
+
+def test_report_stats_match_per_seed_values():
+    batch = poisson_workload_batch(40.0, 200, prompt=PROMPT, output=OUTPUT,
+                                   seeds=4)
+    rep = monte_carlo_serving(TOY, ContinuousBatchingScheduler, batch,
+                              replicas=2, slots=4)
+    assert rep.stat("ttft_p99").values == tuple(
+        r.ttft.p99 for r in rep.reports)
+    assert rep.stat("throughput_rps").values == tuple(
+        r.throughput_rps for r in rep.reports)
+    assert rep.n_requests == 4 * 200
+    assert "± " in rep.summary()
+
+
+def test_ci_shrinks_with_more_seeds():
+    """The law-of-large-numbers sanity check behind the README example:
+    quadrupling the seed count should roughly halve the CI."""
+    def half_width(k):
+        batch = poisson_workload_batch(40.0, 150, prompt=PROMPT,
+                                       output=OUTPUT, seeds=k)
+        rep = monte_carlo_serving(TOY, ContinuousBatchingScheduler, batch,
+                                  replicas=2, slots=4)
+        return rep.ttft_p99.half_width
+
+    assert half_width(32) < half_width(4)
+
+
+def test_attainment_fraction():
+    batch = poisson_workload_batch(40.0, 150, prompt=PROMPT, output=OUTPUT,
+                                   seeds=4)
+    rep = monte_carlo_serving(TOY, ContinuousBatchingScheduler, batch,
+                              replicas=2, slots=4)
+    assert rep.attainment(SLO()) == 1.0               # unconstrained
+    assert rep.attainment(SLO(ttft_p99=-1.0)) == 0.0  # unattainable
+    mid = sorted(r.ttft.p99 for r in rep.reports)[1]
+    frac = rep.attainment(SLO(ttft_p99=mid))
+    assert frac == 2 / 4
+
+
+# ---------------------------------------------------------------------------
+# DSE sweep + capacity planner integration
+# ---------------------------------------------------------------------------
+
+
+class _FixedBuilder:
+    def model_for(self, system):
+        scale = 819e9 / system.chip.memory.bandwidth
+        return ServingCostModel(
+            name=system.name, decode_fixed=2e-3 * scale,
+            decode_per_token=5e-4 * scale, prefill_per_token=2e-5)
+
+
+def _toy_dse():
+    from repro.core.dse import DesignSpaceExplorer
+    from repro.core.hw import SystemDescription, tpu_v5e_chip
+    from repro.core.taskgraph.ops import matmul_op
+
+    base = SystemDescription(name="chip", chip=tpu_v5e_chip(), torus=())
+    dse = DesignSpaceExplorer({"w": [matmul_op("m", "m", 64, 64, 64)]})
+    return dse, {"base": base}
+
+
+def test_sweep_serving_num_seeds_matches_direct_mc():
+    dse, systems = _toy_dse()
+    traffic = functools.partial(poisson_workload_batch, 25.0, 150,
+                                prompt=PROMPT, output=OUTPUT, seeds=4)
+    results = dse.sweep_serving(
+        systems, traffics={"poisson": traffic},
+        schedulers={"continuous": ContinuousBatchingScheduler},
+        cost_builder=_FixedBuilder(), replicas=1, slots=4, num_seeds=4)
+    assert len(results) == 1
+    mc = results[0].report
+    direct = monte_carlo_serving(_FixedBuilder().model_for(systems["base"]),
+                                 ContinuousBatchingScheduler, traffic(),
+                                 replicas=1, slots=4)
+    assert mc.stats == direct.stats
+    assert results[0].ttft_p99 == direct.stat("ttft_p99").mean
+
+
+def test_sweep_serving_num_seeds_pool_matches_serial():
+    dse, systems = _toy_dse()
+    traffics = {"poisson": functools.partial(
+        poisson_workload_batch, 25.0, 150, prompt=PROMPT, output=OUTPUT,
+        seeds=5)}
+    schedulers = {"continuous": ContinuousBatchingScheduler,
+                  "static": functools.partial(StaticBatchScheduler, 4, 0.1)}
+    kw = dict(cost_builder=_FixedBuilder(), replicas=1, slots=4, num_seeds=5)
+    try:
+        serial = dse.sweep_serving(systems, traffics, schedulers, **kw)
+        pooled = dse.sweep_serving(systems, traffics, schedulers,
+                                   workers=2, **kw)
+    finally:
+        close_pools()
+    assert [(r.traffic, r.scheduler) for r in serial] == \
+           [(r.traffic, r.scheduler) for r in pooled]
+    for a, b in zip(serial, pooled):
+        assert a.report.stats == b.report.stats
+        assert a.report.seeds == b.report.seeds
+        for ra, rb in zip(a.report.reports, b.report.reports):
+            assert ra.duration == rb.duration
+            assert list(ra.requests) == list(rb.requests)
+
+
+def test_sweep_serving_num_seeds_validates_factories():
+    dse, systems = _toy_dse()
+    with pytest.raises(TypeError):
+        dse.sweep_serving(
+            systems,
+            traffics={"poisson": functools.partial(
+                poisson_workload, 25.0, 50, prompt=PROMPT, output=OUTPUT)},
+            schedulers={"continuous": ContinuousBatchingScheduler},
+            cost_builder=_FixedBuilder(), num_seeds=3)
+    with pytest.raises(ValueError):
+        dse.sweep_serving(
+            systems,
+            traffics={"poisson": functools.partial(
+                poisson_workload_batch, 25.0, 50, prompt=PROMPT,
+                output=OUTPUT, seeds=2)},
+            schedulers={"continuous": ContinuousBatchingScheduler},
+            cost_builder=_FixedBuilder(), num_seeds=3)
+
+
+def test_capacity_planner_ci_conservative():
+    batch_fn = functools.partial(poisson_workload_batch, 30.0, 200,
+                                 prompt=PROMPT, output=OUTPUT, seeds=8)
+    rep = monte_carlo_serving(TOY, ContinuousBatchingScheduler, batch_fn(),
+                              replicas=1, slots=8)
+    stat = rep.stat("ttft_p99")
+    assert stat.ci_lo < stat.mean < stat.ci_hi
+    # a target between the mean and the upper CI bound: a single mean-level
+    # draw would pass, the CI-conservative planner must NOT
+    target = (stat.mean + stat.ci_hi) / 2.0
+    slo = SLO(ttft_p99=target)
+    assert not slo.satisfied_by_ci(rep)
+    planner = CapacityPlanner(TOY, ContinuousBatchingScheduler, batch_fn,
+                              slo, num_seeds=8)
+    plan = planner.plan(axis="replicas", lo=1, cap=4, slots=8)
+    assert 1 not in plan.probes or not plan.probes[1]
+    if plan.feasible:        # whatever won must satisfy the CI check
+        assert slo.satisfied_by_ci(plan.report)
+    # a comfortably loose target is feasible at one replica
+    loose = CapacityPlanner(TOY, ContinuousBatchingScheduler, batch_fn,
+                            SLO(ttft_p99=stat.ci_hi * 10), num_seeds=8)
+    plan2 = loose.plan(axis="replicas", lo=1, cap=4, slots=8)
+    assert plan2.feasible and plan2.value == 1
+    assert plan2.report.num_seeds == 8
+
+
+def test_capacity_planner_num_seeds_validates_factory():
+    planner = CapacityPlanner(
+        TOY, ContinuousBatchingScheduler,
+        functools.partial(poisson_workload, 30.0, 50, prompt=PROMPT,
+                          output=OUTPUT),
+        SLO(ttft_p99=1.0), num_seeds=4)
+    with pytest.raises(TypeError):
+        planner.plan(cap=2)

@@ -158,3 +158,75 @@ def test_explicit_close_and_respawn():
 def test_pool_rejects_single_worker():
     with pytest.raises(ValueError):
         WorkerPool(1)
+
+
+# module-level work functions for the shared-memory shipping tests
+def _big_array(x):
+    import numpy as np
+
+    return np.full(200_000, float(x))          # ~1.6 MB pickled
+
+
+def _big_blob(x):
+    return bytes([x % 251]) * (1 << 20)
+
+
+def test_large_results_ship_via_shm_and_match_serial():
+    """Results above the shared-memory threshold arrive intact and in
+    order, and no /dev/shm files are left behind."""
+    import numpy as np
+
+    before = {f for f in os.listdir("/dev/shm")
+              if f.startswith("repro-pool-")} if os.path.isdir("/dev/shm") \
+        else set()
+    out = parallel_map(_big_array, list(range(6)), workers=2)
+    assert len(out) == 6
+    for x, arr in enumerate(out):
+        assert isinstance(arr, np.ndarray) and len(arr) == 200_000
+        assert arr[0] == float(x) and arr[-1] == float(x)
+    out2 = parallel_map(_big_blob, [3, 4], workers=2)
+    assert out2 == [_big_blob(3), _big_blob(4)]
+    if os.path.isdir("/dev/shm"):
+        after = {f for f in os.listdir("/dev/shm")
+                 if f.startswith("repro-pool-")}
+        assert after <= before                 # every shipped file unlinked
+
+
+def test_shm_ship_load_roundtrip_small_and_large():
+    import io
+
+    buf = io.BytesIO()
+    par._ship_result(("ok", 0, "tiny"), buf)
+    buf.seek(0)
+    assert par._load_result(buf) == ("ok", 0, "tiny")
+    buf = io.BytesIO()
+    par._ship_result(("ok", 1, b"x" * (1 << 20)), buf)
+    buf.seek(0)
+    tag, idx, val = par._load_result(buf)
+    assert (tag, idx) == ("ok", 1) and val == b"x" * (1 << 20)
+
+
+def test_pools_evict_lru():
+    """At most _MAX_POOLS persistent pools stay alive; older worker
+    counts are closed and their processes reaped."""
+    parallel_map(_sq, [1, 2, 3], workers=2)
+    p2 = get_pool(2)
+    pids2 = list(p2.pids)
+    get_pool(3)
+    assert sorted(par._POOLS) == [2, 3]
+    get_pool(4)                                # evicts the LRU pool (2)
+    assert 2 not in par._POOLS
+    assert len(par._POOLS) <= par._MAX_POOLS
+    for pid in pids2:                          # its workers are gone
+        with pytest.raises(OSError):
+            os.kill(pid, 0)
+    # re-requesting the evicted count just makes a fresh pool
+    assert parallel_map(_sq, [5, 6], workers=2) == [25, 36]
+
+
+def test_get_pool_refreshes_recency():
+    get_pool(2)
+    get_pool(3)
+    get_pool(2)                                # touch: 2 becomes MRU
+    get_pool(4)                                # should evict 3, not 2
+    assert sorted(par._POOLS) == [2, 4]
