@@ -1,31 +1,23 @@
-"""Machine-readable perf trajectory: writes ``BENCH_pr6.json``.
+"""Machine-readable perf trajectory: writes ``BENCH_pr7.json``.
 
-Collects the current throughput of the hot paths this PR optimized — the
-seed-batched Monte-Carlo serving simulator (one
-``MonteCarloServingSimulator`` call over 64 pre-generated seed rows vs
-looping the scalar simulator) and the ``num_seeds=64`` DSE design point
-(must stay within 3x of the single-seed point) — next to the PR 3/4
-paths (engine events/sec, what-if points/sec, serve-sim requests/sec)::
+This PR added the ``repro.obs`` observability layer; the tracked signal
+is therefore *absence of change*: every PR 6 hot path (engine events/sec,
+what-if points/sec, serve-sim requests/sec, Monte-Carlo seed-batched
+throughput, pool steady-state) must hold with probes disabled, plus a new
+``obs_overhead`` section measuring the instrumented-on cost of the 10k
+serving run (acceptance: < 10% at default sampling)::
 
-    PYTHONPATH=src python benchmarks/run.py --json        # BENCH_pr6.json
+    PYTHONPATH=src python benchmarks/run.py --json        # BENCH_pr7.json
     PYTHONPATH=src python benchmarks/perf_record.py       # same, standalone
     PYTHONPATH=src python benchmarks/perf_record.py --trials 3   # medians
 
-``BASELINE_PR4`` is the ``current`` section of the committed
-``BENCH_pr4.json``; absolute numbers are machine-dependent, the *ratios*
+``BASELINE_PR6`` is the ``current`` section of the committed
+``BENCH_pr6.json``; absolute numbers are machine-dependent, the *ratios*
 are the tracked signal.  Paired comparisons (MC vs scalar loop, fast vs
-dict engine) are measured interleaved in this process, so load drifts
-hit both sides.
-
-A note on the PR 4 absolute numbers: they show a uniform ~0.6x drop on
-the pure-Python benches vs PR 3 (fifo dict 114.7k -> 67.1k ev/s) while
-numpy-heavy benches *rose* — the signature of a contended recording
-container, not a code change.  Replaying the PR 3 tree interleaved with
-the current one on one machine confirms it: current code matches or
-beats PR 3 on every fifo metric (dict ~137k vs ~129k ev/s).  The
-``--trials N`` median mode exists so future recordings are robust to a
-single bad window: each trial runs the full suite, and every leaf metric
-reports the across-trial median.
+dict engine, probe-on vs probe-off) are measured interleaved in this
+process, so load drifts hit both sides.  The ``--trials N`` median mode
+exists so recordings are robust to a single bad window: each trial runs
+the full suite, and every leaf metric reports the across-trial median.
 """
 from __future__ import annotations
 
@@ -36,28 +28,38 @@ import sys
 import time
 from typing import Dict, List
 
-# The "current" section of BENCH_pr4.json, measured at 44edf76 (PR 4).
-BASELINE_PR4: Dict = {
+# The "current" section of BENCH_pr6.json, measured at 9f314ce (PR 6).
+BASELINE_PR6: Dict = {
     "engine_fifo_events_per_sec": {
-        "dict": 67_110.4, "static_cold": 280_771.3, "static_warm": 353_703.6},
+        "dict": 112_042.7, "static_cold": 401_135.0,
+        "static_warm": 561_762.2},
     "engine_shared_tasks_per_sec": {
-        "200": 176_430.2, "800": 171_743.9, "3200": 159_026.5,
-        "6400": 139_543.5},
+        "200": 254_522.2, "800": 276_629.4, "3200": 239_675.2,
+        "6400": 198_383.1},
     "engine_dynamic_injection_events_per_sec": {
-        "dict": 68_446.5, "fast": 284_920.5},
+        "dict": 89_120.6, "fast": 600_111.8},
     "what_if_points_per_sec": {
-        "roofline": 910.6, "analytic": 947.2, "des": 27.4},
-    "serve_sim_10k": {"wall_seconds": 0.6187, "requests_per_sec": 16_163.9},
+        "roofline": 1_591.1, "analytic": 1_343.4, "des": 33.4},
+    "serve_sim_10k": {"wall_seconds": 0.3679, "requests_per_sec": 27_183.2},
     "serve_sim_10k_taskgraph": {
-        "fast_wall_seconds": 1.0869, "dict_wall_seconds": 4.7604,
-        "fast_requests_per_sec": 9_200.4, "speedup_fast_vs_dict": 4.38},
+        "fast_wall_seconds": 0.8675, "dict_wall_seconds": 3.4130,
+        "fast_requests_per_sec": 11_527.7, "speedup_fast_vs_dict": 3.93},
     "serve_sim_10k_speculative": {
-        "wall_seconds": 0.4316, "requests_per_sec": 23_169.4},
+        "wall_seconds": 0.3853, "requests_per_sec": 25_951.4},
+    "monte_carlo": {
+        "mc_wall_seconds": 5.8452,
+        "scalar_loop_wall_seconds_est": 34.9033,
+        "mc_seed_requests_per_sec": 109_492.1,
+        "scalar_seed_requests_per_sec": 18_336.4,
+        "speedup_mc_vs_scalar_loop": 5.97,
+        "sweep_single_seed_seconds": 1.4482,
+        "sweep_64seed_seconds": 3.6037,
+        "sweep_64seed_cost_vs_single": 2.49},
     "persistent_pool": {
-        "explore_serial_seconds": 0.2958,
-        "explore_first_call_seconds": 2.2242,
-        "explore_steady_call_seconds": 0.1327,
-        "steady_vs_first_speedup": 16.77},
+        "explore_serial_seconds": 0.1816,
+        "explore_first_call_seconds": 5.9726,
+        "explore_steady_call_seconds": 0.1168,
+        "steady_vs_first_speedup": 51.15},
 }
 
 
@@ -290,6 +292,38 @@ def _persistent_pool() -> Dict[str, float]:
             "steady_vs_first_speedup": calls[0] / steady}
 
 
+def _obs_overhead() -> Dict[str, float]:
+    """Probe-on vs probe-off cost of the 10k-request serving run,
+    interleaved best-of-3.  ``sampled`` uses the default bundle sampling
+    (``sample_every=64``); acceptance is < 10% overhead there (asserted
+    by ``benchmarks/obs_smoke.py`` in CI)."""
+    import gc
+
+    from repro.obs import Probe
+    from repro.serve_sim import ContinuousBatchingScheduler, ServingSimulator
+
+    cost = _serve_cost()
+    walls = {"off": float("inf"), "sampled": float("inf"),
+             "full": float("inf")}
+    for _ in range(3):
+        for label, factory in (("off", lambda: None),
+                               ("sampled", lambda: Probe(sample_every=64)),
+                               ("full", lambda: Probe())):
+            gc.collect()
+            t0 = time.perf_counter()
+            ServingSimulator(cost, ContinuousBatchingScheduler, _traffic(),
+                             replicas=4, slots=8, probe=factory()).run()
+            walls[label] = min(walls[label], time.perf_counter() - t0)
+    return {
+        "off_wall_seconds": walls["off"],
+        "sampled_wall_seconds": walls["sampled"],
+        "full_wall_seconds": walls["full"],
+        "sampled_overhead_pct":
+            (walls["sampled"] / walls["off"] - 1.0) * 100.0,
+        "full_overhead_pct": (walls["full"] / walls["off"] - 1.0) * 100.0,
+    }
+
+
 def _median_merge(docs: List[Dict]) -> Dict:
     """Element-wise median across identically-shaped metric dicts."""
     out: Dict = {}
@@ -322,6 +356,7 @@ def collect(trials: int = 1) -> Dict:
             "serve_sim_10k_speculative": _serve_sim_10k_speculative(),
             "monte_carlo": _monte_carlo(),
             "persistent_pool": _persistent_pool(),
+            "obs_overhead": _obs_overhead(),
         }
 
     if trials <= 1:
@@ -352,20 +387,19 @@ def _speedups(base: Dict, cur: Dict) -> Dict:
     return out
 
 
-def write(path: str = "BENCH_pr6.json", trials: int = 1) -> Dict:
+def write(path: str = "BENCH_pr7.json", trials: int = 1) -> Dict:
     current = collect(trials=trials)
     doc = {
-        "pr": 6,
-        "description": "Seed-batched Monte-Carlo serving: policy/advance "
-                       "split, fused continuous-batching fast path, "
-                       "num_seeds DSE sweeps and CI-aware capacity "
-                       "planning",
+        "pr": 7,
+        "description": "Unified observability layer: zero-overhead probes, "
+                       "time-series metrics, Perfetto counter tracks, and "
+                       "per-run artifacts across the simulation stack",
         "python": sys.version.split()[0],
         "platform": platform.platform(),
         "trials": trials,
-        "baseline_pr4": BASELINE_PR4,
+        "baseline_pr6": BASELINE_PR6,
         "current": current,
-        "speedup_vs_pr4": _speedups(BASELINE_PR4, current),
+        "speedup_vs_pr6": _speedups(BASELINE_PR6, current),
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=False)
@@ -384,7 +418,7 @@ if __name__ == "__main__":
         i = argv.index("--trials")
         trials = int(argv[i + 1])
         del argv[i:i + 2]
-    out = write(argv[0] if argv else "BENCH_pr6.json", trials=trials)
-    print(json.dumps({"speedup_vs_pr4": out["speedup_vs_pr4"],
-                      "monte_carlo": out["current"]["monte_carlo"],
+    out = write(argv[0] if argv else "BENCH_pr7.json", trials=trials)
+    print(json.dumps({"speedup_vs_pr6": out["speedup_vs_pr6"],
+                      "obs_overhead": out["current"]["obs_overhead"],
                       "pool": out["current"]["persistent_pool"]}, indent=2))

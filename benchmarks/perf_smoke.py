@@ -1,32 +1,33 @@
 """CI perf-smoke: fail if simulation-core throughput regresses.
 
 Runs the DES and serve-sim microbenchmarks and enforces conservative
-floors — roughly two thirds of the throughput measured on the PR 4 tree
-re-recorded on a quiet container (the committed ``BENCH_pr4.json``
-absolute numbers are depressed by a contended recording window; see the
-``perf_record.py`` docstring), so ordinary CI-machine variance passes
-but a reintroduced O(n^2) hot path or per-task object churn fails
-loudly:
+floors — roughly two thirds of the throughput measured on the PR 7 tree
+on a quiet container — so ordinary CI-machine variance passes but a
+reintroduced O(n^2) hot path or per-task object churn fails loudly.
+All scenarios run with ``probe=None``, so these floors also guard the
+observability layer's disabled-path contract (one dead branch per hot
+site, nothing else):
 
-  * fifo static fast path (warm cache)  >= 230k events/s
-    (seed dict engine: ~86k; measured: ~355-615k)
-  * shared-channel burst, n=3200       >= 80k tasks/s
-    (seed: ~2.3k — the quadratic collapse; measured: ~125-160k)
+  * fifo static fast path (warm cache) >= 300k events/s
+    (seed dict engine: ~86k; measured: ~450-615k)
+  * shared-channel burst, n=3200       >= 120k tasks/s
+    (seed: ~2.3k — the quadratic collapse; measured: ~190k)
   * shared-channel flatness n=6400/200 >= 0.3
     (quadratic scaling gives ~0.12: completions per burst grow 32x while
     per-event cost also grows 32x)
-  * serve_sim 10k requests             >= 10k req/wall-s
-    (seed: ~1.9k; measured: ~16-19k)
-  * dynamic injection, fast engine     >= 190k events/s
+  * serve_sim 10k requests             >= 16k req/wall-s
+    (seed: ~1.9k; measured: ~26k)
+  * dynamic injection, fast engine     >= 420k events/s
     (PR 4's array-backed ``DynamicSimulator`` + template instantiation;
-    the dict engine measures ~70k on the same scenario)
+    the dict engine measures ~70k on the same scenario; measured ~700k)
   * serve_sim 10k, speculative leap    >= 15k req/wall-s
     (a ``decode_stable``-only scheduler: every decode fusion takes the
-    snapshot/rollback path; these policies ran per-step before PR 4)
+    snapshot/rollback path; measured ~23k)
   * monte-carlo seed batch, 16 x 10k   >= 80k seed-requests/wall-s
     (PR 6's fused continuous-batching fast path at replicas=4 slots=32,
-    300 rps Poisson; measured: ~128k — the scalar loop over the same
-    rows sustains ~20k, so this floor also guards the >= 5x headline)
+    300 rps Poisson; measured: ~108-128k — the scalar loop over the
+    same rows sustains ~20k, so this floor also guards the >= 5x
+    headline)
 
 Exit code 0 on pass, 1 on any floor violation.
 """
@@ -40,11 +41,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 FLOORS = {
-    "fifo_static_warm_events_per_sec": 230_000.0,
-    "shared_3200_tasks_per_sec": 80_000.0,
+    "fifo_static_warm_events_per_sec": 300_000.0,
+    "shared_3200_tasks_per_sec": 120_000.0,
     "shared_flatness_6400_over_200": 0.3,
-    "serve_sim_requests_per_sec": 10_000.0,
-    "dynamic_injection_fast_events_per_sec": 190_000.0,
+    "serve_sim_requests_per_sec": 16_000.0,
+    "dynamic_injection_fast_events_per_sec": 420_000.0,
     "serve_sim_speculative_requests_per_sec": 15_000.0,
     "monte_carlo_seed_requests_per_sec": 80_000.0,
 }

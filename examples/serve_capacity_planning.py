@@ -23,8 +23,13 @@ Monte-Carlo simulator: tail latencies come back as cross-seed mean with a
 configuration whose CI upper bound meets the SLO — one lucky traffic draw
 can no longer size the fleet.
 
+With ``--bundle NAME`` the best sweep scenario is re-run instrumented
+with a ``repro.obs.Probe`` and a full per-run artifact bundle
+(``runs/NAME/``: metrics.json, trace.json, summary.md) is written —
+diffable against another run via ``python -m repro.obs.compare``.
+
 Run:  PYTHONPATH=src python examples/serve_capacity_planning.py \
-          [--smoke] [--num-seeds K]
+          [--smoke] [--num-seeds K] [--bundle NAME]
 """
 import argparse
 import functools
@@ -58,6 +63,9 @@ def main():
     p.add_argument("--num-seeds", type=int, default=1, metavar="K",
                    help="seed-batched Monte-Carlo: K traffic draws per "
                         "estimate, CI-aware capacity planning (default 1)")
+    p.add_argument("--bundle", metavar="NAME",
+                   help="re-run the best sweep scenario instrumented and "
+                        "write a runs/NAME/ observability bundle")
     args = p.parse_args()
     n_req = 300 if args.smoke else 2000
     K = args.num_seeds
@@ -179,6 +187,18 @@ def main():
     serving_chrome_trace(best.report, out)
     print(f"\nwrote serving timeline ({best.system}/{best.traffic}/"
           f"{best.scheduler}) to {os.path.relpath(out)}")
+
+    if args.bundle:
+        # instrumented re-run of the best scenario -> runs/<name>/ bundle
+        from repro.obs import Probe, write_bundle
+        probe = Probe(args.bundle, sample_every=64)
+        rep = simulate_serving(builder.model_for(systems[best.system]),
+                               schedulers[best.scheduler],
+                               traffics[best.traffic](),
+                               replicas=2, slots=SLOTS, probe=probe)
+        bundle = write_bundle(args.bundle, report=rep, probe=probe)
+        print(f"wrote observability bundle ({best.system}/{best.traffic}/"
+              f"{best.scheduler}) to {os.path.relpath(bundle)}")
 
     if not args.smoke:
         # scale check: >= 10k requests through the simulator, wall < 10 s

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
+from time import perf_counter
 from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
                     Sequence, Tuple)
 
@@ -127,12 +128,16 @@ def _serving_scenario_seeds(common, job):
 class DesignSpaceExplorer:
     """Sweeps named workloads over systems and plans with graph caching."""
 
-    def __init__(self, workloads: Mapping[str, List[LayerOp]]):
+    def __init__(self, workloads: Mapping[str, List[LayerOp]],
+                 probe=None):
         if not workloads:
             raise ValueError("need at least one workload")
         self.workloads = dict(workloads)
         self._cache: Dict[Tuple, CompiledGraph] = {}
         self.stats = {"compiles": 0, "reannotations": 0, "estimates": 0}
+        #: optional ``repro.obs.Probe``; DSE series use the probe's
+        #: host-side clock (``elapsed()``), not a simulation clock.
+        self.probe = probe
 
     # ---- compiled-graph cache -------------------------------------------
 
@@ -142,15 +147,22 @@ class DesignSpaceExplorer:
         identical cached graph when possible."""
         plan = plan or CompilePlan()
         key = (workload, plan, _structural_key(system))
+        prb = self.probe
         hit = self._cache.get(key)
         if hit is None:
             self.stats["compiles"] += 1
             graph = compile_ops(self.workloads[workload], system, plan)
             self._cache[key] = graph
+            if prb is not None:
+                prb.counter("dse/compiles").add(prb.elapsed())
             return graph
         if hit.system is system:
+            if prb is not None:
+                prb.counter("dse/cache_hits").add(prb.elapsed())
             return hit
         self.stats["reannotations"] += 1
+        if prb is not None:
+            prb.counter("dse/reannotations").add(prb.elapsed())
         return reannotate(hit, system)
 
     def _pool_estimates(self, graphs: Sequence[CompiledGraph], backend: str,
@@ -203,13 +215,30 @@ class DesignSpaceExplorer:
                   for sname in systems
                   for plan in plans]
         self.stats["estimates"] += len(points)
+        prb = self.probe
+        t_sweep = prb.elapsed() if prb is not None else 0.0
         if workers > 1 and len(points) > 1:
             reports = self._pool_estimates(
                 [self.compiled(w, systems[sname], plan)
                  for w, sname, plan in points], backend, workers)
-        else:
+            if prb is not None:
+                prb.counter("dse/points_done").add(prb.elapsed(), len(points))
+        elif prb is None:
             reports = [est.estimate(self.compiled(w, systems[sname], plan))
                        for w, sname, plan in points]
+        else:
+            hist = prb.histogram("dse/point_seconds", unit="s")
+            done = prb.counter("dse/points_done")
+            reports = []
+            for w, sname, plan in points:
+                tp = perf_counter()
+                reports.append(
+                    est.estimate(self.compiled(w, systems[sname], plan)))
+                hist.observe(perf_counter() - tp)
+                done.add(prb.elapsed())
+        if prb is not None:
+            prb.span(f"sweep[{backend}]", t_sweep, prb.elapsed(),
+                     track="dse", points=len(points), workers=workers)
         out = [SweepResult(workload=w, system=sname, plan=plan, report=rep)
                for (w, sname, plan), rep in zip(points, reports)]
         out.sort(key=lambda r: r.step_time)
@@ -227,6 +256,8 @@ class DesignSpaceExplorer:
         high-fidelity backend.  Returns confirmed points fastest-first.
         ``workers > 1`` parallelizes the confirmation stage (the pruning
         backend is µs-fast; the causal DES dominates)."""
+        prb = self.probe
+        t_explore = prb.elapsed() if prb is not None else 0.0
         ranked = self.sweep(systems, plans, workloads, backend=prune_backend)
         confirm = get_backend(confirm_backend)
         survivors: List[SweepResult] = []
@@ -236,16 +267,33 @@ class DesignSpaceExplorer:
                 continue
             seen[r.workload] = seen.get(r.workload, 0) + 1
             survivors.append(r)
+        if prb is not None:
+            # prune rate: how much the cheap backend saved the DES
+            prb.counter("dse/pruned").add(
+                prb.elapsed(), len(ranked) - len(survivors))
         self.stats["estimates"] += len(survivors)
         if workers > 1 and len(survivors) > 1:
             confirmed = self._pool_estimates(
                 [self.compiled(r.workload, systems[r.system], r.plan)
                  for r in survivors], confirm_backend, workers)
-        else:
+        elif prb is None:
             confirmed = [
                 confirm.estimate(
                     self.compiled(r.workload, systems[r.system], r.plan))
                 for r in survivors]
+        else:
+            hist = prb.histogram("dse/confirm_seconds", unit="s")
+            confirmed = []
+            for r in survivors:
+                tp = perf_counter()
+                confirmed.append(confirm.estimate(
+                    self.compiled(r.workload, systems[r.system], r.plan)))
+                hist.observe(perf_counter() - tp)
+        if prb is not None:
+            prb.counter("dse/confirmed").add(prb.elapsed(), len(survivors))
+            prb.span(f"explore[{prune_backend}->{confirm_backend}]",
+                     t_explore, prb.elapsed(), track="dse",
+                     ranked=len(ranked), confirmed=len(survivors))
         for r, rep in zip(survivors, confirmed):
             r.confirmed = rep
         survivors.sort(key=lambda r: r.step_time)
@@ -296,11 +344,20 @@ class DesignSpaceExplorer:
                      for kname in schedulers]
         self.stats["estimates"] += len(scenarios)
         costs: Dict[str, object] = {}     # one cost model per system
+        prb = self.probe
+        t_sweep = prb.elapsed() if prb is not None else 0.0
 
         if num_seeds > 1:
-            return self._sweep_serving_mc(
+            out = self._sweep_serving_mc(
                 systems, traffics, schedulers, cost_builder, replicas,
                 slots, workers, num_seeds, scenarios)
+            if prb is not None:
+                prb.counter("dse/serving_scenarios").add(
+                    prb.elapsed(), len(scenarios))
+                prb.span("sweep_serving[mc]", t_sweep, prb.elapsed(),
+                         track="dse", scenarios=len(scenarios),
+                         num_seeds=num_seeds)
+            return out
 
         def run_one(sc: Tuple[str, str, str]) -> ServingSweepResult:
             sname, tname, kname = sc
@@ -320,8 +377,23 @@ class DesignSpaceExplorer:
                 _serving_scenario, scenarios, workers,
                 common=(costs, dict(traffics), dict(schedulers),
                         replicas, slots))
-        else:
+            if prb is not None:
+                prb.counter("dse/serving_scenarios").add(
+                    prb.elapsed(), len(scenarios))
+        elif prb is None:
             out = [run_one(sc) for sc in scenarios]
+        else:
+            hist = prb.histogram("dse/serving_scenario_seconds", unit="s")
+            done = prb.counter("dse/serving_scenarios")
+            out = []
+            for sc in scenarios:
+                tp = perf_counter()
+                out.append(run_one(sc))
+                hist.observe(perf_counter() - tp)
+                done.add(prb.elapsed())
+        if prb is not None:
+            prb.span("sweep_serving", t_sweep, prb.elapsed(), track="dse",
+                     scenarios=len(scenarios), workers=workers)
         out.sort(key=lambda r: r.ttft_p99)
         return out
 
@@ -404,6 +476,8 @@ class DesignSpaceExplorer:
 
         values = list(values)
         plan = plan or CompilePlan()
+        prb = self.probe
+        t_sweep = prb.elapsed() if prb is not None else 0.0
         graph = self.compiled(workload, base, plan)
         avsm = AVSM(system=base, graph=graph)
         variants = [avsm.what_if(**{key: v}) for v in values]
@@ -412,4 +486,8 @@ class DesignSpaceExplorer:
                                     workers=workers)
         self.stats["reannotations"] += len(values)
         self.stats["estimates"] += len(values)
+        if prb is not None:
+            prb.counter("dse/points_done").add(prb.elapsed(), len(values))
+            prb.span(f"what_if[{key}:{backend}]", t_sweep, prb.elapsed(),
+                     track="dse", values=len(values), workers=workers)
         return list(zip(values, reports))

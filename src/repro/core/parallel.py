@@ -48,8 +48,10 @@ import os
 import pickle
 import selectors
 import signal
+import sys
 import tempfile
 import warnings
+from time import perf_counter
 from typing import Callable, Dict, List, Optional, Sequence, TypeVar
 
 T = TypeVar("T")
@@ -83,6 +85,15 @@ _SHM_DIR = "/dev/shm"
 
 class _Unpicklable(Exception):
     """The payload cannot cross a persistent-pool pipe."""
+
+
+def _active_probe():
+    """The process-global ``repro.obs`` probe, if observability is both
+    *imported* and *enabled* — resolved through ``sys.modules`` so this
+    module never imports ``repro.obs`` itself (the pool must stay
+    dependency-free for uninstrumented runs and forked workers)."""
+    mod = sys.modules.get("repro.obs.probe")
+    return mod.get_probe() if mod is not None else None
 
 
 def _serial(fn, items, common) -> List:
@@ -136,6 +147,11 @@ def _load_result(res_f):
             os.unlink(path)
         except OSError:
             pass
+    prb = _active_probe()
+    if prb is not None:
+        prb.counter("pool/shm_bytes", unit="bytes").add(
+            prb.elapsed(), len(blob))
+        prb.counter("pool/shm_results").add(prb.elapsed())
     return pickle.loads(blob)
 
 
@@ -199,6 +215,8 @@ class WorkerPool:
         return [p[0] for p in self._procs]
 
     def _spawn(self) -> None:
+        prb = _active_probe()
+        t0 = perf_counter() if prb is not None else 0.0
         with warnings.catch_warnings():
             warnings.filterwarnings(
                 "ignore", message=".*fork.*", category=DeprecationWarning)
@@ -226,6 +244,10 @@ class WorkerPool:
                 os.close(res_w)
                 self._procs.append([pid, os.fdopen(job_w, "wb"),
                                     os.fdopen(res_r, "rb")])
+        if prb is not None:                     # children never reach here
+            prb.histogram("pool/spawn_seconds", unit="s").observe(
+                perf_counter() - t0)
+            prb.counter("pool/forks").add(prb.elapsed(), self.workers)
 
     def ensure(self, key, payload) -> None:
         """Broadcast ``payload`` under ``key`` to every worker, once per
@@ -239,6 +261,8 @@ class WorkerPool:
                                 protocol=_PICKLE_PROTO)
         except Exception as e:
             raise _Unpicklable(str(e)) from e
+        prb = _active_probe()
+        t0 = perf_counter() if prb is not None else 0.0
         if not self._procs:
             self._spawn()
         try:
@@ -250,6 +274,11 @@ class WorkerPool:
             self.close()
             raise _WorkerFailure("broadcast failed")
         self._stored.add(key)
+        if prb is not None:
+            prb.counter("pool/broadcast_bytes", unit="bytes").add(
+                prb.elapsed(), len(blob) * len(self._procs))
+            prb.histogram("pool/broadcast_seconds", unit="s").observe(
+                perf_counter() - t0)
 
     def map(self, fn: Callable, items: Sequence, common=None) -> List:
         """``[fn(x) for x in items]`` (or ``fn(common, x)``), fanned out
@@ -273,6 +302,11 @@ class WorkerPool:
         # deterministic, deadlock-free (a worker never has more than one
         # response buffered), and load-balanced within each queue.
         queues = [list(range(w, n, nw))[::-1] for w in range(nw)]
+        prb = _active_probe()
+        t_map = perf_counter() if prb is not None else 0.0
+        h_job = (prb.histogram("pool/job_seconds", unit="s")
+                 if prb is not None else None)
+        sent = [0.0] * nw
 
         def send_item(w: int, idx: int) -> None:
             # pickle to bytes first: a payload that cannot be pickled is
@@ -286,6 +320,8 @@ class WorkerPool:
             job_f = self._procs[w][1]
             job_f.write(blob)
             job_f.flush()
+            if h_job is not None:
+                sent[w] = perf_counter()
 
         sel = selectors.DefaultSelector()
         in_flight: set = set()       # workers with an unanswered item
@@ -302,6 +338,8 @@ class WorkerPool:
                         tag, idx, val = _load_result(self._procs[w][2])
                         if tag == "err":
                             raise _WorkerFailure(val)
+                        if h_job is not None:
+                            h_job.observe(perf_counter() - sent[w])
                         results[idx] = val
                         done[idx] = True
                         in_flight.discard(w)
@@ -340,6 +378,10 @@ class WorkerPool:
                 if not done[i]:
                     results[i] = (fn(items[i]) if common is None
                                   else fn(common, items[i]))
+        if prb is not None:
+            prb.counter("pool/jobs").add(prb.elapsed(), n)
+            prb.histogram("pool/map_seconds", unit="s").observe(
+                perf_counter() - t_map)
         return results
 
     def close(self) -> None:

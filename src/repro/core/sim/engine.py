@@ -331,10 +331,15 @@ class Simulator:
     def __init__(self, tasks: Iterable[Task] = (),
                  resources: Optional[Dict[str, ResourceSpec]] = None,
                  durations=None,
-                 on_complete: Optional[Callable[[Task, float], None]] = None):
+                 on_complete: Optional[Callable[[Task, float], None]] = None,
+                 probe=None):
         """``durations`` optionally overrides each task's annotated duration
         (aligned with ``tasks``); the what-if fast path re-annotates a graph
-        by swapping this array, leaving the Task objects untouched."""
+        by swapping this array, leaving the Task objects untouched.
+        ``probe`` (a :class:`repro.obs.probe.Probe`) enables event-loop
+        instrumentation: per-kind event counters plus active/share gauges
+        on bandwidth-shared channels.  Probes only read simulation state —
+        results are bit-identical with or without one."""
         tasks = list(tasks)
         self.tasks = {t.tid: t for t in tasks}
         if len(self.tasks) != len(tasks):
@@ -348,6 +353,8 @@ class Simulator:
                               for t, d in zip(tasks, durations)}
         self.resources = dict(resources or {})
         self.on_complete = on_complete
+        self.probe = probe
+        self._chan_gauges: Dict[str, Tuple] = {}
         self._validate(tasks)
         self._next_tid = max(self.tasks, default=-1) + 1
         # ---- event-loop state (live during run()) ----
@@ -450,6 +457,19 @@ class Simulator:
         self._seq += 1
         heapq.heappush(self._events, (t_ev, self._seq, kind, payload))
 
+    def _chan_probe(self, res: str, ch: "_SharedChannel",
+                    t: float) -> None:
+        """Record a shared channel's active count and per-task bandwidth
+        share at a rate-change boundary (admit/complete) — called only
+        when a probe is installed."""
+        g = self._chan_gauges.get(res)
+        if g is None:
+            g = self._chan_gauges[res] = (
+                self.probe.gauge(f"engine/chan/{res}/active", unit="tasks"),
+                self.probe.gauge(f"engine/chan/{res}/share", unit="frac"))
+        g[0].set(t, ch.n)
+        g[1].set(t, ch.rate)
+
     def _reschedule_channel(self, res: str) -> None:
         ch = self._channels[res]
         ch.epoch += 1
@@ -466,6 +486,8 @@ class Simulator:
                 ch = self._channels[t.resource] = _SharedChannel(spec.servers)
             ch.admit(tid, self.durations[tid], t_ready)
             self._reschedule_channel(t.resource)
+            if self.probe is not None:
+                self._chan_probe(t.resource, ch, t_ready)
         else:
             q = self._queues.setdefault(t.resource, [])
             heapq.heappush(q, (t_ready, tid))
@@ -508,6 +530,15 @@ class Simulator:
             if n == 0:
                 self._enqueue(tid, 0.0)
 
+        # Observability: one local None-check per event when disabled
+        # (the default) — counters live only behind an installed probe.
+        prb = self.probe
+        if prb is not None:
+            p_done = prb.counter("engine/fifo_completions")
+            p_lane = prb.counter("engine/lane_completions")
+            p_call = prb.counter("engine/callbacks")
+            p_chan = prb.counter("engine/chan_completions")
+
         events = self._events
         while events:
             self._now, _, kind, payload = heapq.heappop(events)
@@ -517,14 +548,20 @@ class Simulator:
                 self._active[t.resource] -= 1
                 self._complete(tid)
                 self._drain(t.resource)
+                if prb is not None:
+                    p_done.add(self._now)
             elif kind == "lane":
                 ln, handler, epoch = payload
                 if epoch != ln.epoch:
                     continue                  # superseded by a truncation
                 ln.busy = False
                 handler(self._now)
+                if prb is not None:
+                    p_lane.add(self._now)
             elif kind == "call":
                 payload()
+                if prb is not None:
+                    p_call.add(self._now)
             else:  # 'chan'
                 res, epoch = payload
                 ch = self._channels[res]
@@ -537,7 +574,11 @@ class Simulator:
                     self._records.append(
                         TaskRecord(t, ch.start.pop(tid), self._now))
                     self._complete(tid)
+                    if prb is not None:
+                        p_chan.add(self._now)
                 self._reschedule_channel(res)
+                if prb is not None:
+                    self._chan_probe(res, ch, self._now)
 
         if len(self._completed_ids) != len(self.tasks):
             stuck = [tid for tid, n in self._n_deps.items() if n > 0]
@@ -647,7 +688,8 @@ class StaticCache:
 def simulate_static(tasks: Sequence[Task],
                     resources: Optional[Dict[str, ResourceSpec]] = None,
                     durations=None,
-                    cache: Optional[StaticCache] = None) -> SimResult:
+                    cache: Optional[StaticCache] = None,
+                    probe=None) -> SimResult:
     """Run a *static* task graph (no callbacks, no injection) over
     precomputed dependency arrays.
 
@@ -658,6 +700,12 @@ def simulate_static(tasks: Sequence[Task],
     ``reannotate``-then-simulate sweep points skip all per-task object
     churn.  Exact-parity with the general engine is asserted by
     ``tests/test_engine_parity.py``.
+
+    ``probe`` enables instrumentation with *zero* in-loop cost: the
+    per-resource concurrency series and completion counters are derived
+    post-hoc from the start/end arrays the loop fills anyway
+    (:func:`_static_probe_series`), so the hot loop is byte-identical
+    with and without a probe.
     """
     tasks = tasks if isinstance(tasks, list) else list(tasks)
     if cache is None:
@@ -838,11 +886,40 @@ def simulate_static(tasks: Sequence[Task],
     resource_busy = {name: busy[ri]
                      for ri, name in enumerate(cache.res_names)}
 
+    if probe is not None:
+        _static_probe_series(probe, cache, starts, ends)
+
     def materialize() -> List[TaskRecord]:
         return [TaskRecord(tasks[i], starts[i], ends[i]) for i in range(n)]
 
     return SimResult(makespan=makespan, records_thunk=materialize,
                      resource_busy=resource_busy, layer_time=layer_time)
+
+
+def _static_probe_series(probe, cache: StaticCache, starts: Sequence[float],
+                         ends: Sequence[float]) -> None:
+    """Derive ``simulate_static`` instrumentation after the run: a
+    per-resource active-task concurrency gauge (+1 at each start, -1 at
+    each end, starts-before-ends on ties so the level never dips
+    negative) and a global completion counter over the end times."""
+    n = cache.n
+    if not n:
+        return
+    res_of = cache.res_of
+    for ri, name in enumerate(cache.res_names):
+        deltas = []
+        for i in range(n):
+            if res_of[i] == ri:
+                deltas.append((starts[i], 1))
+                deltas.append((ends[i], -1))
+        g = probe.gauge(f"static/{name}/active", unit="tasks")
+        level = 0
+        for t, d in sorted(deltas, key=lambda td: (td[0], -td[1])):
+            level += d
+            g.set(t, level)
+    c = probe.counter("static/tasks_completed")
+    for t in sorted(ends[:n]):
+        c.add(t)
 
 
 # ---------------------------------------------------------------------------
@@ -1050,13 +1127,18 @@ class DynamicSimulator:
                  resources: Optional[Dict[str, ResourceSpec]] = None,
                  durations=None,
                  on_complete: Optional[Callable[[Task, float], None]] = None,
-                 cache: Optional[StaticCache] = None):
+                 cache: Optional[StaticCache] = None,
+                 probe=None):
         """``durations`` optionally overrides annotated durations (aligned
         with ``tasks``); ``cache`` optionally seeds the dependency layout
-        from a precomputed :class:`StaticCache` of the same task list."""
+        from a precomputed :class:`StaticCache` of the same task list.
+        ``probe`` enables event-loop instrumentation (same contract as on
+        :class:`Simulator`: read-only, bit-identical results)."""
         tasks = tasks if isinstance(tasks, list) else list(tasks)
         self.resources = dict(resources or {})
         self.on_complete = on_complete
+        self.probe = probe
+        self._chan_gauges: Dict[int, Tuple] = {}
         if durations is not None and len(durations) != len(tasks):
             raise ValueError("durations must align with tasks")
         if cache is not None:
@@ -1260,6 +1342,20 @@ class DynamicSimulator:
                 (self._now + (dv if dv > 0.0 else 0.0) / rate, self._seq,
                  "chan", (ri, self._ch_epoch[ri])))
 
+    def _chan_probe(self, ri: int, t: float) -> None:
+        """Shared-channel active/share gauges at a rate-change boundary —
+        called only when a probe is installed."""
+        g = self._chan_gauges.get(ri)
+        if g is None:
+            name = self.cache.res_names[ri]
+            g = self._chan_gauges[ri] = (
+                self.probe.gauge(f"engine/chan/{name}/active", unit="tasks"),
+                self.probe.gauge(f"engine/chan/{name}/share", unit="frac"))
+        m = self._ch_n[ri]
+        srv = self._servers[ri]
+        g[0].set(t, m)
+        g[1].set(t, 1.0 if not m or m <= srv else srv / m)
+
     def _drain(self, ri: int) -> None:
         q = self._queues[ri]
         cap = self._servers[ri]
@@ -1318,6 +1414,8 @@ class DynamicSimulator:
                               c.tids[i], i))
         self._starts[i] = t_ready
         self._reschedule_channel(ri)
+        if self.probe is not None:
+            self._chan_probe(ri, t_ready)
 
     def run(self) -> SimResult:
         if self._running or self._n_done:
@@ -1357,6 +1455,13 @@ class DynamicSimulator:
         push = heapq.heappush
         n_res_known = len(servers)
         n_done = 0
+        # Observability: one local None-check per event when disabled.
+        prb = self.probe
+        if prb is not None:
+            p_done = prb.counter("engine/fifo_completions")
+            p_lane = prb.counter("engine/lane_completions")
+            p_call = prb.counter("engine/callbacks")
+            p_chan = prb.counter("engine/chan_completions")
         while events:
             now, _, kind, payload = pop(events)
             self._now = now
@@ -1410,14 +1515,20 @@ class DynamicSimulator:
                     n_res_known = len(servers)
                 if queues[ri]:
                     self._drain(ri)
+                if prb is not None:
+                    p_done.add(now)
             elif kind == "lane":
                 ln, handler, epoch = payload
                 if epoch != ln.epoch:
                     continue                  # superseded by a truncation
                 ln.busy = False
                 handler(self._now)
+                if prb is not None:
+                    p_lane.add(self._now)
             elif kind == "call":
                 payload()
+                if prb is not None:
+                    p_call.add(self._now)
             else:                             # channel completion(s)
                 ri, epoch = payload
                 if epoch != self._ch_epoch[ri]:
@@ -1465,7 +1576,11 @@ class DynamicSimulator:
                         h = on_done.pop(i, None)
                         if h is not None:
                             h(now)
+                    if prb is not None:
+                        p_chan.add(now)
                 self._reschedule_channel(ri)
+                if prb is not None:
+                    self._chan_probe(ri, now)
 
         self._n_done = n_done
         if self._n_done != c.n:

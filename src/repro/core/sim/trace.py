@@ -1,11 +1,16 @@
 """Gantt-chart export: Chrome trace-event JSON (loadable in Perfetto UI /
 chrome://tracing) + an ASCII Gantt for terminals — the paper's Figure 4.
 
-:func:`chrome_trace` renders a static task-graph ``SimResult`` (one lane
-per hardware resource); :func:`serving_chrome_trace` renders a
-traffic-driven ``ServingReport`` from ``repro.serve_sim`` (replica
-prefill/decode lanes, per-slot request spans, and a queue-depth counter
-track).
+The span/counter emission lives in :class:`repro.obs.trace.TraceBuilder`
+(the unified exporter); this module keeps the two historical entry
+points as thin wrappers: :func:`chrome_trace` renders a static
+task-graph ``SimResult`` (one lane per hardware resource) and
+:func:`serving_chrome_trace` renders a traffic-driven ``ServingReport``
+from ``repro.serve_sim`` (replica prefill/decode lanes, per-slot request
+spans, and a queue-depth counter track).  The builder-returning variants
+(:func:`trace_builder`, :func:`serving_trace_builder`) let callers — the
+``runs/<name>/`` bundle writer in :mod:`repro.obs.artifacts` — add probe
+counter tracks before serialization.
 
 Reading ``result.records`` here is what materializes the lazy record
 arrays kept by the engine's fast paths (``simulate_static``, serving
@@ -14,39 +19,25 @@ arrays kept by the engine's fast paths (``simulate_static``, serving
 """
 from __future__ import annotations
 
-import json
 from typing import Dict, List, Optional
 
 from repro.core.sim.engine import SimResult
+from repro.obs.trace import TraceBuilder
+
+
+def trace_builder(result: SimResult) -> TraceBuilder:
+    """A :class:`TraceBuilder` holding one 'thread' per resource."""
+    return TraceBuilder().add_records(result.records, pid=0,
+                                      include_args=True)
 
 
 def chrome_trace(result: SimResult, path: Optional[str] = None) -> str:
     """Emit Chrome trace-event JSON; one 'thread' per resource."""
-    resources = sorted({r.task.resource for r in result.records})
-    tid_of = {res: i for i, res in enumerate(resources)}
-    events: List[Dict] = []
-    for i, res in enumerate(resources):
-        events.append({"ph": "M", "pid": 0, "tid": i,
-                       "name": "thread_name", "args": {"name": res}})
-    for rec in result.records:
-        events.append({
-            "ph": "X", "pid": 0, "tid": tid_of[rec.task.resource],
-            "name": rec.task.name,
-            "cat": rec.task.kind,
-            "ts": rec.start * 1e6,            # microseconds
-            "dur": max(rec.end - rec.start, 1e-9) * 1e6,
-            "args": {"layer": rec.task.layer, "bytes": rec.task.nbytes,
-                     "flops": rec.task.flops},
-        })
-    text = json.dumps({"traceEvents": events, "displayTimeUnit": "ms"})
-    if path:
-        with open(path, "w") as f:
-            f.write(text)
-    return text
+    return trace_builder(result).to_json(path)
 
 
-def serving_chrome_trace(report, path: Optional[str] = None) -> str:
-    """Chrome trace-event JSON for a serving simulation.
+def serving_trace_builder(report) -> TraceBuilder:
+    """A :class:`TraceBuilder` for a serving simulation.
 
     ``report`` is a ``repro.serve_sim.simulator.ServingReport`` (typed
     loosely to keep core free of serve_sim imports).  Three tracks:
@@ -55,70 +46,53 @@ def serving_chrome_trace(report, path: Optional[str] = None) -> str:
         embedded ``SimResult``);
       * pid 1 ``requests`` — one lane per (replica, slot) with a span per
         request from admit to completion (args carry TTFT/TPOT);
-      * pid 2 ``queue``    — a counter track of pending-queue depth.
+      * pid 2 ``queue``    — a counter track of pending-queue depth,
+        closed with a final sample at the makespan so the track spans
+        the whole run in Perfetto.
     """
-    events: List[Dict] = [
-        {"ph": "M", "pid": 0, "name": "process_name",
-         "args": {"name": "replicas"}},
-        {"ph": "M", "pid": 1, "name": "process_name",
-         "args": {"name": "requests"}},
-        {"ph": "M", "pid": 2, "name": "process_name",
-         "args": {"name": "queue"}},
-    ]
+    tb = TraceBuilder()
+    tb.process(0, "replicas").process(1, "requests").process(2, "queue")
 
     if report.sim_result is not None:
-        resources = sorted({r.task.resource
-                            for r in report.sim_result.records})
-        tid_of = {res: i for i, res in enumerate(resources)}
-        for res, i in tid_of.items():
-            events.append({"ph": "M", "pid": 0, "tid": i,
-                           "name": "thread_name", "args": {"name": res}})
-        for rec in report.sim_result.records:
-            events.append({
-                "ph": "X", "pid": 0, "tid": tid_of[rec.task.resource],
-                "name": rec.task.name, "cat": rec.task.kind,
-                "ts": rec.start * 1e6,
-                "dur": max(rec.end - rec.start, 1e-9) * 1e6,
-            })
+        tb.add_records(report.sim_result.records, pid=0,
+                       include_args=False)
 
     lanes: Dict = {}
     for m in report.requests:
         lane = (m.replica, m.slot)
         if lane not in lanes:
             lanes[lane] = len(lanes)
-            events.append({"ph": "M", "pid": 1, "tid": lanes[lane],
-                           "name": "thread_name",
-                           "args": {"name": f"replica{lane[0]}/"
-                                            f"slot{lane[1]}"}})
-        tid = lanes[lane]
-        events.append({
-            "ph": "X", "pid": 1, "tid": tid, "name": f"req{m.rid}",
-            "cat": "request",
-            "ts": m.t_admit * 1e6,
-            "dur": max(m.t_done - m.t_admit, 1e-9) * 1e6,
-            "args": {"ttft_ms": m.ttft * 1e3, "tpot_ms": m.tpot * 1e3,
-                     "queue_delay_ms": m.queue_delay * 1e3,
-                     "prompt_tokens": m.prompt_tokens,
-                     "output_tokens": m.output_tokens},
-        })
+            tb.thread(1, lanes[lane],
+                      f"replica{lane[0]}/slot{lane[1]}")
+        tb.span(1, lanes[lane], f"req{m.rid}", m.t_admit, m.t_done,
+                cat="request",
+                args={"ttft_ms": m.ttft * 1e3, "tpot_ms": m.tpot * 1e3,
+                      "queue_delay_ms": m.queue_delay * 1e3,
+                      "prompt_tokens": m.prompt_tokens,
+                      "output_tokens": m.output_tokens})
 
     # queue-depth counter: +1 on arrival, -1 on admit
-    deltas = []
+    deltas: List = []
     for m in report.requests:
         deltas.append((m.t_arrive, 1))
         deltas.append((m.t_admit, -1))
     depth = 0
+    t_last = 0.0
     # arrivals (+1) before admits (-1) at equal times: depth never dips < 0
     for t, d in sorted(deltas, key=lambda td: (td[0], -td[1])):
         depth += d
-        events.append({"ph": "C", "pid": 2, "name": "pending",
-                       "ts": t * 1e6, "args": {"requests": depth}})
+        t_last = t
+        tb.counter(2, "pending", t, depth, key="requests")
+    # close the track at simulation end so it doesn't truncate early
+    if deltas and report.duration > t_last:
+        tb.counter(2, "pending", report.duration, depth, key="requests")
+    return tb
 
-    text = json.dumps({"traceEvents": events, "displayTimeUnit": "ms"})
-    if path:
-        with open(path, "w") as f:
-            f.write(text)
-    return text
+
+def serving_chrome_trace(report, path: Optional[str] = None) -> str:
+    """Chrome trace-event JSON for a serving simulation (see
+    :func:`serving_trace_builder` for the track layout)."""
+    return serving_trace_builder(report).to_json(path)
 
 
 def ascii_gantt(result: SimResult, width: int = 100,
@@ -127,6 +101,7 @@ def ascii_gantt(result: SimResult, width: int = 100,
     records = result.records        # materializes lazy records once
     if not records or result.makespan <= 0:
         return "(empty)"
+    width = max(int(width), 1)
     # single pass: group records by resource (the per-resource scan was
     # O(records x resources) on big traces)
     by_res: Dict[str, List] = {}
@@ -136,7 +111,9 @@ def ascii_gantt(result: SimResult, width: int = 100,
     scale = width / result.makespan
     glyph = {"compute": "#", "dma": "=", "collective": "~",
              "launch": ".", "host": "."}
-    lines = [f"t=0 {'':{width - 12}} t={result.makespan * 1e3:.3f} ms"]
+    # pad, clamped so narrow widths (< 12) degrade instead of raising
+    lines = [f"t=0 {'':{max(width - 12, 0)}} "
+             f"t={result.makespan * 1e3:.3f} ms"]
     for res in resources:
         row = [" "] * width
         for rec in by_res[res]:

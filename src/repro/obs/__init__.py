@@ -1,0 +1,38 @@
+"""``repro.obs`` — the unified observability layer.
+
+One subsystem, four pieces, threaded through every simulation layer:
+
+* :mod:`repro.obs.probe` — the zero-overhead-when-disabled
+  instrumentation API (:class:`Probe` with counter/gauge/histogram
+  handles + span events).  Hook points live in the DES engine
+  (``core/sim/engine.py``), the serving simulator and fused Monte-Carlo
+  path (``serve_sim``), the DSE sweep loop (``core/dse.py``), and the
+  worker pool (``core/parallel.py``); everything defaults to
+  ``probe=None`` and hot paths pay a single ``is not None`` branch, so
+  uninstrumented runs stay bit-exact and at-speed.
+* :mod:`repro.obs.series` — NumPy-backed :class:`MetricSeries` with
+  configurable sampling, mergeable across Monte-Carlo seeds into
+  mean/95%-CI bands (:func:`merge_series`).
+* :mod:`repro.obs.trace` — the unified Perfetto/Chrome
+  :class:`TraceBuilder` (span tracks + counter tracks) behind
+  ``repro.core.sim.trace``'s public exporters, plus
+  :func:`validate_trace`.
+* :mod:`repro.obs.artifacts` / :mod:`repro.obs.compare` — per-run
+  ``runs/<name>/`` bundles (metrics.json, trace.json, summary.md) and
+  the ``python -m repro.obs.compare`` regression-diff CLI.
+"""
+from repro.obs.series import (HistogramSummary, MergedSeries, MetricSeries,
+                              merge_series)
+from repro.obs.probe import Counter, Gauge, Probe, get_probe, set_probe
+from repro.obs.trace import TraceBuilder, validate_trace
+from repro.obs.artifacts import (load_bundle, print_bundle, report_summary,
+                                 write_bundle)
+from repro.obs.compare import compare, diff, flatten
+
+__all__ = [
+    "MetricSeries", "MergedSeries", "HistogramSummary", "merge_series",
+    "Probe", "Counter", "Gauge", "set_probe", "get_probe",
+    "TraceBuilder", "validate_trace",
+    "write_bundle", "load_bundle", "print_bundle", "report_summary",
+    "compare", "diff", "flatten",
+]

@@ -1,0 +1,202 @@
+"""Per-run artifact bundles: ``runs/<name>/`` directories.
+
+A bundle is the machine-readable record of one simulation run:
+
+* ``metrics.json`` — report summary (throughput, latency percentiles,
+  utilization), probe counters/gauges/histograms, and every (decimated)
+  metric series;
+* ``trace.json``   — Chrome trace-event JSON (spans + counter tracks),
+  loadable in the Perfetto UI;
+* ``summary.md``   — the human-readable one-pager.
+
+:func:`write_bundle` assembles all three from whatever the caller has —
+a :class:`~repro.serve_sim.simulator.ServingReport`, a bare
+:class:`~repro.core.sim.engine.SimResult`, a
+:class:`~repro.obs.probe.Probe`, or any combination.  Bundles are diffed
+against each other (or against ``BENCH_*.json``) by
+:mod:`repro.obs.compare`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import sys
+import time
+from typing import Dict, Optional
+
+from repro.obs.trace import TraceBuilder, validate_trace
+
+
+def _stats_dict(s) -> Dict:
+    """LatencyStats (or any flat dataclass) -> plain dict."""
+    if dataclasses.is_dataclass(s):
+        return dataclasses.asdict(s)
+    return dict(s)
+
+
+def report_summary(report) -> Dict:
+    """JSON-able scalar summary of a ``ServingReport`` (duck-typed so
+    core stays free of serve_sim imports)."""
+    return {
+        "workload": report.workload,
+        "scheduler": report.scheduler,
+        "cost_model": report.cost_model,
+        "replicas": report.replicas,
+        "slots": report.slots,
+        "n_requests": report.n_requests,
+        "duration_s": report.duration,
+        "output_tokens": report.output_tokens,
+        "throughput_rps": report.throughput_rps,
+        "throughput_tps": report.throughput_tps,
+        "replica_util": report.replica_util,
+        "ttft": _stats_dict(report.ttft),
+        "tpot": _stats_dict(report.tpot),
+        "e2e": _stats_dict(report.e2e),
+        "queue_delay": _stats_dict(report.queue_delay),
+    }
+
+
+def _summary_md(name: str, metrics: Dict, trace_tracks: int,
+                n_trace_events: int) -> str:
+    lines = [f"# run: {name}", ""]
+    rep = metrics.get("report")
+    if rep:
+        lines += [
+            f"`{rep['cost_model']}` | scheduler `{rep['scheduler']}` | "
+            f"workload `{rep['workload']}` | "
+            f"{rep['replicas']}x{rep['slots']} slots",
+            "",
+            f"- **{rep['n_requests']} requests** in "
+            f"{rep['duration_s']:.2f}s simulated "
+            f"({rep['throughput_rps']:.1f} req/s, "
+            f"{rep['throughput_tps']:.0f} tok/s, "
+            f"util {rep['replica_util']:.1%})",
+            f"- TTFT p50/p95/p99: {rep['ttft']['p50'] * 1e3:.1f} / "
+            f"{rep['ttft']['p95'] * 1e3:.1f} / "
+            f"{rep['ttft']['p99'] * 1e3:.1f} ms",
+            f"- TPOT p50/p99: {rep['tpot']['p50'] * 1e3:.2f} / "
+            f"{rep['tpot']['p99'] * 1e3:.2f} ms",
+            f"- E2E p99: {rep['e2e']['p99']:.2f} s | queue-delay p99: "
+            f"{rep['queue_delay']['p99'] * 1e3:.1f} ms",
+            "",
+        ]
+    probe = metrics.get("probe")
+    if probe:
+        if probe.get("counters"):
+            lines.append("## Counters (final values)")
+            lines.append("")
+            for k in sorted(probe["counters"]):
+                lines.append(f"- `{k}` = {probe['counters'][k]:g}")
+            lines.append("")
+        if probe.get("histograms"):
+            lines.append("## Histograms")
+            lines.append("")
+            for k in sorted(probe["histograms"]):
+                h = probe["histograms"][k]
+                if h["count"]:
+                    lines.append(
+                        f"- `{k}`: n={h['count']} mean={h['mean']:.4g} "
+                        f"p50={h['p50']:.4g} p99={h['p99']:.4g} "
+                        f"max={h['max']:.4g}")
+                else:
+                    lines.append(f"- `{k}`: n=0")
+            lines.append("")
+    lines += [
+        "## Artifacts",
+        "",
+        "- `metrics.json` — summary + probe metrics + series "
+        f"({len(metrics.get('probe', {}).get('series', {}))} series)",
+        f"- `trace.json` — {n_trace_events} trace events, "
+        f"{trace_tracks} counter tracks "
+        "(open in [ui.perfetto.dev](https://ui.perfetto.dev) or "
+        "`chrome://tracing`)",
+        "",
+        f"Recorded {metrics['created']} on {metrics['host']['platform']} "
+        f"(python {metrics['host']['python']}).",
+    ]
+    return "\n".join(lines) + "\n"
+
+
+def write_bundle(name: str, out_dir: str = "runs",
+                 report=None, sim_result=None, probe=None,
+                 extra: Optional[Dict] = None) -> str:
+    """Write a ``<out_dir>/<name>/`` bundle; returns the bundle path.
+
+    Any of ``report`` (a ServingReport — its embedded ``sim_result`` is
+    used for the replica span tracks and its request rows for the
+    queue-depth/lane tracks via the serving exporter), ``sim_result`` (a
+    bare engine result), and ``probe`` may be given.  ``extra`` is
+    merged into ``metrics.json`` verbatim (e.g. sweep config).
+    """
+    from repro.core.sim.trace import serving_trace_builder, trace_builder
+
+    path = os.path.join(out_dir, name)
+    os.makedirs(path, exist_ok=True)
+
+    # ---- trace.json -----------------------------------------------------
+    if report is not None:
+        tb = serving_trace_builder(report)
+    elif sim_result is not None:
+        tb = trace_builder(sim_result)
+    else:
+        tb = TraceBuilder()
+    if probe is not None:
+        end = None
+        if report is not None:
+            end = report.duration
+        elif sim_result is not None:
+            end = sim_result.makespan
+        tb.add_probe(probe, end_time=end)
+    problems = validate_trace(tb.events)
+    if problems:               # never ship a malformed trace silently
+        raise RuntimeError(f"bundle {name}: invalid trace: "
+                           + "; ".join(problems[:5]))
+    tb.to_json(os.path.join(path, "trace.json"))
+
+    # ---- metrics.json ---------------------------------------------------
+    metrics: Dict = {
+        "name": name,
+        "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "host": {"python": platform.python_version(),
+                 "platform": platform.platform()},
+    }
+    if report is not None:
+        metrics["report"] = report_summary(report)
+    if sim_result is not None:
+        metrics["sim"] = {"makespan_s": sim_result.makespan,
+                          "n_records": len(sim_result.records)}
+    if probe is not None:
+        metrics["probe"] = probe.to_metrics()
+    if extra:
+        metrics["extra"] = extra
+    with open(os.path.join(path, "metrics.json"), "w") as f:
+        json.dump(metrics, f, indent=1)
+
+    # ---- summary.md -----------------------------------------------------
+    with open(os.path.join(path, "summary.md"), "w") as f:
+        f.write(_summary_md(name, metrics, len(tb.counter_tracks()),
+                            len(tb.events)))
+    return path
+
+
+def load_bundle(path: str) -> Dict:
+    """Load a bundle's ``metrics.json`` (``path`` may be the bundle
+    directory or the metrics file itself)."""
+    if os.path.isdir(path):
+        path = os.path.join(path, "metrics.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def print_bundle(path: str, file=None) -> None:
+    """Echo a bundle's summary.md to ``file`` (stdout)."""
+    d = path if os.path.isdir(path) else os.path.dirname(path)
+    md = os.path.join(d, "summary.md")
+    if os.path.exists(md):
+        with open(md) as f:
+            print(f.read(), file=file or sys.stdout)
+
+
+__all__ = ["write_bundle", "load_bundle", "print_bundle", "report_summary"]

@@ -1,0 +1,181 @@
+"""Regression triage: diff two run bundles (or BENCH_*.json files).
+
+::
+
+    python -m repro.obs.compare runs/baseline runs/candidate
+    python -m repro.obs.compare runs/candidate BENCH_pr7.json --threshold 10
+    python -m repro.obs.compare BENCH_pr6.json BENCH_pr7.json
+
+Both inputs are flattened to dotted-path numeric leaves
+(``report.ttft.p99``, ``probe.counters.serve/queue_arrivals``,
+``serve_sim_10k.requests_per_sec``) and compared key-by-key.  Direction
+is inferred from the key name — throughput-like metrics regress when
+they drop, latency/wall-time-like metrics regress when they rise — and
+changes beyond ``--threshold`` percent are flagged.  When the two
+documents share no exact keys (a run bundle vs a BENCH file), leaf
+basenames are matched instead, so ``…requests_per_sec`` lines up across
+formats.  ``--fail-on-regression`` exits 1 when anything regressed —
+the CI hook.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+#: key-name fragments implying "higher is better"
+_HIGHER = ("throughput", "per_sec", "_rps", "_tps", "speedup", "util",
+           "rate", "hits")
+#: key-name fragments implying "lower is better"
+_LOWER = ("ttft", "tpot", "e2e", "delay", "latency", "wall", "seconds",
+          "duration", "_ms", "_s", "p50", "p95", "p99", "mean", "max",
+          "misses", "rollback", "bytes", "overhead")
+
+
+def _direction(key: str) -> int:
+    """+1 higher-is-better, -1 lower-is-better, 0 unknown."""
+    low = key.lower()
+    for frag in _HIGHER:
+        if frag in low:
+            return +1
+    for frag in _LOWER:
+        if frag in low:
+            return -1
+    return 0
+
+
+#: flattened subtrees that are raw sample arrays, not comparable scalars
+_SKIP_SUBTREES = ("series.", "host.", "baseline_")
+
+
+def flatten(doc, prefix: str = "") -> Dict[str, float]:
+    """Dotted-path -> numeric-leaf view of a JSON document; list leaves
+    and metadata/series subtrees are skipped."""
+    out: Dict[str, float] = {}
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            key = f"{prefix}{k}"
+            if any((key + ".").startswith(s) or f".{s}" in key + "."
+                   for s in _SKIP_SUBTREES):
+                continue
+            if isinstance(v, bool):
+                continue
+            if isinstance(v, (int, float)):
+                out[key] = float(v)
+            elif isinstance(v, dict):
+                out.update(flatten(v, prefix=key + "."))
+    return out
+
+
+def _load(path: str) -> Dict:
+    """A bundle directory, a metrics.json, or a BENCH_*.json."""
+    if os.path.isdir(path):
+        path = os.path.join(path, "metrics.json")
+    with open(path) as f:
+        doc = json.load(f)
+    # BENCH files carry {baseline_*, current}; compare the current run
+    if "current" in doc and "pr" in doc:
+        return doc["current"]
+    return doc
+
+
+def diff(a: Dict[str, float], b: Dict[str, float],
+         threshold_pct: float = 5.0) -> List[Tuple]:
+    """Rows ``(key, a, b, pct_change, flag)`` for keys in both docs;
+    ``flag`` is 'regression', 'improvement', 'changed', or ''.
+
+    Falls back to basename matching when the exact-key intersection is
+    empty (bundle-vs-BENCH: different schemas, shared metric names).
+    """
+    keys = sorted(set(a) & set(b))
+    if not keys and a and b:
+        by_base_a = {k.rsplit(".", 1)[-1]: k for k in sorted(a)}
+        by_base_b = {k.rsplit(".", 1)[-1]: k for k in sorted(b)}
+        shared = sorted(set(by_base_a) & set(by_base_b))
+        rows = []
+        for base in shared:
+            ka, kb = by_base_a[base], by_base_b[base]
+            rows.append((f"{ka} ~ {kb}",) + _row(base, a[ka], b[kb],
+                                                 threshold_pct)[1:])
+        return rows
+    return [_row(k, a[k], b[k], threshold_pct) for k in keys]
+
+
+def _row(key: str, va: float, vb: float,
+         threshold_pct: float) -> Tuple:
+    if va == 0.0:
+        pct = 0.0 if vb == 0.0 else float("inf")
+    else:
+        pct = (vb - va) / abs(va) * 100.0
+    flag = ""
+    if abs(pct) >= threshold_pct:
+        d = _direction(key)
+        if d > 0:
+            flag = "regression" if pct < 0 else "improvement"
+        elif d < 0:
+            flag = "regression" if pct > 0 else "improvement"
+        else:
+            flag = "changed"
+    return (key, va, vb, pct, flag)
+
+
+def format_diff(rows: List[Tuple], only_flagged: bool = False) -> str:
+    if not rows:
+        return "(no comparable metrics)"
+    width = max(len(r[0]) for r in rows)
+    lines = []
+    mark = {"regression": "✗", "improvement": "✓", "changed": "~", "": " "}
+    for key, va, vb, pct, flag in rows:
+        if only_flagged and not flag:
+            continue
+        pct_s = f"{pct:+8.1f}%" if pct != float("inf") else "     new"
+        lines.append(f" {mark[flag]} {key:<{width}}  {va:>12.4g} -> "
+                     f"{vb:>12.4g}  {pct_s}  {flag}")
+    return "\n".join(lines) if lines else "(no flagged changes)"
+
+
+def compare(path_a: str, path_b: str, threshold_pct: float = 5.0,
+            only_flagged: bool = False,
+            file=None) -> Tuple[int, int]:
+    """Print the diff; returns ``(n_regressions, n_rows)``."""
+    out = file or sys.stdout
+    a = flatten(_load(path_a))
+    b = flatten(_load(path_b))
+    rows = diff(a, b, threshold_pct=threshold_pct)
+    print(f"compare: {path_a} (a) vs {path_b} (b), "
+          f"threshold {threshold_pct:g}%", file=out)
+    print(format_diff(rows, only_flagged=only_flagged), file=out)
+    n_reg = sum(1 for r in rows if r[4] == "regression")
+    n_imp = sum(1 for r in rows if r[4] == "improvement")
+    print(f"{len(rows)} metrics compared: {n_reg} regressions, "
+          f"{n_imp} improvements", file=out)
+    return n_reg, len(rows)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs.compare",
+        description="Diff two run bundles or BENCH_*.json files.")
+    p.add_argument("a", help="baseline: bundle dir, metrics.json, "
+                             "or BENCH_*.json")
+    p.add_argument("b", help="candidate: bundle dir, metrics.json, "
+                             "or BENCH_*.json")
+    p.add_argument("--threshold", type=float, default=5.0,
+                   help="flag changes beyond this percent (default 5)")
+    p.add_argument("--flagged-only", action="store_true",
+                   help="print only flagged rows")
+    p.add_argument("--fail-on-regression", action="store_true",
+                   help="exit 1 if any metric regressed")
+    args = p.parse_args(argv)
+    n_reg, _ = compare(args.a, args.b, threshold_pct=args.threshold,
+                       only_flagged=args.flagged_only)
+    return 1 if (args.fail_on_regression and n_reg) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
+
+
+__all__ = ["flatten", "diff", "format_diff", "compare", "main"]

@@ -1,0 +1,295 @@
+"""Probe API: zero-overhead-when-disabled instrumentation handles.
+
+Every instrumented site in the simulation stack follows one pattern::
+
+    def __init__(self, ..., probe: Optional[Probe] = None):
+        self._p_queue = probe.counter("serve/queue_depth") if probe else None
+
+    # hot path
+    if self._p_queue is not None:
+        self._p_queue.add(now, 1)
+
+With ``probe=None`` (the default everywhere) the handle is ``None`` and
+the hot path pays exactly one predictable local ``is not None`` branch —
+no allocation, no call, no float arithmetic — so instrumented-off runs
+are bit-exact and at-speed (guarded by parity tests and the CI
+perf-smoke floors).  Probes only ever *read* simulation state, so even
+instrumented-on runs produce bit-identical results; instrumentation
+changes what is recorded, never what happens.
+
+A :class:`Probe` is a namespace of handles:
+
+* :meth:`counter` — cumulative running total (``add(t, delta)``); deltas
+  may be negative (queue depth), the track records the running value;
+* :meth:`gauge` — instantaneous level (``set(t, value)``);
+* :meth:`histogram` — scalar distribution without a time axis
+  (``observe(value)``): job latencies, per-point sweep times;
+* :meth:`span` / :meth:`event` — explicit trace events for phases the
+  engine's task records don't cover;
+* :meth:`child` — a namespaced sub-probe (``seed3/serve/queue_depth``),
+  used per Monte-Carlo seed so cross-seed series merge cleanly.
+
+``sample_every`` decimates series storage (see
+:mod:`repro.obs.series`); counters stay exact because they record
+running totals.  A process-global probe (:func:`set_probe` /
+:func:`get_probe`) lets pervasively-shared infrastructure
+(``repro.core.parallel``) report into whatever run is active without
+threading a parameter through every call chain.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs.series import HistogramSummary, MetricSeries, merge_series
+
+
+class Counter:
+    """Cumulative counter handle over one :class:`MetricSeries`.
+
+    ``add`` keeps the decimation bookkeeping in handle-local slots
+    (instead of calling :meth:`MetricSeries.sample` and reaching through
+    the series) — with ``sample_every`` > 1 the common case is one
+    method call plus a few single-level slot writes, which is what keeps
+    instrumented-on hot loops within the overhead budget.  The pending
+    (decimated-away) last update lives on the handle; :meth:`flush`
+    pushes it into the series so tracks reach the end of the run.
+
+    ``_left`` counts down from ``sample_every`` to the next kept sample,
+    and the pending value is always ``self.value`` itself, so the common
+    (skipped) path is five slot operations and a branch.
+    """
+
+    __slots__ = ("series", "value", "_every", "_left", "_last_t")
+
+    def __init__(self, series: MetricSeries):
+        self.series = series
+        self.value = 0.0
+        self._every = series.sample_every
+        self._left = self._every
+        self._last_t = 0.0
+
+    def add(self, t: float, delta: float = 1.0) -> None:
+        self.value += delta
+        n = self._left - 1
+        if n > 0:
+            self._left = n
+            self._last_t = t
+        else:
+            self._left = self._every
+            self.series._append(t, self.value)
+
+    def flush(self) -> None:
+        if self._left != self._every:
+            self._left = self._every
+            self.series._append(self._last_t, self.value)
+        self.series.flush()
+
+
+class Gauge:
+    """Instantaneous-level handle over one :class:`MetricSeries` (same
+    handle-local countdown fast path as :class:`Counter`)."""
+
+    __slots__ = ("series", "value", "_every", "_left", "_last_t")
+
+    def __init__(self, series: MetricSeries):
+        self.series = series
+        self.value = 0.0
+        self._every = series.sample_every
+        self._left = self._every
+        self._last_t = 0.0
+
+    def set(self, t: float, value: float) -> None:
+        self.value = value
+        n = self._left - 1
+        if n > 0:
+            self._left = n
+            self._last_t = t
+        else:
+            self._left = self._every
+            self.series._append(t, value)
+
+    def flush(self) -> None:
+        if self._left != self._every:
+            self._left = self._every
+            self.series._append(self._last_t, self.value)
+        self.series.flush()
+
+
+class Probe:
+    """One run's instrumentation namespace (see module docstring)."""
+
+    def __init__(self, name: str = "run", sample_every: int = 1):
+        self.name = name
+        self.sample_every = max(int(sample_every), 1)
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, HistogramSummary] = {}
+        self._spans: List[Tuple] = []      # (name, t0, t1, track, args)
+        self._events: List[Tuple] = []     # (name, t, args)
+        self._children: Dict[str, "Probe"] = {}
+        self._t0 = time.perf_counter()
+
+    # ---- handle constructors (memoized by name) -------------------------
+
+    def counter(self, name: str, unit: Optional[str] = None) -> Counter:
+        h = self._counters.get(name)
+        if h is None:
+            h = self._counters[name] = Counter(MetricSeries(
+                name, kind="counter", unit=unit,
+                sample_every=self.sample_every))
+        return h
+
+    def gauge(self, name: str, unit: Optional[str] = None) -> Gauge:
+        h = self._gauges.get(name)
+        if h is None:
+            h = self._gauges[name] = Gauge(MetricSeries(
+                name, kind="gauge", unit=unit,
+                sample_every=self.sample_every))
+        return h
+
+    def histogram(self, name: str,
+                  unit: Optional[str] = None) -> HistogramSummary:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = HistogramSummary(
+                name, unit=unit, sample_every=self.sample_every)
+        return h
+
+    # ---- explicit trace events ------------------------------------------
+
+    def span(self, name: str, t0: float, t1: float, track: str = "spans",
+             **args) -> None:
+        self._spans.append((name, t0, t1, track, args or None))
+
+    def event(self, name: str, t: float, **args) -> None:
+        self._events.append((name, t, args or None))
+
+    # ---- children (per-seed / per-component namespaces) -----------------
+
+    def child(self, name: str) -> "Probe":
+        c = self._children.get(name)
+        if c is None:
+            c = self._children[name] = Probe(
+                name, sample_every=self.sample_every)
+        return c
+
+    @property
+    def children(self) -> Dict[str, "Probe"]:
+        return self._children
+
+    # ---- host-side clock -------------------------------------------------
+
+    def elapsed(self) -> float:
+        """Wall seconds since this probe was created — the time axis for
+        host-side series (pool activity, sweep progress), as opposed to
+        the simulation clock used by engine/serving series."""
+        return time.perf_counter() - self._t0
+
+    # ---- collection ------------------------------------------------------
+
+    def flush(self) -> None:
+        """Force-record decimation-pending samples on every series (and
+        recursively on children) so tracks reach the end of the run."""
+        for h in self._counters.values():
+            h.flush()
+        for h in self._gauges.values():
+            h.flush()
+        for c in self._children.values():
+            c.flush()
+
+    def all_series(self, prefix: str = "") -> Dict[str, MetricSeries]:
+        """Every series, flattened; child series get ``<child>/`` name
+        prefixes."""
+        out: Dict[str, MetricSeries] = {}
+        for name, h in self._counters.items():
+            out[prefix + name] = h.series
+        for name, h in self._gauges.items():
+            out[prefix + name] = h.series
+        for cname, c in self._children.items():
+            out.update(c.all_series(prefix=f"{prefix}{cname}/"))
+        return out
+
+    def all_histograms(self, prefix: str = "") -> Dict[str,
+                                                       HistogramSummary]:
+        out: Dict[str, HistogramSummary] = {}
+        for name, h in self._histograms.items():
+            out[prefix + name] = h
+        for cname, c in self._children.items():
+            out.update(c.all_histograms(prefix=f"{prefix}{cname}/"))
+        return out
+
+    def all_spans(self) -> List[Tuple]:
+        return list(self._spans)
+
+    def all_events(self) -> List[Tuple]:
+        return list(self._events)
+
+    def merged_child_series(self, grid_points: int = 256):
+        """Merge same-named series across children into mean/CI bands —
+        the Monte-Carlo cross-seed view (``seed0/x .. seedK/x`` ->
+        ``x``)."""
+        groups: Dict[str, List[MetricSeries]] = {}
+        for c in self._children.values():
+            for name, s in c.all_series().items():
+                if len(s):
+                    groups.setdefault(name, []).append(s)
+        return {name: merge_series(members, grid_points=grid_points)
+                for name, members in groups.items()}
+
+    def to_metrics(self) -> Dict:
+        """JSON-able snapshot: final counter/gauge values, histogram
+        summaries, and every (decimated) series."""
+        self.flush()
+        counters = {}
+        gauges = {}
+
+        def walk(p: "Probe", prefix: str) -> None:
+            for name, h in p._counters.items():
+                counters[prefix + name] = h.value
+            for name, h in p._gauges.items():
+                gauges[prefix + name] = h.value
+            for cname, c in p._children.items():
+                walk(c, f"{prefix}{cname}/")
+
+        walk(self, "")
+        return {
+            "name": self.name,
+            "sample_every": self.sample_every,
+            "counters": counters,
+            "gauges": gauges,
+            "histograms": {name: h.to_dict()
+                           for name, h in self.all_histograms().items()},
+            "series": {name: s.to_dict()
+                       for name, s in self.all_series().items()},
+        }
+
+    def __repr__(self) -> str:
+        return (f"Probe({self.name!r}, counters={len(self._counters)}, "
+                f"gauges={len(self._gauges)}, "
+                f"histograms={len(self._histograms)}, "
+                f"children={len(self._children)})")
+
+
+# ---------------------------------------------------------------------------
+# Process-global probe (for shared infrastructure like the worker pool)
+# ---------------------------------------------------------------------------
+
+_GLOBAL: Optional[Probe] = None
+
+
+def set_probe(probe: Optional[Probe]) -> Optional[Probe]:
+    """Install ``probe`` as the process-global probe (None to clear).
+    Returns the previous probe so callers can restore it."""
+    global _GLOBAL
+    prev = _GLOBAL
+    _GLOBAL = probe
+    return prev
+
+
+def get_probe() -> Optional[Probe]:
+    """The process-global probe, or None when observability is off."""
+    return _GLOBAL
+
+
+__all__ = ["Probe", "Counter", "Gauge", "set_probe", "get_probe"]

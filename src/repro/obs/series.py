@@ -1,0 +1,265 @@
+"""NumPy-backed time-series metrics: the substrate under ``repro.obs``.
+
+A :class:`MetricSeries` is one named stream of ``(t, value)`` samples —
+the raw material every probe handle (counter, gauge) appends to.  Storage
+is a pair of growable float64 arrays, so a 10M-event run with sampled
+instrumentation costs two array writes per kept sample and nothing else.
+
+``sample_every=N`` keeps every Nth update.  Decimation is *safe by
+construction* for both handle kinds: counters record their running
+cumulative total (so a kept sample is exact regardless of how many
+updates were skipped), and gauges record the current level (skipped
+samples are just a coarser view of the same trajectory).  The final
+update is always captured via :meth:`flush`, so a counter track never
+truncates before the end of the run.
+
+:func:`merge_series` folds K per-seed series (e.g. queue depth per
+Monte-Carlo seed) into a :class:`MergedSeries` — mean and a 95%
+normal-approximation CI band over a common time grid, using
+previous-value (step) interpolation, which is the exact semantics of
+counter/gauge tracks.
+"""
+from __future__ import annotations
+
+from math import sqrt
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class MetricSeries:
+    """One named (t, value) sample stream.
+
+    ``kind`` is ``"counter"`` (cumulative running total — Perfetto
+    counter-track semantics) or ``"gauge"`` (instantaneous level).  The
+    distinction matters to consumers (rate computation, merge semantics),
+    not to storage.
+    """
+
+    __slots__ = ("name", "kind", "unit", "sample_every", "_t", "_v", "n",
+                 "_skip", "_last_t", "_last_v")
+
+    def __init__(self, name: str, kind: str = "gauge",
+                 unit: Optional[str] = None, sample_every: int = 1,
+                 capacity: int = 64):
+        if kind not in ("counter", "gauge"):
+            raise ValueError(f"series {name}: unknown kind {kind!r}")
+        if sample_every < 1:
+            raise ValueError(f"series {name}: sample_every must be >= 1")
+        self.name = name
+        self.kind = kind
+        self.unit = unit
+        self.sample_every = sample_every
+        cap = max(int(capacity), 16)
+        self._t = np.empty(cap, np.float64)
+        self._v = np.empty(cap, np.float64)
+        self.n = 0
+        self._skip = 0            # updates since the last kept sample
+        self._last_t = 0.0        # most recent update (kept or not)
+        self._last_v = 0.0
+
+    def _grow(self) -> None:
+        cap = 2 * len(self._t)
+        t = np.empty(cap, np.float64)
+        v = np.empty(cap, np.float64)
+        t[:self.n] = self._t[:self.n]
+        v[:self.n] = self._v[:self.n]
+        self._t = t
+        self._v = v
+
+    def _append(self, t: float, v: float) -> None:
+        i = self.n
+        if i >= len(self._t):
+            self._grow()
+        self._t[i] = t
+        self._v[i] = v
+        self.n = i + 1
+
+    def sample(self, t: float, v: float) -> None:
+        """Record one update; kept every ``sample_every``-th call."""
+        self._last_t = t
+        self._last_v = v
+        self._skip += 1
+        if self._skip >= self.sample_every:
+            self._skip = 0
+            self._append(t, v)
+
+    def flush(self) -> None:
+        """Force-record the most recent update if decimation skipped it
+        (``_skip > 0`` means an unkept update is pending; call at end of
+        run so the track reaches the final time)."""
+        if self._skip:
+            self._skip = 0
+            self._append(self._last_t, self._last_v)
+
+    @property
+    def t(self) -> np.ndarray:
+        return self._t[:self.n]
+
+    @property
+    def values(self) -> np.ndarray:
+        return self._v[:self.n]
+
+    def __len__(self) -> int:
+        return self.n
+
+    def value_at(self, t: float) -> float:
+        """Step-interpolated value at time ``t`` (0.0 before the first
+        sample)."""
+        i = int(np.searchsorted(self.t, t, side="right")) - 1
+        return float(self._v[i]) if i >= 0 else 0.0
+
+    def to_dict(self) -> Dict:
+        """JSON-able form (lists, not arrays)."""
+        return {"kind": self.kind, "unit": self.unit,
+                "t": [float(x) for x in self.t],
+                "v": [float(x) for x in self.values]}
+
+    @classmethod
+    def from_dict(cls, name: str, doc: Dict) -> "MetricSeries":
+        s = cls(name, kind=doc.get("kind", "gauge"), unit=doc.get("unit"),
+                capacity=max(len(doc["t"]), 16))
+        n = len(doc["t"])
+        s._t[:n] = doc["t"]
+        s._v[:n] = doc["v"]
+        s.n = n
+        return s
+
+    def __repr__(self) -> str:
+        return (f"MetricSeries({self.name!r}, kind={self.kind!r}, "
+                f"n={self.n})")
+
+
+class MergedSeries:
+    """Cross-seed summary of K same-named series on a common time grid.
+
+    ``mean``/``ci_lo``/``ci_hi`` are per-grid-point mean and 95%
+    normal-approximation CI of the mean over the K step-interpolated
+    member series (mean ± 1.96·std/√K, sample std; the band collapses to
+    the mean for K < 2).
+    """
+
+    __slots__ = ("name", "kind", "t", "mean", "ci_lo", "ci_hi", "n_members")
+
+    def __init__(self, name: str, kind: str, t: np.ndarray,
+                 mean: np.ndarray, ci_lo: np.ndarray, ci_hi: np.ndarray,
+                 n_members: int):
+        self.name = name
+        self.kind = kind
+        self.t = t
+        self.mean = mean
+        self.ci_lo = ci_lo
+        self.ci_hi = ci_hi
+        self.n_members = n_members
+
+    def to_dict(self) -> Dict:
+        return {"kind": self.kind, "n_members": self.n_members,
+                "t": [float(x) for x in self.t],
+                "mean": [float(x) for x in self.mean],
+                "ci_lo": [float(x) for x in self.ci_lo],
+                "ci_hi": [float(x) for x in self.ci_hi]}
+
+    def __repr__(self) -> str:
+        return (f"MergedSeries({self.name!r}, n_members={self.n_members}, "
+                f"grid={len(self.t)})")
+
+
+def _step_resample(s: MetricSeries, grid: np.ndarray) -> np.ndarray:
+    """Previous-value interpolation of ``s`` onto ``grid`` (0 before the
+    first sample) — the exact reading of a counter/gauge track."""
+    idx = np.searchsorted(s.t, grid, side="right") - 1
+    out = np.where(idx >= 0, s.values[np.maximum(idx, 0)], 0.0)
+    return out.astype(np.float64)
+
+
+def merge_series(members: Sequence[MetricSeries],
+                 grid_points: int = 256) -> MergedSeries:
+    """Merge K same-metric series into mean/95%-CI bands on a common
+    ``grid_points``-point time grid spanning the union of their ranges."""
+    members = [m for m in members if len(m)]
+    if not members:
+        raise ValueError("merge_series needs at least one non-empty series")
+    name = members[0].name
+    kind = members[0].kind
+    t_lo = min(float(m.t[0]) for m in members)
+    t_hi = max(float(m.t[-1]) for m in members)
+    if t_hi <= t_lo:
+        grid = np.asarray([t_lo], np.float64)
+    else:
+        grid = np.linspace(t_lo, t_hi, max(2, grid_points))
+    rows = np.stack([_step_resample(m, grid) for m in members])
+    k = len(members)
+    mean = rows.mean(axis=0)
+    if k < 2:
+        return MergedSeries(name, kind, grid, mean, mean.copy(),
+                            mean.copy(), k)
+    std = rows.std(axis=0, ddof=1)
+    hw = 1.96 * std / sqrt(k)
+    return MergedSeries(name, kind, grid, mean, mean - hw, mean + hw, k)
+
+
+class HistogramSummary:
+    """Streaming scalar distribution: count / sum / min / max plus a
+    decimated sample reservoir for percentiles (every ``sample_every``-th
+    observation is kept, so percentile estimates stay cheap on hot
+    paths)."""
+
+    __slots__ = ("name", "unit", "count", "total", "min", "max",
+                 "sample_every", "_skip", "_vals", "n")
+
+    def __init__(self, name: str, unit: Optional[str] = None,
+                 sample_every: int = 1):
+        self.name = name
+        self.unit = unit
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+        self.sample_every = max(int(sample_every), 1)
+        self._skip = 0
+        self._vals = np.empty(16, np.float64)
+        self.n = 0
+
+    def observe(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+        self._skip += 1
+        if self._skip >= self.sample_every:
+            self._skip = 0
+            if self.n >= len(self._vals):
+                new = np.empty(2 * len(self._vals), np.float64)
+                new[:self.n] = self._vals[:self.n]
+                self._vals = new
+            self._vals[self.n] = v
+            self.n += 1
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        if not self.n:
+            return 0.0
+        return float(np.percentile(self._vals[:self.n], q))
+
+    def to_dict(self) -> Dict:
+        out = {"count": self.count, "sum": self.total, "mean": self.mean,
+               "unit": self.unit}
+        if self.count:
+            out["min"] = self.min
+            out["max"] = self.max
+            out["p50"] = self.percentile(50)
+            out["p99"] = self.percentile(99)
+        return out
+
+    def __repr__(self) -> str:
+        return (f"HistogramSummary({self.name!r}, count={self.count}, "
+                f"mean={self.mean:g})")
+
+
+__all__ = ["MetricSeries", "MergedSeries", "HistogramSummary",
+           "merge_series"]

@@ -1,0 +1,228 @@
+"""Unified Chrome trace-event / Perfetto exporter.
+
+One :class:`TraceBuilder` supersedes the two ad-hoc emitters that used
+to live in ``repro.core.sim.trace`` (which are now thin wrappers over
+this class).  It produces trace-event JSON loadable in the Perfetto UI
+or ``chrome://tracing``:
+
+* **metadata** events (``ph="M"``) naming processes and threads;
+* **complete spans** (``ph="X"``) with ``ts``/``dur`` in microseconds
+  (simulation times are seconds; durations are clamped to >= 1e-3 µs so
+  zero-length tasks stay visible);
+* **counter tracks** (``ph="C"``) — one per metric, fed either sample
+  by sample or wholesale from a :class:`repro.obs.series.MetricSeries`.
+
+:func:`validate_trace` is the schema checker used by tests and the CI
+obs-smoke job: every event carries ``ph``/``pid``/``ts`` (metadata
+excepted), spans have non-negative ``dur``, and each counter track is
+monotone in ``ts``.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+_US = 1e6                  # seconds -> microseconds
+_MIN_DUR_S = 1e-9          # clamp so zero-duration spans stay visible
+
+
+class TraceBuilder:
+    """Incremental builder for one trace-event JSON document."""
+
+    def __init__(self) -> None:
+        self._events: List[Dict] = []
+        self._threads: Dict[Tuple[int, int], str] = {}
+        self._processes: Dict[int, str] = {}
+
+    # ---- metadata -------------------------------------------------------
+
+    def process(self, pid: int, name: str) -> "TraceBuilder":
+        if pid not in self._processes:
+            self._processes[pid] = name
+            self._events.append({"ph": "M", "pid": pid,
+                                 "name": "process_name",
+                                 "args": {"name": name}})
+        return self
+
+    def thread(self, pid: int, tid: int, name: str) -> "TraceBuilder":
+        if (pid, tid) not in self._threads:
+            self._threads[(pid, tid)] = name
+            self._events.append({"ph": "M", "pid": pid, "tid": tid,
+                                 "name": "thread_name",
+                                 "args": {"name": name}})
+        return self
+
+    # ---- spans ----------------------------------------------------------
+
+    def span(self, pid: int, tid: int, name: str, t0: float, t1: float,
+             cat: Optional[str] = None,
+             args: Optional[Dict] = None) -> "TraceBuilder":
+        """One complete span; ``t0``/``t1`` in simulation seconds."""
+        ev: Dict = {"ph": "X", "pid": pid, "tid": tid, "name": name,
+                    "ts": t0 * _US,
+                    "dur": max(t1 - t0, _MIN_DUR_S) * _US}
+        if cat is not None:
+            ev["cat"] = cat
+        if args is not None:
+            ev["args"] = args
+        self._events.append(ev)
+        return self
+
+    def add_records(self, records: Sequence, pid: int = 0,
+                    include_args: bool = True) -> "TraceBuilder":
+        """Emit engine ``TaskRecord`` spans, one thread per resource.
+
+        This is the span-emission path shared by ``chrome_trace`` and
+        ``serving_chrome_trace``; ``include_args`` controls whether the
+        per-task layer/bytes/flops payload is attached (the serving
+        replica track omits it to keep 10k-request traces small).
+        """
+        resources = sorted({r.task.resource for r in records})
+        tid_of = {res: i for i, res in enumerate(resources)}
+        for res, tid in tid_of.items():
+            self.thread(pid, tid, res)
+        for rec in records:
+            task = rec.task
+            args = ({"layer": task.layer, "bytes": task.nbytes,
+                     "flops": task.flops} if include_args else None)
+            self.span(pid, tid_of[task.resource], task.name,
+                      rec.start, rec.end, cat=task.kind, args=args)
+        return self
+
+    # ---- counter tracks -------------------------------------------------
+
+    def counter(self, pid: int, name: str, t: float, value: float,
+                key: str = "value") -> "TraceBuilder":
+        """One counter sample at simulation time ``t`` (seconds)."""
+        self._events.append({"ph": "C", "pid": pid, "name": name,
+                             "ts": t * _US, "args": {key: value}})
+        return self
+
+    def add_series(self, series, pid: int, name: Optional[str] = None,
+                   key: Optional[str] = None,
+                   end_time: Optional[float] = None) -> "TraceBuilder":
+        """A whole counter track from a :class:`MetricSeries`.
+
+        ``end_time`` (seconds) re-emits the final value there so the
+        track spans the full run instead of truncating at the last
+        sample — Perfetto draws counters as steps, so without this the
+        track visually ends early.
+        """
+        track = name if name is not None else series.name
+        k = key if key is not None else (series.unit or "value")
+        t = series.t
+        v = series.values
+        for i in range(len(series)):
+            self.counter(pid, track, float(t[i]), float(v[i]), key=k)
+        if end_time is not None and len(series) \
+                and end_time > float(t[-1]):
+            self.counter(pid, track, end_time, float(v[-1]), key=k)
+        return self
+
+    # ---- probe ingestion ------------------------------------------------
+
+    def add_probe(self, probe, pid: int = 10,
+                  end_time: Optional[float] = None) -> "TraceBuilder":
+        """All of a probe's series as counter tracks under one process,
+        plus its explicit spans/events (spans grouped by ``track`` name
+        onto threads of ``pid + 1``)."""
+        probe.flush()
+        series = probe.all_series()
+        if series:
+            self.process(pid, f"metrics:{probe.name}")
+            for s in series.values():
+                if len(s):
+                    self.add_series(s, pid, end_time=end_time)
+        spans = probe.all_spans()
+        events = probe.all_events()
+        if spans or events:
+            span_pid = pid + 1
+            self.process(span_pid, f"spans:{probe.name}")
+            tids: Dict[str, int] = {}
+            for (sname, t0, t1, track, args) in spans:
+                tid = tids.setdefault(track, len(tids))
+                self.thread(span_pid, tid, track)
+                self.span(span_pid, tid, sname, t0, t1, args=args)
+            for (ename, t, args) in events:
+                ev: Dict = {"ph": "i", "pid": span_pid, "tid": 0, "s": "p",
+                            "name": ename, "ts": t * _US}
+                if args:
+                    ev["args"] = args
+                self._events.append(ev)
+        return self
+
+    # ---- output ---------------------------------------------------------
+
+    @property
+    def events(self) -> List[Dict]:
+        return self._events
+
+    def counter_tracks(self) -> Dict[Tuple[int, str], int]:
+        """Sample counts per (pid, name) counter track — used by the
+        obs-smoke job to assert '>= 3 counter tracks'."""
+        out: Dict[Tuple[int, str], int] = {}
+        for ev in self._events:
+            if ev["ph"] == "C":
+                k = (ev["pid"], ev["name"])
+                out[k] = out.get(k, 0) + 1
+        return out
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        text = json.dumps({"traceEvents": self._events,
+                           "displayTimeUnit": "ms"})
+        if path:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+
+def validate_trace(doc) -> List[str]:
+    """Schema-check a trace document; returns a list of problems (empty
+    when valid).
+
+    ``doc`` may be the JSON text, a parsed dict, or a list of events.
+    Checks: every event has ``ph``; non-metadata events have ``pid`` and
+    numeric ``ts``; spans have numeric non-negative ``dur``; counter
+    events carry numeric ``args``; each (pid, name) counter track is
+    monotone non-decreasing in ``ts``.
+    """
+    if isinstance(doc, str):
+        doc = json.loads(doc)
+    events = doc["traceEvents"] if isinstance(doc, dict) else doc
+    problems: List[str] = []
+    counter_last: Dict[Tuple[int, str], float] = {}
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph is None:
+            problems.append(f"event {i}: missing ph")
+            continue
+        if ph == "M":
+            if ev.get("name") not in ("process_name", "thread_name"):
+                problems.append(f"event {i}: metadata name {ev.get('name')!r}")
+            continue
+        if "pid" not in ev:
+            problems.append(f"event {i} ({ph}): missing pid")
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            problems.append(f"event {i} ({ph}): missing/non-numeric ts")
+            continue
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                problems.append(f"event {i}: span with bad dur {dur!r}")
+        elif ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not all(
+                    isinstance(v, (int, float)) for v in args.values()):
+                problems.append(f"event {i}: counter with bad args")
+            k = (ev.get("pid"), ev.get("name"))
+            last = counter_last.get(k)
+            if last is not None and ts < last:
+                problems.append(
+                    f"event {i}: counter track {k} ts went backwards "
+                    f"({ts} < {last})")
+            counter_last[k] = ts
+    return problems
+
+
+__all__ = ["TraceBuilder", "validate_trace"]

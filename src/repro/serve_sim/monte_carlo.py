@@ -190,7 +190,7 @@ def _cross_seed_stats(reports: List[ServingReport]) -> Dict[str, SeedStats]:
 def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
                               prompts: List[int], outputs: List[int],
                               replicas: int, slots: int,
-                              wl_name: str) -> ServingReport:
+                              wl_name: str, probe=None) -> ServingReport:
     """Specialized replay of one open-loop trace under
     :class:`ContinuousBatchingScheduler` + the stock affine cost model.
 
@@ -220,7 +220,10 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
       :class:`LaneStateArrays` columns in one vectorized pass at the end.
 
     Bit-identical output is the contract; ``tests/test_monte_carlo.py``
-    enforces it.
+    enforces it.  ``probe`` records the same serve/* metric names as the
+    scalar simulator (one child probe per seed upstream), guarded by a
+    single local None-check per site — simulation results are
+    bit-identical with or without it.
     """
     pf, pp = cost.prefill_fixed, cost.prefill_per_token
     df, dt, dc = (cost.decode_fixed, cost.decode_per_token,
@@ -229,6 +232,16 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
     n_req = len(times)
     scratch = _LeapScratch()
     INF = float("inf")
+
+    prb = probe
+    if prb is not None:
+        p_queue = prb.counter("serve/queue_depth", unit="requests")
+        p_completed = prb.counter("serve/completed", unit="requests")
+        p_leaps = prb.counter("serve/leap_steps", unit="steps")
+        p_spec = prb.counter("serve/spec_leaps")
+        p_rollbacks = prb.counter("serve/rollbacks")
+        p_occ = [prb.gauge(f"serve/replica{r}/occupancy", unit="slots")
+                 for r in range(R)]
 
     rows: List[tuple] = []       # finished (rid, r, slot, admit, first, done)
     rows_append = rows.append
@@ -283,6 +296,8 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
         busy_time[r] -= old_end - new_end
         seqc += 1
         ekey[r] = (new_end, seqc, r)
+        if prb is not None:
+            p_rollbacks.add(now)
 
     def start_decode(r: int, now: float) -> None:
         nonlocal armed
@@ -299,6 +314,10 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
             if bounds is not None:
                 leap[r] = bounds
                 armed += 1
+            if prb is not None:
+                p_leaps.add(now, k_min)
+                if speculate:
+                    p_spec.add(now)
         else:
             dur = c0
             dec_k[r] = 1
@@ -317,6 +336,9 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
             need_tf[r].append(s)
             heappush(thresh[r], (dec_total[r] + outputs[i]) * S + s)
             ctx_sum[r] += p
+            if prb is not None:
+                p_queue.add(now, -1)
+                p_occ[r].set(now, occ[r])
             submit(r, now, pf + pp * (p if p > 0 else 0), False)
             if armed:                   # admission invalidates sibling leaps
                 for r2 in range(R):
@@ -348,10 +370,16 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
                 # a pure queue append — take them in one jump.
                 j = bisect_right(times, bt, ai)
                 pending.extend(range(ai, j))
+                if prb is not None:
+                    for x in range(ai, j):
+                        tx = times[x]
+                        p_queue.add(tx if tx > 0.0 else 0.0, 1)
                 ai = j
             else:
                 pending.append(ai)
                 ai += 1
+                if prb is not None:
+                    p_queue.add(na, 1)
                 if busy_count < R:
                     for r in range(R):
                         if not busy[r]:
@@ -413,6 +441,9 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
                 occ[r] = n - len(done)
                 for s in done:
                     rows_append((req_r[s], r, s, ta_r[s], tf_r[s], now))
+                if prb is not None:
+                    p_completed.add(now, len(done))
+                    p_occ[r].set(now, occ[r])
         # ---- kick the now-idle replica (inline kick) ----
         if pending and occ[r] < S:
             i = pending.popleft()
@@ -425,6 +456,9 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
             heappush(thresh[r], (dec_total[r] + outputs[i]) * S + s)
             p = prompts[i]
             ctx_sum[r] += p
+            if prb is not None:
+                p_queue.add(now, -1)
+                p_occ[r].set(now, occ[r])
             dur = pf + pp * (p if p > 0 else 0)
             busy[r] = True
             busy_count += 1
@@ -472,6 +506,10 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
                 else:
                     dur, _nb = _leap_spans(now, c0, base, dc, ctx, n,
                                            k_min, False, scratch)
+                if prb is not None:
+                    p_leaps.add(now, k_min)
+                    if leap[r] is not None:
+                        p_spec.add(now)
             else:
                 dur = c0
                 dec_k[r] = 1
@@ -503,6 +541,13 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
     util = 0.0
     if makespan > 0:
         util = sum(busy_time) / (R * makespan)
+    if prb is not None:
+        # close the counter tracks at the makespan (no early truncation)
+        p_queue.add(makespan, 0.0)
+        for r in range(R):
+            p_occ[r].set(makespan, occ[r])
+        prb.gauge("serve/replica_util", unit="frac").set(makespan, util)
+        prb.flush()
     return ServingReport(
         workload=wl_name, scheduler="continuous", cost_model=cost.name,
         replicas=R, slots=S, n_requests=ls.n, duration=makespan,
@@ -527,7 +572,14 @@ class MonteCarloServingSimulator:
                  scheduler_factory: Callable[[], BatchScheduler],
                  batch: RequestBatch,
                  replicas: int = 1,
-                 slots: int = 8):
+                 slots: int = 8,
+                 probe=None):
+        """``probe`` enables per-seed instrumentation: seed ``s`` records
+        into ``probe.child(f"seed{s}")`` with the scalar simulator's
+        serve/* metric names, so
+        :meth:`repro.obs.probe.Probe.merged_child_series` yields
+        cross-seed mean/CI bands per metric.  Results stay bit-identical
+        with or without a probe."""
         if replicas < 1 or slots < 1:
             raise ValueError("need replicas >= 1 and slots >= 1")
         if not isinstance(batch, RequestBatch):
@@ -537,25 +589,28 @@ class MonteCarloServingSimulator:
         self.batch = batch
         self.replicas = replicas
         self.slots = slots
-        probe = scheduler_factory()
-        self.scheduler_name = probe.name
+        self.probe = probe
+        sched = scheduler_factory()
+        self.scheduler_name = sched.name
         cls = type(cost)
         self.fast_path = (
-            type(probe) is ContinuousBatchingScheduler
+            type(sched) is ContinuousBatchingScheduler
             and cls.decode_step_time is ServingCostModel.decode_step_time
             and cls.prefill_time is ServingCostModel.prefill_time
             and bool(np.all(np.diff(batch.t_arrive, axis=1) >= 0.0)))
 
     def _run_seed(self, k: int) -> ServingReport:
         b = self.batch
+        child = (self.probe.child(f"seed{b.seeds[k]}")
+                 if self.probe is not None else None)
         if self.fast_path:
             return _simulate_continuous_fast(
                 self.cost, b.t_arrive[k].tolist(), b.prompt[k].tolist(),
                 b.output[k].tolist(), self.replicas, self.slots,
-                f"{b.name}/seed{b.seeds[k]}")
+                f"{b.name}/seed{b.seeds[k]}", probe=child)
         return ServingSimulator(self.cost, self.scheduler_factory,
                                 b.workload(k), replicas=self.replicas,
-                                slots=self.slots).run()
+                                slots=self.slots, probe=child).run()
 
     def run(self) -> MonteCarloServingReport:
         reports = [self._run_seed(k) for k in range(self.batch.num_seeds)]

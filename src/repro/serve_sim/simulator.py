@@ -376,7 +376,9 @@ class ServingSimulator:
                  slots: int = 8,
                  record_events: bool = False,
                  phase_tasks: int = 0,
-                 engine: str = "fast"):
+                 engine: str = "fast",
+                 probe=None,
+                 probe_engine: bool = False):
         """``phase_tasks > 0`` switches from the ServiceLane express path
         to *full task-graph injection*: every prefill/decode phase is
         injected as a real task graph (``phase_tasks`` chained compute
@@ -386,7 +388,13 @@ class ServingSimulator:
         show intra-phase structure.  ``engine`` selects the injection
         engine: ``"fast"`` (array-backed :class:`DynamicSimulator` with
         :class:`GraphTemplate` instantiation, ~3-4x) or ``"dict"`` (the
-        general :class:`Simulator`, the parity baseline)."""
+        general :class:`Simulator`, the parity baseline).  ``probe`` (a
+        :class:`repro.obs.probe.Probe`) enables queue-depth/occupancy/
+        leap instrumentation; probes only read state, so instrumented
+        runs stay bit-identical.  ``probe_engine=True`` additionally
+        threads the probe into the embedded engine (per-event
+        completion counters — deeper but ~2x the instrumentation cost,
+        and the replica span tracks already cover the engine's view)."""
         if replicas < 1 or slots < 1:
             raise ValueError("need replicas >= 1 and slots >= 1")
         if phase_tasks < 0:
@@ -412,14 +420,49 @@ class ServingSimulator:
         self._lanes: List = []
         self._templates: Optional[Dict[Tuple[int, str], GraphTemplate]] = None
         self._tail_handlers: Dict[int, Callable[[float], None]] = {}
+        # Probe handles are bound once here; every hot-path site guards on
+        # a single ``is not None`` branch so disabled runs pay one branch.
+        # Enabled sites only bump plain-int accumulators and a shared
+        # countdown (``_obs_left``); every ``probe.sample_every``-th
+        # serving event, :meth:`_obs_tick` appends one aligned sample to
+        # every serving track.  That keeps the per-event cost to a few
+        # integer slot ops instead of a handle method call per metric.
+        self.probe = probe
+        if probe is not None:
+            self._p_queue = probe.counter("serve/queue_depth",
+                                          unit="requests")
+            self._p_completed = probe.counter("serve/completed",
+                                              unit="requests")
+            self._p_leaps = probe.counter("serve/leap_steps", unit="steps")
+            self._p_spec = probe.counter("serve/spec_leaps")
+            self._p_rollbacks = probe.counter("serve/rollbacks")
+            self._p_occ = [probe.gauge(f"serve/replica{r}/occupancy",
+                                       unit="slots")
+                           for r in range(replicas)]
+            self._obs_every = probe.sample_every
+            self._obs_left = self._obs_every
+            self._n_queue = 0
+            self._n_completed = 0
+            self._n_leap_steps = 0
+            self._n_spec = 0
+            self._n_rollbacks = 0
+        else:
+            self._p_queue = None
+            self._p_completed = None
+            self._p_leaps = None
+            self._p_spec = None
+            self._p_rollbacks = None
+            self._p_occ = None
+        eng_probe = probe if probe_engine else None
         if self.phase_tasks:
             if engine == "fast":
-                self._sim = DynamicSimulator()
+                self._sim = DynamicSimulator(probe=eng_probe)
                 self._templates = {}
             else:
-                self._sim = Simulator(on_complete=self._task_done)
+                self._sim = Simulator(on_complete=self._task_done,
+                                      probe=eng_probe)
         else:
-            self._sim = Simulator()
+            self._sim = Simulator(probe=eng_probe)
             # Express path: each replica is a ServiceLane (one phase at a
             # time on a dedicated single-server resource) — no Task
             # construction or dependency bookkeeping per decode step,
@@ -529,6 +572,13 @@ class ServingSimulator:
 
     def _arrive(self, req: Request, now: float) -> None:
         self.pending.append(req)
+        if self._p_queue is not None:
+            self._n_queue += 1
+            n = self._obs_left - 1
+            if n > 0:
+                self._obs_left = n
+            else:
+                self._obs_tick(now)
         for replica in self.replicas:
             if not replica.busy:
                 self._kick(replica, now)
@@ -556,6 +606,8 @@ class ServingSimulator:
         k = j + 1
         self._decode_k[idx] = k
         self._lanes[idx].truncate(bounds[j], info=n if k == 1 else (n, k))
+        if self._p_rollbacks is not None:
+            self._n_rollbacks += 1
 
     def _schedule_arrival(self, req: Request) -> None:
         self._sim.at(max(0.0, req.t_arrive),
@@ -605,6 +657,13 @@ class ServingSimulator:
                 self.events.append(("admit", req.rid))
         dur = self.cost.prefill_time(action.tokens)
         replica.busy = True
+        if self._p_queue is not None:
+            self._n_queue -= len(action.reqs)
+            n = self._obs_left - 1
+            if n > 0:
+                self._obs_left = n
+            else:
+                self._obs_tick(now)
         self._submit_phase(replica.index, dur,
                            self._phase_done[replica.index],
                            "prefill", tuple(rids))
@@ -697,6 +756,10 @@ class ServingSimulator:
         self._decode_k[idx] = k
         self._decode_tfirst[idx] = now + c0
         self._leap[idx] = (bounds, n) if bounds is not None else None
+        if self._p_leaps is not None and k > 1:
+            self._n_leap_steps += k
+            if speculate:
+                self._n_spec += 1
         replica.busy = True
         self._submit_phase(idx, dur, self._decode_done[idx], "decode",
                            n if k == 1 else (n, k))
@@ -748,8 +811,35 @@ class ServingSimulator:
             follow = self.workload.on_complete(fl.req, now)
             if follow is not None:
                 self._schedule_arrival(follow)
+        if self._p_completed is not None:
+            self._n_completed += len(finished)
+            n = self._obs_left - 1
+            if n > 0:
+                self._obs_left = n
+            else:
+                self._obs_tick(now)
         replica.busy = False
         self._kick(replica, now)
+
+    # ---- observability ---------------------------------------------------
+
+    def _obs_tick(self, now: float) -> None:
+        """Append one aligned sample to every serving track from the
+        plain-int accumulators the hot sites bump.  Runs every
+        ``probe.sample_every``-th instrumented event (and once at the end
+        of the run), so handles/series see raw appends — the site
+        countdown IS the decimation layer for serving metrics."""
+        self._obs_left = self._obs_every
+        for h, v in ((self._p_queue, self._n_queue),
+                     (self._p_completed, self._n_completed),
+                     (self._p_leaps, self._n_leap_steps),
+                     (self._p_spec, self._n_spec),
+                     (self._p_rollbacks, self._n_rollbacks)):
+            h.value = v = float(v)
+            h.series._append(now, v)
+        for r, h in zip(self.replicas, self._p_occ):
+            h.value = v = float(len(r.active))
+            h.series._append(now, v)
 
     # ---- entry point -----------------------------------------------------
 
@@ -764,6 +854,15 @@ class ServingSimulator:
                 sim_result.resource_busy.get(self._res(r.index), 0.0)
                 for r in self.replicas
             ) / (len(self.replicas) * sim_result.makespan)
+
+        probe = self.probe
+        if probe is not None:
+            # close the counter tracks at the makespan so they span the
+            # whole run, and record the end-of-run utilization level
+            self._obs_tick(sim_result.makespan)
+            probe.gauge("serve/replica_util",
+                        unit="frac").set(sim_result.makespan, util)
+            probe.flush()
 
         ls = self.lane_state
         ls.sort_by_rid()
@@ -786,8 +885,9 @@ class ServingSimulator:
 def simulate_serving(cost: ServingCostModel,
                      scheduler_factory: Callable[[], BatchScheduler],
                      workload: Workload, replicas: int = 1, slots: int = 8,
-                     record_events: bool = False) -> ServingReport:
+                     record_events: bool = False,
+                     probe=None) -> ServingReport:
     """One-shot convenience wrapper around :class:`ServingSimulator`."""
     return ServingSimulator(cost, scheduler_factory, workload,
                             replicas=replicas, slots=slots,
-                            record_events=record_events).run()
+                            record_events=record_events, probe=probe).run()
