@@ -10,6 +10,10 @@ Measures the virtual serving stack at the scale the ROADMAP asks about:
   * speculative leap — 10k requests under a scheduler that declares only
     the ``decode_stable`` contract, so every decode fusion takes the
     snapshot/rollback path;
+  * graph-mode speculative leap — the same decode_stable-only scheduler
+    with full task-graph injection on the fast engine: each leap books
+    one ``TemplateLane`` burst of per-step template instances and rolls
+    back by truncating the burst at a snapshot boundary;
   * Monte-Carlo seed batch — 16 seeds x 10k requests in one
     ``MonteCarloServingSimulator`` call on the fused continuous-batching
     fast path, reporting cross-seed mean and 95% CI for p99 TTFT;
@@ -98,6 +102,18 @@ def run() -> List[Tuple[str, float, str]]:
                  f"{spec.n_requests} reqs, "
                  f"{spec.n_requests / wall_spec:.0f} req/wall-s "
                  f"(decode_stable-only leap w/ rollback)"))
+
+    # graph-mode speculative leap: full task-graph fidelity, leaps booked
+    # as TemplateLane bursts with snapshot/rollback
+    t0 = time.perf_counter()
+    gspec = ServingSimulator(cost, SpeculativeContinuousScheduler,
+                             traffic(10_000), replicas=4, slots=8,
+                             phase_tasks=4).run()
+    wall_gspec = time.perf_counter() - t0
+    rows.append(("serve_sim_10k_taskgraph_speculative", wall_gspec * 1e6,
+                 f"{gspec.n_requests} reqs, "
+                 f"{gspec.n_requests / wall_gspec:.0f} req/wall-s "
+                 f"(burst leap w/ rollback, {4 * 2} tasks/phase)"))
 
     # seed-batched Monte-Carlo: 16 seeds through the fused fast path
     batch = poisson_workload_batch(300.0, 10_000,

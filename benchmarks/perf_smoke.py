@@ -1,7 +1,7 @@
 """CI perf-smoke: fail if simulation-core throughput regresses.
 
 Runs the DES and serve-sim microbenchmarks and enforces conservative
-floors — roughly two thirds of the throughput measured on the PR 7 tree
+floors — roughly two thirds of the throughput measured on the PR 8 tree
 on a quiet container — so ordinary CI-machine variance passes but a
 reintroduced O(n^2) hot path or per-task object churn fails loudly.
 All scenarios run with ``probe=None``, so these floors also guard the
@@ -9,13 +9,13 @@ observability layer's disabled-path contract (one dead branch per hot
 site, nothing else):
 
   * fifo static fast path (warm cache) >= 300k events/s
-    (seed dict engine: ~86k; measured: ~450-615k)
+    (seed dict engine: ~86k; measured: ~400-615k)
   * shared-channel burst, n=3200       >= 120k tasks/s
-    (seed: ~2.3k — the quadratic collapse; measured: ~190k)
+    (seed: ~2.3k — the quadratic collapse; measured: ~140-260k)
   * shared-channel flatness n=6400/200 >= 0.3
     (quadratic scaling gives ~0.12: completions per burst grow 32x while
     per-event cost also grows 32x)
-  * serve_sim 10k requests             >= 16k req/wall-s
+  * serve_sim 10k requests             >= 17k req/wall-s
     (seed: ~1.9k; measured: ~26k)
   * dynamic injection, fast engine     >= 420k events/s
     (PR 4's array-backed ``DynamicSimulator`` + template instantiation;
@@ -23,6 +23,15 @@ site, nothing else):
   * serve_sim 10k, speculative leap    >= 15k req/wall-s
     (a ``decode_stable``-only scheduler: every decode fusion takes the
     snapshot/rollback path; measured ~23k)
+  * serve_sim 10k, task-graph mode     >= 12k req/wall-s
+    (PR 8's ``TemplateLane`` graph serving on the fast engine, 4 chunks
+    + KV writes per phase; measured ~16-22k — the dict per-chunk engine
+    sustains ~3k and the pre-TemplateLane fast path ~11k on the same
+    scenario, so a lost burst/closed-form path fails loudly; the >= 2x
+    vs PR 4 headline itself is recorded in BENCH_pr8.json)
+  * serve_sim 10k, graph speculative   >= 11k req/wall-s
+    (task-graph mode under the ``decode_stable``-only scheduler: every
+    leap is one ``TemplateLane`` burst with snapshot rollback)
   * monte-carlo seed batch, 16 x 10k   >= 80k seed-requests/wall-s
     (PR 6's fused continuous-batching fast path at replicas=4 slots=32,
     300 rps Poisson; measured: ~108-128k — the scalar loop over the
@@ -44,11 +53,34 @@ FLOORS = {
     "fifo_static_warm_events_per_sec": 300_000.0,
     "shared_3200_tasks_per_sec": 120_000.0,
     "shared_flatness_6400_over_200": 0.3,
-    "serve_sim_requests_per_sec": 16_000.0,
+    "serve_sim_requests_per_sec": 17_000.0,
     "dynamic_injection_fast_events_per_sec": 420_000.0,
     "serve_sim_speculative_requests_per_sec": 15_000.0,
+    "serve_sim_taskgraph_requests_per_sec": 12_000.0,
+    "serve_sim_taskgraph_speculative_requests_per_sec": 11_000.0,
     "monte_carlo_seed_requests_per_sec": 80_000.0,
 }
+
+
+def _taskgraph_requests_per_sec(speculative: bool) -> float:
+    """10k requests in full task-graph mode on the fast engine
+    (``TemplateLane`` serving), best-of-2.  ``speculative`` swaps in the
+    ``decode_stable``-only scheduler so every leap takes the burst
+    snapshot/rollback path."""
+    from benchmarks.bench_serve_sim import SpeculativeContinuousScheduler
+    from benchmarks.perf_record import _serve_cost, _traffic
+    from repro.serve_sim import ContinuousBatchingScheduler, ServingSimulator
+
+    cost = _serve_cost()
+    sched = (SpeculativeContinuousScheduler if speculative
+             else ContinuousBatchingScheduler)
+    wall = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        rep = ServingSimulator(cost, sched, _traffic(), replicas=4,
+                               slots=8, phase_tasks=4).run()
+        wall = min(wall, time.perf_counter() - t0)
+    return rep.n_requests / wall
 
 
 def _monte_carlo_seed_requests_per_sec() -> float:
@@ -92,6 +124,10 @@ def main() -> int:
     spec = _serve_sim_10k_speculative()
     measured["serve_sim_speculative_requests_per_sec"] = \
         spec["requests_per_sec"]
+    measured["serve_sim_taskgraph_requests_per_sec"] = \
+        _taskgraph_requests_per_sec(speculative=False)
+    measured["serve_sim_taskgraph_speculative_requests_per_sec"] = \
+        _taskgraph_requests_per_sec(speculative=True)
     measured["monte_carlo_seed_requests_per_sec"] = \
         _monte_carlo_seed_requests_per_sec()
 

@@ -52,6 +52,7 @@ O(n^2) per burst of n concurrent transfers.)
 from __future__ import annotations
 
 import heapq
+from bisect import bisect_left
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -306,6 +307,22 @@ class ServiceLane:
             sim._events,
             (new_end, sim._seq, "lane", (self, self._handler, self.epoch)))
 
+    def _nonempty(self) -> bool:
+        return bool(self.starts)
+
+    def _merge(self, resource_busy: Dict[str, float],
+               layer_time: Dict[str, Tuple[float, float]]) -> float:
+        """Fold this lane's busy time and layer span into the run-level
+        aggregates; returns the lane's makespan contribution."""
+        res = self.resource
+        resource_busy[res] = resource_busy.get(res, 0.0) + self.busy_time
+        span = (self.starts[0], self.ends[-1])
+        cur = layer_time.get(res)
+        if cur is not None:
+            span = (min(cur[0], span[0]), max(cur[1], span[1]))
+        layer_time[res] = span
+        return self.ends[-1]
+
     def _materialize(self, tid0: int) -> List[TaskRecord]:
         name_fn = self.name_fn
         res = self.resource
@@ -316,6 +333,353 @@ class ServiceLane:
             out.append(TaskRecord(
                 Task(tid=tid0 + i, name=name, layer=res, resource=res,
                      duration=e - s, kind=k), s, e))
+        return out
+
+
+class TemplateLane:
+    """Graph-structured service lane: full per-task template records at
+    ServiceLane speed.
+
+    The serving simulator's task-graph mode submits one phase template
+    instance (chunked compute with KV/DMA sidecars) per scheduler
+    decision.  Running each chunk through the engine's event loop costs
+    O(chunks) heap events per phase — the entire gap between graph mode
+    and the express :class:`ServiceLane`.  But a phase template on
+    *dedicated* single-server FIFO resources is deterministic at
+    submission time: chunk chains serialize on the phase resource, and
+    sidecar tasks (KV writes) serialize in template order on theirs.  So
+    a TemplateLane schedules exactly **one completion event per phase**
+    (at the precomputed tail end) and stores the phase as a compact
+    entry; the full per-task schedule — including real DMA/compute
+    overlap across chunks and phases — is replayed lazily when the run's
+    aggregates or ``TaskRecord``s are read.
+
+    Speculative decode-leap support (the GraphTemplate epoch-snapshot
+    mechanism): :meth:`submit_burst` books ``K`` chained step instances
+    as one entry whose per-step boundary times are the snapshot points,
+    and :meth:`truncate` rolls the burst back to a boundary — the stale
+    completion event is invalidated via ``epoch`` exactly like
+    :meth:`ServiceLane.truncate`, and the tasks of every step after the
+    boundary are dropped before they ever materialize.
+
+    Contract (validated once per template): template tasks are
+    topologically ordered by local id, every task's resources are
+    dedicated to this lane, and the tail's dependency closure determines
+    the phase end (the caller precomputes it with the same left-to-right
+    chunk accumulation the general engines' chained events produce, so
+    parity with the dict engine is bit-exact).
+    """
+
+    __slots__ = ("sim", "resource", "busy", "epoch", "entries", "end",
+                 "step_durs", "_handler", "_fin", "_sched", "_checked")
+
+    def __init__(self, sim, resource: str,
+                 step_durs: Optional[Callable] = None):
+        """``step_durs(tpl, dur) -> per-task durations`` splits one burst
+        step's total duration at materialization time (bursts store only
+        their boundary times)."""
+        self.sim = sim
+        self.resource = resource
+        self.busy = False
+        self.epoch = 0
+        #: (template, t0, per-task durations | None, burst bounds | None)
+        self.entries: List[Tuple] = []
+        self.end = 0.0
+        self.step_durs = step_durs
+        self._handler: Optional[Callable[[float], None]] = None
+        self._fin = None
+        self._sched = None
+        #: template id -> (compute_res, sidecar_res) | None (see _chain_key)
+        self._checked: Dict[int, Optional[Tuple[str, str]]] = {}
+
+    def _check(self, tpl: GraphTemplate) -> None:
+        if id(tpl) in self._checked:
+            return
+        for i, dd in enumerate(tpl.deps):
+            for d in dd:
+                if d >= i:
+                    raise ValueError(
+                        "TemplateLane templates must be topologically "
+                        f"ordered by local id (task {i} depends on {d})")
+        self._checked[id(tpl)] = self._chain_key(tpl)
+
+    def submit(self, tpl: GraphTemplate, durations: Sequence[float],
+               end: float, handler: Callable[[float], None]) -> None:
+        """Start one instance of ``tpl`` now; ``end`` is the precomputed
+        absolute completion time of its tail and ``handler(now)`` runs
+        there."""
+        if self.busy:
+            raise RuntimeError(f"template lane {self.resource!r} is busy")
+        self._check(tpl)
+        sim = self.sim
+        self._fin = self._sched = None
+        self.entries.append((tpl, sim._now, durations, None))
+        self.end = end
+        self.busy = True
+        self._handler = handler
+        sim._seq += 1
+        heapq.heappush(sim._events,
+                       (end, sim._seq, "lane", (self, handler, self.epoch)))
+
+    def submit_burst(self, tpl: GraphTemplate, bounds,
+                     handler: Callable[[float], None]) -> None:
+        """Start ``len(bounds)`` chained step instances of ``tpl`` as one
+        entry — the speculative decode leap in graph mode.  ``bounds``
+        are the absolute per-step boundary (snapshot) times; step ``i``
+        spans ``(bounds[i-1], bounds[i]]`` and its per-task durations are
+        recovered at materialization via ``step_durs``.  One completion
+        event is scheduled at ``bounds[-1]``; ``handler`` fires there (or
+        at the truncated boundary after a rollback)."""
+        if self.busy:
+            raise RuntimeError(f"template lane {self.resource!r} is busy")
+        self._check(tpl)
+        sim = self.sim
+        self._fin = self._sched = None
+        self.entries.append((tpl, sim._now, None, bounds))
+        self.end = end = float(bounds[-1])
+        self.busy = True
+        self._handler = handler
+        sim._seq += 1
+        heapq.heappush(sim._events,
+                       (end, sim._seq, "lane", (self, handler, self.epoch)))
+
+    def truncate(self, new_end: float, info: object = None) -> None:
+        """Roll the in-flight burst back to the snapshot boundary at
+        ``new_end``: the steps before it ran exactly as fused, the steps
+        after it are invalidated before they materialize, and the stale
+        completion event is superseded via ``epoch`` (mirroring
+        :meth:`ServiceLane.truncate`).  ``info`` is accepted for
+        signature compatibility with the express lane (template records
+        carry their own structure)."""
+        if not self.busy:
+            raise RuntimeError(f"template lane {self.resource!r} has no "
+                               f"task to truncate")
+        if new_end >= self.end:
+            return
+        tpl, t0, durs, bounds = self.entries[-1]
+        if bounds is None:
+            raise RuntimeError("only burst submissions can be truncated")
+        j = bisect_left(bounds, new_end)
+        if j >= len(bounds) - 1:
+            return
+        self._fin = self._sched = None
+        self.entries[-1] = (tpl, t0, None, bounds[:j + 1])
+        self.end = end = float(bounds[j])
+        self.epoch += 1
+        sim = self.sim
+        sim._seq += 1
+        heapq.heappush(
+            sim._events,
+            (end, sim._seq, "lane", (self, self._handler, self.epoch)))
+
+    # ---- lazy schedule replay -------------------------------------------
+
+    def _run_instance(self, tpl: GraphTemplate, t0: float,
+                      durs: Sequence[float], starts: List[float],
+                      ends: List[float], free: Dict[str, float],
+                      busy: Dict[str, float],
+                      lay: Dict[str, List[float]]) -> float:
+        """Schedule one instance: template order is the dispatch order on
+        each (dedicated, single-server FIFO) resource, so every start is
+        ``max(dep ends, resource free)``.  Returns the max end."""
+        deps = tpl.deps
+        res_of = tpl.res_of
+        lay_of = tpl.layer_of
+        res_names = tpl.res_names
+        lay_names = tpl.layer_names
+        base = len(ends)
+        mk = t0
+        for i in range(tpl.n):
+            ready = t0
+            for d in deps[i]:
+                e = ends[base + d]
+                if e > ready:
+                    ready = e
+            rn = res_names[res_of[i]]
+            rf = free.get(rn, 0.0)
+            start = ready if ready > rf else rf
+            dur = durs[i]
+            end = start + dur
+            free[rn] = end
+            starts.append(start)
+            ends.append(end)
+            busy[rn] = busy.get(rn, 0.0) + dur
+            name = lay_names[lay_of[i]]
+            span = lay.get(name)
+            if span is None:
+                lay[name] = [start, end]
+            else:
+                if start < span[0]:
+                    span[0] = start
+                if end > span[1]:
+                    span[1] = end
+            if end > mk:
+                mk = end
+        return mk
+
+    def _chain_key(self, tpl: GraphTemplate):
+        """(compute_res, sidecar_res) if ``tpl`` is the serving chunk
+        chain + sidecar shape — compute chunks 0,2,4,... chained on one
+        resource, each feeding a sidecar task on a second — else None.
+        The shape admits closed-form aggregates: the compute chain is a
+        pure cumulative sum from ``t0`` and the sidecar serializes in
+        chunk order, so :meth:`_finalize` runs O(chunks) float ops per
+        instance with no per-task dict lookups."""
+        n = tpl.n
+        if (n < 2 or n % 2 or len(tpl.res_names) != 2
+                or tpl.tail != n - 2
+                or tpl.layer_names != tpl.res_names
+                or tpl.layer_of != tpl.res_of):
+            return None
+        for i in range(0, n, 2):
+            if (tpl.res_of[i] != 0 or tpl.res_of[i + 1] != 1
+                    or tpl.deps[i] != ((i - 2,) if i else ())
+                    or tpl.deps[i + 1] != (i,)):
+                return None
+        return tpl.res_names[0], tpl.res_names[1]
+
+    def _agg_chain(self, key: Tuple[str, str]):
+        """Closed-form aggregates for all-chain entries: one pass over
+        chunk durations, no per-task schedule arrays."""
+        r0, r1 = key
+        comp_busy = 0.0
+        dma_busy = 0.0
+        kvf = 0.0
+        kv_first = None
+        end = t0_first = self.entries[0][1]
+        step_durs = self.step_durs
+        for tpl, t0, durs, bounds in self.entries:
+            if bounds is None:
+                spans = ((t0, durs),)
+            else:
+                prev = t0
+                spans = []
+                for b in bounds:
+                    b = float(b)
+                    spans.append((prev, step_durs(tpl, b - prev)))
+                    prev = b
+            for s0, dd in spans:
+                e = s0
+                for i in range(0, len(dd), 2):
+                    d = dd[i]
+                    e += d
+                    comp_busy += d   # per-chunk, matching the general
+                    dk = dd[i + 1]   # engines' per-task accumulation
+                    s = e if e > kvf else kvf
+                    if kv_first is None:
+                        kv_first = s
+                    kvf = s + dk
+                    dma_busy += dk
+                end = e
+        busy = {r0: comp_busy, r1: dma_busy}
+        lay = {r0: [t0_first, end]}
+        if kv_first is not None:
+            lay[r1] = [kv_first, kvf]
+        return busy, lay, end if end > kvf else kvf
+
+    def _finalize(self):
+        """Cached run-level aggregates: (resource busy, layer spans,
+        makespan).  Chain-shaped lanes take the closed-form path; the
+        generic path replays the full schedule (and caches it for
+        :meth:`_schedule`)."""
+        fin = self._fin
+        if fin is None:
+            checked = self._checked
+            key = chain = checked[id(self.entries[0][0])]
+            if chain is not None:
+                for tpl, _, _, _ in self.entries:
+                    if checked[id(tpl)] != key:
+                        chain = None
+                        break
+            if chain is not None:
+                busy, lay, mk = self._agg_chain(chain)
+            else:
+                starts, ends, busy, lay, mk = self._replay()
+                self._sched = (starts, ends)
+            fin = self._fin = (busy, lay, mk)
+        return fin
+
+    def _replay(self):
+        """Full generic schedule replay over every entry."""
+        starts: List[float] = []
+        ends: List[float] = []
+        free: Dict[str, float] = {}
+        busy: Dict[str, float] = {}
+        lay: Dict[str, List[float]] = {}
+        mk = 0.0
+        run = self._run_instance
+        step_durs = self.step_durs
+        for tpl, t0, durs, bounds in self.entries:
+            if bounds is None:
+                e = run(tpl, t0, durs, starts, ends, free, busy, lay)
+            else:
+                prev = t0
+                e = t0
+                for b in bounds:
+                    b = float(b)
+                    e = run(tpl, prev, step_durs(tpl, b - prev),
+                            starts, ends, free, busy, lay)
+                    prev = b
+            if e > mk:
+                mk = e
+        return starts, ends, busy, lay, mk
+
+    def _schedule(self):
+        """Cached per-task (starts, ends) — the records path; computed on
+        demand so aggregate-only runs never pay the per-task replay."""
+        sched = self._sched
+        if sched is None:
+            starts, ends, _, _, _ = self._replay()
+            sched = self._sched = (starts, ends)
+        return sched
+
+    def _nonempty(self) -> bool:
+        return bool(self.entries)
+
+    def _merge(self, resource_busy: Dict[str, float],
+               layer_time: Dict[str, Tuple[float, float]]) -> float:
+        busy, lay, mk = self._finalize()
+        for rn, b in busy.items():
+            resource_busy[rn] = resource_busy.get(rn, 0.0) + b
+        for name, (s, e) in lay.items():
+            cur = layer_time.get(name)
+            if cur is not None:
+                s, e = min(cur[0], s), max(cur[1], e)
+            layer_time[name] = (s, e)
+        return mk if mk > self.end else self.end
+
+    def _materialize(self, tid0: int) -> List[TaskRecord]:
+        starts, ends = self._schedule()
+        out = []
+        k = 0
+        tid = tid0
+        for tpl, t0, durs, bounds in self.entries:
+            reps = 1 if bounds is None else len(bounds)
+            names, kinds = tpl.names, tpl.kinds
+            res_names, lay_names = tpl.res_names, tpl.layer_names
+            res_of, lay_of = tpl.res_of, tpl.layer_of
+            nbytes, flops = tpl.nbytes, tpl.flops
+            deps = tpl.deps
+            n = tpl.n
+            tail = tpl.tail
+            for r in range(reps):
+                base = tid
+                for i in range(n):
+                    dd = tuple(base + d for d in deps[i])
+                    if r and not dd:
+                        # burst steps chain: this step's roots follow the
+                        # previous step's tail
+                        dd = (base - n + tail,)
+                    s = starts[k]
+                    e = ends[k]
+                    out.append(TaskRecord(
+                        Task(tid=tid, name=names[i],
+                             layer=lay_names[lay_of[i]],
+                             resource=res_names[res_of[i]],
+                             duration=e - s, deps=dd, kind=kinds[i],
+                             nbytes=nbytes[i], flops=flops[i]), s, e))
+                    tid += 1
+                    k += 1
         return out
 
 
@@ -370,7 +734,7 @@ class Simulator:
         self._channels: Dict[str, _SharedChannel] = {}
         self._res_busy: Dict[str, float] = {}
         self._records: List[TaskRecord] = []
-        self._lanes: List[ServiceLane] = []
+        self._lanes: List = []  # ServiceLane | TemplateLane
         # event heap: (time, seq, kind, payload)
         #   kind 'done'  — a fifo task finished (payload = tid)
         #   kind 'chan'  — a shared channel may have completions
@@ -442,6 +806,14 @@ class Simulator:
         """Open a :class:`ServiceLane` on a dedicated single-server
         resource (see the class docstring for the contract)."""
         ln = ServiceLane(self, resource, name_fn)
+        self._lanes.append(ln)
+        return ln
+
+    def template_lane(self, resource: str,
+                      step_durs: Optional[Callable] = None) -> TemplateLane:
+        """Open a :class:`TemplateLane` — graph-structured phases with
+        one event per phase (see the class docstring for the contract)."""
+        ln = TemplateLane(self, resource, step_durs)
         self._lanes.append(ln)
         return ln
 
@@ -597,16 +969,9 @@ class Simulator:
             else:
                 layer_time[lay] = (r.start, r.end)
 
-        lanes = [ln for ln in self._lanes if ln.starts]
+        lanes = [ln for ln in self._lanes if ln._nonempty()]
         for ln in lanes:
-            makespan = max(makespan, ln.ends[-1])
-            self._res_busy[ln.resource] = (
-                self._res_busy.get(ln.resource, 0.0) + ln.busy_time)
-            span = (ln.starts[0], ln.ends[-1])
-            if ln.resource in layer_time:
-                s, e = layer_time[ln.resource]
-                span = (min(s, span[0]), max(e, span[1]))
-            layer_time[ln.resource] = span
+            makespan = max(makespan, ln._merge(self._res_busy, layer_time))
 
         if not lanes:
             return SimResult(makespan=makespan, records=self._records,
@@ -620,8 +985,9 @@ class Simulator:
             out = list(static_records)
             base = tid0
             for ln in lanes:
-                out.extend(ln._materialize(base))
-                base += len(ln.starts)
+                recs = ln._materialize(base)
+                out.extend(recs)
+                base += len(recs)
             return out
 
         return SimResult(makespan=makespan, records_thunk=materialize,
@@ -945,14 +1311,15 @@ class GraphTemplate:
     """
 
     __slots__ = ("n", "names", "kinds", "res_names", "layer_names",
-                 "res_of", "layer_of", "dependents", "indeg", "roots",
-                 "tail", "nbytes", "flops")
+                 "res_of", "layer_of", "deps", "dependents", "indeg",
+                 "roots", "tail", "nbytes", "flops")
 
     def __init__(self, tasks: Sequence[Task], tail: Optional[int] = None):
         n = len(tasks)
         self.n = n
         if [t.tid for t in tasks] != list(range(n)):
             raise ValueError("template tasks must use dense local ids 0..n-1")
+        self.deps = [tuple(t.deps) for t in tasks]
         self.names = [t.name for t in tasks]
         self.kinds = [t.kind for t in tasks]
         self.nbytes = [t.nbytes for t in tasks]
@@ -1184,7 +1551,7 @@ class DynamicSimulator:
         # per-template interned instantiation payloads (mapped resource and
         # layer ids + reusable extend tuples), keyed by id(template)
         self._tpl_ids: Dict[int, Tuple] = {}
-        self._lanes: List[ServiceLane] = []
+        self._lanes: List = []  # ServiceLane | TemplateLane
         self._now = 0.0
         self._seq = 0
         self._running = False
@@ -1217,6 +1584,14 @@ class DynamicSimulator:
         """Open a :class:`ServiceLane` (express path, same contract as on
         the dict engine — lanes only touch the shared event heap)."""
         ln = ServiceLane(self, resource, name_fn)
+        self._lanes.append(ln)
+        return ln
+
+    def template_lane(self, resource: str,
+                      step_durs: Optional[Callable] = None) -> TemplateLane:
+        """Open a :class:`TemplateLane` — full graph-structured phase
+        records at lane speed (same contract as on the dict engine)."""
+        ln = TemplateLane(self, resource, step_durs)
         self._lanes.append(ln)
         return ln
 
@@ -1609,16 +1984,9 @@ class DynamicSimulator:
                          for ri, name in enumerate(c.res_names)
                          if self._used[ri]}
 
-        lanes = [ln for ln in self._lanes if ln.starts]
+        lanes = [ln for ln in self._lanes if ln._nonempty()]
         for ln in lanes:
-            makespan = max(makespan, ln.ends[-1])
-            resource_busy[ln.resource] = (
-                resource_busy.get(ln.resource, 0.0) + ln.busy_time)
-            span = (ln.starts[0], ln.ends[-1])
-            if ln.resource in layer_time:
-                s, e = layer_time[ln.resource]
-                span = (min(s, span[0]), max(e, span[1]))
-            layer_time[ln.resource] = span
+            makespan = max(makespan, ln._merge(resource_busy, layer_time))
 
         tid_base = self._next_tid
 
@@ -1627,8 +1995,9 @@ class DynamicSimulator:
                    for i in range(n)]
             base = tid_base
             for ln in lanes:
-                out.extend(ln._materialize(base))
-                base += len(ln.starts)
+                recs = ln._materialize(base)
+                out.extend(recs)
+                base += len(recs)
             return out
 
         return SimResult(makespan=makespan, records_thunk=materialize,

@@ -20,7 +20,9 @@ Quickstart::
     print(report.summary())
 """
 from repro.serve_sim.capacity import SLO, CapacityPlan, CapacityPlanner
-from repro.serve_sim.cost import ServingCostModel, ServingCostModelBuilder
+from repro.serve_sim.cost import (PhaseProfile, ServingCostModel,
+                                  ServingCostModelBuilder,
+                                  profile_from_graph)
 from repro.serve_sim.monte_carlo import (MonteCarloServingReport,
                                          MonteCarloServingSimulator,
                                          SeedStats, monte_carlo_serving)
@@ -40,7 +42,8 @@ from repro.serve_sim.workload import (ClosedLoopWorkload, LengthDist,
 
 __all__ = [
     "SLO", "CapacityPlan", "CapacityPlanner",
-    "ServingCostModel", "ServingCostModelBuilder",
+    "PhaseProfile", "ServingCostModel", "ServingCostModelBuilder",
+    "profile_from_graph",
     "MonteCarloServingReport", "MonteCarloServingSimulator", "SeedStats",
     "monte_carlo_serving",
     "SCHEDULERS", "BatchScheduler", "BucketedPrefillScheduler",

@@ -23,11 +23,20 @@ training step" to "a serving fleet under traffic".
 
 :class:`ServingCostModel` itself is a plain dataclass, so tests and the
 capacity planner can also construct synthetic models directly.
+
+For the serving simulator's task-graph mode (``phase_tasks=N``), a model
+can additionally carry :class:`PhaseProfile`\\ s — per-chunk compute/DMA
+shares derived from the *compiled* prefill/decode graphs (real task
+kinds and durations grouped into N chunks), so injected phase graphs
+show the calibration graphs' actual compute/DMA interleaving instead of
+a synthetic equal split.  Profiles are shape-normalized: chunk durations
+are fractions of the phase total, so the affine surface still sets every
+phase's exact duration and profile-on metrics match profile-off ones.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.config import ModelConfig, ShapeConfig
 from repro.core.estimator import get_backend
@@ -39,8 +48,85 @@ from repro.core.taskgraph.compiler import (CompiledGraph, CompilePlan,
 
 
 @dataclass(frozen=True)
+class PhaseProfile:
+    """Compiled-graph chunk structure for one phase kind.
+
+    ``compute[i]`` is chunk i's share of the phase duration (shares sum
+    to 1); ``dma[i]`` is the duration of the KV/weight DMA overlapping
+    chunk i, as a fraction of the same total.  Built by
+    :meth:`ServingCostModelBuilder.model_for` from the calibration
+    graphs' real task kinds/durations via :func:`profile_from_graph`.
+    """
+
+    compute: Tuple[float, ...]
+    dma: Tuple[float, ...]
+
+    def __post_init__(self):
+        if not self.compute or len(self.compute) != len(self.dma):
+            raise ValueError("profile needs matching non-empty chunk tuples")
+
+    def chunk_durations(self, dur: float) -> Tuple[List[float], List[float]]:
+        """Scale the profile to a phase of total duration ``dur``.
+
+        The last compute chunk absorbs the sequential-accumulation
+        residue so the chunk chain's end lands exactly on ``dur`` — the
+        same exactness contract the affine equal split keeps.
+        """
+        comp = [dur * f for f in self.compute]
+        s = 0.0
+        for d in comp[:-1]:
+            s += d
+        comp[-1] = dur - s
+        return comp, [dur * f for f in self.dma]
+
+
+def profile_from_graph(graph: CompiledGraph, n_chunks: int) -> PhaseProfile:
+    """Group a compiled phase graph's tasks into ``n_chunks`` chunks.
+
+    Walks tasks in compiled order (the engines' deterministic dispatch
+    order), splitting compute/collective time greedily into chunks of
+    roughly equal compute and attributing each DMA to the chunk active
+    when it issues — preserving the graph's compute/DMA interleaving and
+    its exact compute-vs-DMA ratio.  All durations are normalized by the
+    total compute time, so ``chunk_durations(T)`` reproduces a phase of
+    total compute ``T`` with proportionally scaled DMA overlap.
+    """
+    if n_chunks < 1:
+        raise ValueError("n_chunks must be >= 1")
+    durs = graph.durations
+    kinds = [t.kind for t in graph.tasks]
+    total = sum(float(durs[i]) for i, k in enumerate(kinds) if k != "dma")
+    if total <= 0.0:
+        frac = 1.0 / n_chunks
+        return PhaseProfile(compute=(frac,) * n_chunks,
+                            dma=(0.0,) * n_chunks)
+    comp = [0.0] * n_chunks
+    dma = [0.0] * n_chunks
+    target = total / n_chunks
+    ci = 0
+    cum = 0.0
+    for i, k in enumerate(kinds):
+        d = float(durs[i])
+        if k == "dma":
+            dma[ci] += d
+        else:
+            comp[ci] += d
+            cum += d
+            if ci < n_chunks - 1 and cum >= (ci + 1) * target:
+                ci += 1
+    return PhaseProfile(compute=tuple(c / total for c in comp),
+                        dma=tuple(x / total for x in dma))
+
+
+@dataclass(frozen=True)
 class ServingCostModel:
-    """Affine per-request cost surface for one (model, system) pair."""
+    """Affine per-request cost surface for one (model, system) pair.
+
+    ``prefill_profile``/``decode_profile`` optionally describe how a
+    phase of a given total duration decomposes into compiled-graph
+    chunks (task-graph serving mode); ``None`` keeps the synthetic
+    equal split.
+    """
 
     name: str = "serving_cost"
     prefill_fixed: float = 0.0       # seconds per prefill launch
@@ -48,6 +134,8 @@ class ServingCostModel:
     decode_fixed: float = 0.0        # seconds per decode step (launch floor)
     decode_per_token: float = 1e-4   # seconds per active slot per step
     decode_per_ctx_token: float = 0.0   # seconds per cached token per step
+    prefill_profile: Optional[PhaseProfile] = None
+    decode_profile: Optional[PhaseProfile] = None
 
     def prefill_time(self, n_tokens: int) -> float:
         return self.prefill_fixed + self.prefill_per_token * max(0, n_tokens)
@@ -128,7 +216,12 @@ class ServingCostModelBuilder:
         self.stats["reannotations"] += len(hit)
         return {name: reannotate(g, system) for name, g in hit.items()}
 
-    def model_for(self, system: SystemDescription) -> ServingCostModel:
+    def model_for(self, system: SystemDescription,
+                  phase_chunks: int = 0) -> ServingCostModel:
+        """Fit the affine surface; with ``phase_chunks=N > 0`` also attach
+        :class:`PhaseProfile`\\ s derived from the large-shape calibration
+        graphs (``prefill_c2``/``decode_b2c2``) so the task-graph serving
+        mode injects the compiled chunk structure."""
         graphs = self._graphs(system)
         est = get_backend(self.backend)
         t = {name: est.estimate(g).step_time for name, g in graphs.items()}
@@ -139,6 +232,11 @@ class ServingCostModelBuilder:
             b1, b2, c1, c2)
         p_p = max(0.0, (t["prefill_c2"] - t["prefill_c1"]) / (c2 - c1))
         f_p = max(0.0, t["prefill_c1"] - p_p * c1)
+        pp = dp = None
+        if phase_chunks > 0:
+            pp = profile_from_graph(graphs["prefill_c2"], phase_chunks)
+            dp = profile_from_graph(graphs["decode_b2c2"], phase_chunks)
         return ServingCostModel(
             name=f"{system.name}", prefill_fixed=f_p, prefill_per_token=p_p,
-            decode_fixed=f_d, decode_per_token=p_d, decode_per_ctx_token=c_d)
+            decode_fixed=f_d, decode_per_token=p_d, decode_per_ctx_token=c_d,
+            prefill_profile=pp, decode_profile=dp)

@@ -222,8 +222,13 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
     Bit-identical output is the contract; ``tests/test_monte_carlo.py``
     enforces it.  ``probe`` records the same serve/* metric names as the
     scalar simulator (one child probe per seed upstream), guarded by a
-    single local None-check per site — simulation results are
-    bit-identical with or without it.
+    single local None-check per site.  Enabled sites bump plain-int
+    accumulators and a shared countdown (``obs_left``) — the same trick
+    the scalar path's ``_obs_tick`` uses — and every
+    ``probe.sample_every``-th instrumented event ``obs_tick`` appends
+    one aligned sample to every serving track (occupancy is read
+    straight off ``occ`` at tick time).  Simulation results are
+    bit-identical with or without the probe.
     """
     pf, pp = cost.prefill_fixed, cost.prefill_per_token
     df, dt, dc = (cost.decode_fixed, cost.decode_per_token,
@@ -234,6 +239,8 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
     INF = float("inf")
 
     prb = probe
+    n_queue = n_completed = n_leap_steps = n_spec = n_rollbacks = 0
+    obs_every = obs_left = 1
     if prb is not None:
         p_queue = prb.counter("serve/queue_depth", unit="requests")
         p_completed = prb.counter("serve/completed", unit="requests")
@@ -242,6 +249,7 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
         p_rollbacks = prb.counter("serve/rollbacks")
         p_occ = [prb.gauge(f"serve/replica{r}/occupancy", unit="slots")
                  for r in range(R)]
+        obs_every = obs_left = prb.sample_every
 
     rows: List[tuple] = []       # finished (rid, r, slot, admit, first, done)
     rows_append = rows.append
@@ -270,6 +278,21 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
     seqc = n_req                 # arrivals implicitly hold seq 0..n_req-1
     makespan = 0.0
 
+    def obs_tick(now: float) -> None:
+        # one aligned sample per serving track from the plain-int
+        # accumulators the hot sites bump (scalar-path ``_obs_tick``)
+        nonlocal obs_left
+        obs_left = obs_every
+        for h, v in ((p_queue, n_queue), (p_completed, n_completed),
+                     (p_leaps, n_leap_steps), (p_spec, n_spec),
+                     (p_rollbacks, n_rollbacks)):
+            h.value = v = float(v)
+            h.series._append(now, v)
+        for r in range(R):
+            h = p_occ[r]
+            h.value = v = float(occ[r])
+            h.series._append(now, v)
+
     def submit(r: int, now: float, dur: float, decode: bool) -> None:
         nonlocal busy_count, seqc
         busy[r] = True
@@ -281,7 +304,7 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
 
     def rollback(r: int, now: float) -> None:
         # mirrors ServingSimulator._rollback_leap + ServiceLane.truncate
-        nonlocal armed, seqc
+        nonlocal armed, seqc, n_rollbacks, obs_left
         bounds = leap[r]
         leap[r] = None
         armed -= 1
@@ -297,10 +320,13 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
         seqc += 1
         ekey[r] = (new_end, seqc, r)
         if prb is not None:
-            p_rollbacks.add(now)
+            n_rollbacks += 1
+            obs_left -= 1
+            if not obs_left:
+                obs_tick(now)
 
     def start_decode(r: int, now: float) -> None:
-        nonlocal armed
+        nonlocal armed, n_leap_steps, n_spec, obs_left
         n = occ[r]
         ctx = ctx_sum[r]
         k_min = thresh[r][0] // S - dec_total[r]
@@ -315,9 +341,12 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
                 leap[r] = bounds
                 armed += 1
             if prb is not None:
-                p_leaps.add(now, k_min)
+                n_leap_steps += k_min
                 if speculate:
-                    p_spec.add(now)
+                    n_spec += 1
+                obs_left -= 1
+                if not obs_left:
+                    obs_tick(now)
         else:
             dur = c0
             dec_k[r] = 1
@@ -325,6 +354,7 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
         submit(r, now, dur, True)
 
     def kick(r: int, now: float) -> None:
+        nonlocal n_queue, obs_left
         if pending and occ[r] < S:
             i = pending.popleft()
             s = heappop(free[r])
@@ -337,8 +367,10 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
             heappush(thresh[r], (dec_total[r] + outputs[i]) * S + s)
             ctx_sum[r] += p
             if prb is not None:
-                p_queue.add(now, -1)
-                p_occ[r].set(now, occ[r])
+                n_queue -= 1
+                obs_left -= 1
+                if not obs_left:
+                    obs_tick(now)
             submit(r, now, pf + pp * (p if p > 0 else 0), False)
             if armed:                   # admission invalidates sibling leaps
                 for r2 in range(R):
@@ -371,15 +403,20 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
                 j = bisect_right(times, bt, ai)
                 pending.extend(range(ai, j))
                 if prb is not None:
-                    for x in range(ai, j):
-                        tx = times[x]
-                        p_queue.add(tx if tx > 0.0 else 0.0, 1)
+                    n_queue += j - ai
+                    obs_left -= 1
+                    if not obs_left:
+                        tx = times[j - 1]
+                        obs_tick(tx if tx > 0.0 else 0.0)
                 ai = j
             else:
                 pending.append(ai)
                 ai += 1
                 if prb is not None:
-                    p_queue.add(na, 1)
+                    n_queue += 1
+                    obs_left -= 1
+                    if not obs_left:
+                        obs_tick(na)
                 if busy_count < R:
                     for r in range(R):
                         if not busy[r]:
@@ -442,8 +479,10 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
                 for s in done:
                     rows_append((req_r[s], r, s, ta_r[s], tf_r[s], now))
                 if prb is not None:
-                    p_completed.add(now, len(done))
-                    p_occ[r].set(now, occ[r])
+                    n_completed += len(done)
+                    obs_left -= 1
+                    if not obs_left:
+                        obs_tick(now)
         # ---- kick the now-idle replica (inline kick) ----
         if pending and occ[r] < S:
             i = pending.popleft()
@@ -457,8 +496,10 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
             p = prompts[i]
             ctx_sum[r] += p
             if prb is not None:
-                p_queue.add(now, -1)
-                p_occ[r].set(now, occ[r])
+                n_queue -= 1
+                obs_left -= 1
+                if not obs_left:
+                    obs_tick(now)
             dur = pf + pp * (p if p > 0 else 0)
             busy[r] = True
             busy_count += 1
@@ -507,9 +548,12 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
                     dur, _nb = _leap_spans(now, c0, base, dc, ctx, n,
                                            k_min, False, scratch)
                 if prb is not None:
-                    p_leaps.add(now, k_min)
+                    n_leap_steps += k_min
                     if leap[r] is not None:
-                        p_spec.add(now)
+                        n_spec += 1
+                    obs_left -= 1
+                    if not obs_left:
+                        obs_tick(now)
             else:
                 dur = c0
                 dec_k[r] = 1
@@ -542,10 +586,8 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
     if makespan > 0:
         util = sum(busy_time) / (R * makespan)
     if prb is not None:
-        # close the counter tracks at the makespan (no early truncation)
-        p_queue.add(makespan, 0.0)
-        for r in range(R):
-            p_occ[r].set(makespan, occ[r])
+        # close every serving track at the makespan (no early truncation)
+        obs_tick(makespan)
         prb.gauge("serve/replica_util", unit="frac").set(makespan, util)
         prb.flush()
     return ServingReport(

@@ -139,9 +139,14 @@ class BatchScheduler(abc.ABC):
     #: per-step boundaries, and rolls the fused task back to the first
     #: boundary at/after an arrival that lands mid-leap, replaying from
     #: there per the policy's real decisions — exact parity with per-step
-    #: simulation (tests/test_serve_sim.py).  Policies whose mid-batch
-    #: decisions depend on ``now``, on step count, or on queue depth while
-    #: no slot is free must leave this False.
+    #: simulation (tests/test_serve_sim.py).  The same contract powers
+    #: both serving representations: the express ``ServiceLane`` truncates
+    #: its fused task, and task-graph mode (``phase_tasks=N`` on the fast
+    #: engine) books the leap as one ``TemplateLane`` burst of per-step
+    #: template instances and truncates the burst at a snapshot boundary.
+    #: Policies whose mid-batch decisions depend on ``now``, on step
+    #: count, or on queue depth while no slot is free must leave this
+    #: False.
     decode_stable: bool = False
 
     @abc.abstractmethod

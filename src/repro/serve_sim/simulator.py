@@ -380,15 +380,21 @@ class ServingSimulator:
                  probe=None,
                  probe_engine: bool = False):
         """``phase_tasks > 0`` switches from the ServiceLane express path
-        to *full task-graph injection*: every prefill/decode phase is
-        injected as a real task graph (``phase_tasks`` chained compute
-        chunks, each followed by a KV-write DMA on a sibling resource)
-        whose chunk durations exact-split the phase cost, so serving
-        metrics match the express path to float round-off while traces
-        show intra-phase structure.  ``engine`` selects the injection
-        engine: ``"fast"`` (array-backed :class:`DynamicSimulator` with
-        :class:`GraphTemplate` instantiation, ~3-4x) or ``"dict"`` (the
-        general :class:`Simulator`, the parity baseline).  ``probe`` (a
+        to *full task-graph mode*: every prefill/decode phase carries a
+        real task graph (chained compute chunks, each followed by a
+        KV-write DMA on a sibling resource).  Chunk durations either
+        exact-split the phase cost or, when the cost model carries
+        compiled-graph :class:`~repro.serve_sim.cost.PhaseProfile`\\ s,
+        follow the compiled prefill/decode graphs' real compute/DMA
+        structure — either way the chunk chain's total is the exact phase
+        cost, so serving metrics match the express path to float
+        round-off while traces show intra-phase overlap.  ``engine``
+        selects the implementation: ``"fast"`` runs each replica as a
+        :class:`TemplateLane` (one event per phase, speculative decode
+        leaps with burst truncation — lane-path speed with full graph
+        records) while ``"dict"`` injects per-chunk tasks through the
+        general :class:`Simulator` and never speculates (the golden
+        per-step parity baseline).  ``probe`` (a
         :class:`repro.obs.probe.Probe`) enables queue-depth/occupancy/
         leap instrumentation; probes only read state, so instrumented
         runs stay bit-identical.  ``probe_engine=True`` additionally
@@ -453,11 +459,32 @@ class ServingSimulator:
             self._p_spec = None
             self._p_rollbacks = None
             self._p_occ = None
+        # Graph-mode chunk structure: compiled-graph profiles when the
+        # cost model carries them (chunk count comes from the profile),
+        # else the synthetic equal split into ``phase_tasks`` chunks.
+        pp = getattr(cost, "prefill_profile", None) if self.phase_tasks \
+            else None
+        dp = getattr(cost, "decode_profile", None) if self.phase_tasks \
+            else None
+        self._profiles = {"prefill": pp, "decode": dp}
+        self._chunks = {
+            "prefill": len(pp.compute) if pp is not None else self.phase_tasks,
+            "decode": len(dp.compute) if dp is not None else self.phase_tasks,
+        }
         eng_probe = probe if probe_engine else None
         if self.phase_tasks:
             if engine == "fast":
                 self._sim = DynamicSimulator(probe=eng_probe)
                 self._templates = {}
+                # Graph mode on the fast engine: each replica is a
+                # TemplateLane — full chunk/DMA records per phase, one
+                # heap event per phase (and per fused leap), and burst
+                # truncation for speculative rollback.  The dict engine
+                # stays per-chunk injection: the parity baseline.
+                self._lanes = [
+                    self._sim.template_lane(self._res(r),
+                                            step_durs=self._burst_step_durs)
+                    for r in range(replicas)]
             else:
                 self._sim = Simulator(on_complete=self._task_done,
                                       probe=eng_probe)
@@ -470,6 +497,11 @@ class ServingSimulator:
             self._lanes = [self._sim.lane(self._res(r),
                                           name_fn=self._name_fn(r))
                            for r in range(replicas)]
+        # Speculative leaps need a truncatable lane: the express
+        # ServiceLane or graph mode's TemplateLane.  Dict-engine graph
+        # mode (per-chunk injection) stays per-step — it is the golden
+        # baseline the leap path is verified against.
+        self._spec_ok = bool(self._lanes)
         # Completion handlers are bound once per replica, not per step.
         self._phase_done = [self._phase_handler(rep) for rep in self.replicas]
         self._decode_done = [self._decode_handler(rep)
@@ -521,7 +553,7 @@ class ServingSimulator:
     def _template(self, idx: int, kind: str) -> GraphTemplate:
         tpl = self._templates.get((idx, kind))
         if tpl is None:
-            c = self.phase_tasks
+            c = self._chunks[kind]
             res = self._res(idx)
             kv = res + ":kv"
             tasks = []
@@ -535,35 +567,58 @@ class ServingSimulator:
             self._templates[(idx, kind)] = tpl
         return tpl
 
+    def _phase_durs(self, kind: str, dur: float) -> List[float]:
+        """Per-task durations (compute chunk, KV DMA, ...) for one phase
+        of total duration ``dur`` — compiled-graph profile shares when the
+        cost model carries them, else the synthetic equal split."""
+        profile = self._profiles[kind]
+        c = self._chunks[kind]
+        durs = [0.0] * (2 * c)
+        if profile is None:
+            if c == 1:
+                chunk_durs = [dur]
+            else:
+                d = dur / c
+                chunk_durs = [d] * (c - 1)
+                chunk_durs.append(dur - d * (c - 1))
+        else:
+            chunk_durs, dma_durs = profile.chunk_durations(dur)
+            durs[1::2] = dma_durs
+        durs[0::2] = chunk_durs
+        return durs
+
+    def _burst_step_durs(self, tpl: GraphTemplate, dur: float) -> List[float]:
+        """TemplateLane burst materializer callback: bursts are always
+        fused decode steps, so split one step of total ``dur``."""
+        return self._phase_durs("decode", dur)
+
     def _submit_phase(self, idx: int, dur: float,
                       handler: Callable[[float], None],
                       kind: str, info: object) -> None:
-        c = self.phase_tasks
-        if not c:
+        if not self.phase_tasks:
             self._lanes[idx].submit(dur, handler, kind=kind, info=info)
             return
-        if c == 1:
-            chunk_durs = [dur]
-        else:
-            d = dur / c
-            chunk_durs = [d] * (c - 1)
-            chunk_durs.append(dur - d * (c - 1))
+        durs = self._phase_durs(kind, dur)
         sim = self._sim
-        if self._templates is not None:           # fast array-backed engine
-            durs = [0.0] * (2 * c)
-            durs[0::2] = chunk_durs
-            sim.inject_template(self._template(idx, kind), durs,
-                                on_done=handler)
+        if self._templates is not None:     # fast engine: TemplateLane
+            # Accumulate the tail end left-to-right over the chunk chain
+            # — bit-identical to the dict engine's chained chunk events.
+            end = sim.now
+            for i in range(0, len(durs), 2):
+                end += durs[i]
+            self._lanes[idx].submit(self._template(idx, kind), durs, end,
+                                    handler)
             return
-        res = self._res(idx)                      # dict engine baseline
+        res = self._res(idx)                # dict engine baseline
         kv = res + ":kv"
         tid = sim.next_task_id()
         prev = -1
-        for i, d in enumerate(chunk_durs):
-            sim.inject(Task(tid, f"{kind}/r{idx}/c{i}", res, res, d,
-                            deps=(prev,) if prev >= 0 else (), kind=kind))
-            sim.inject(Task(tid + 1, f"{kind}/r{idx}/kv{i}", kv, kv, 0.0,
-                            deps=(tid,), kind="dma"))
+        for i in range(0, len(durs), 2):
+            sim.inject(Task(tid, f"{kind}/r{idx}/c{i // 2}", res, res,
+                            durs[i], deps=(prev,) if prev >= 0 else (),
+                            kind=kind))
+            sim.inject(Task(tid + 1, f"{kind}/r{idx}/kv{i // 2}", kv, kv,
+                            durs[i + 1], deps=(tid,), kind="dma"))
             prev = tid
             tid += 2
         self._tail_handlers[prev] = handler
@@ -703,8 +758,9 @@ class ServingSimulator:
         # one task, accumulating the exact per-step costs.  When admission
         # *is* possible, a decode_stable policy still leaps, but
         # speculatively: the per-step boundaries are kept so an arrival
-        # landing mid-leap rolls the fused task back (express path only —
-        # injected task graphs fuse only under the blocked guarantee).
+        # landing mid-leap rolls the fused task back (ServiceLane
+        # truncation on the express path, TemplateLane burst truncation
+        # in fast-engine graph mode).
         k = 1
         speculate = False
         leap_ok = k_min > 1 and not self.record_events
@@ -715,11 +771,11 @@ class ServingSimulator:
             # guarantee identical decode steps, so the leap is exact with
             # no snapshot needed.
             k = k_min
-        elif (leap_ok and sched.decode_stable and not self.phase_tasks):
+        elif leap_ok and sched.decode_stable and self._spec_ok:
             # Admission possible: leap speculatively and arm rollback (an
-            # arrival may change the next-step decision).  Requires the
-            # express path — truncating an injected task graph is not
-            # supported, so graph mode runs these batches per-step.
+            # arrival may change the next-step decision).  Requires a
+            # truncatable lane — the dict-engine graph baseline has none
+            # and runs these batches per-step.
             k = k_min
             speculate = True
         # Exact per-step cost accumulation.  For the stock affine
@@ -761,8 +817,15 @@ class ServingSimulator:
             if speculate:
                 self._n_spec += 1
         replica.busy = True
-        self._submit_phase(idx, dur, self._decode_done[idx], "decode",
-                           n if k == 1 else (n, k))
+        if speculate and self.phase_tasks:
+            # Graph-mode leap: K chained step instances as ONE lane entry
+            # and one completion event — O(1) bookkeeping per leap; the
+            # per-step `bounds` double as the rollback snapshot points.
+            self._lanes[idx].submit_burst(self._template(idx, "decode"),
+                                          bounds, self._decode_done[idx])
+        else:
+            self._submit_phase(idx, dur, self._decode_done[idx], "decode",
+                               n if k == 1 else (n, k))
 
     def _finish_phase(self, replica: ReplicaState, now: float) -> None:
         replica.busy = False
@@ -886,8 +949,11 @@ def simulate_serving(cost: ServingCostModel,
                      scheduler_factory: Callable[[], BatchScheduler],
                      workload: Workload, replicas: int = 1, slots: int = 8,
                      record_events: bool = False,
+                     phase_tasks: int = 0, engine: str = "fast",
                      probe=None) -> ServingReport:
     """One-shot convenience wrapper around :class:`ServingSimulator`."""
     return ServingSimulator(cost, scheduler_factory, workload,
                             replicas=replicas, slots=slots,
-                            record_events=record_events, probe=probe).run()
+                            record_events=record_events,
+                            phase_tasks=phase_tasks, engine=engine,
+                            probe=probe).run()

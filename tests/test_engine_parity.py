@@ -305,6 +305,69 @@ def test_dynamic_engine_template_matches_individual_injection():
     assert res_fast.resource_busy == res_ref.resource_busy
 
 
+def test_template_lane_generic_template_matches_dict_injection():
+    """A TemplateLane phase with a *non-chain* template (diamond deps +
+    sidecar) must replay exactly what the dict engine computes for the
+    same tasks — the lane's deferred-schedule path vs live events.
+    Spans compare by name: lanes materialize per-lane task ids."""
+    tpl_tasks = [Task(0, "a", "rep", "rep", 0.0),
+                 Task(1, "b", "rep:kv", "rep:kv", 0.0, deps=(0,)),
+                 Task(2, "c", "rep", "rep", 0.0, deps=(0,)),
+                 Task(3, "d", "rep", "rep", 0.0, deps=(1, 2))]
+    tpl = GraphTemplate(tpl_tasks, tail=3)
+    durs = [1.0, 0.5, 0.7, 0.3]
+    # tail end, precomputed: a 0->1, b(kv) 1->1.5, c 1->1.7,
+    # d ready max(1.5, 1.7) -> 1.7->2.0
+    fired = []
+    fast = DynamicSimulator()
+    lane = fast.template_lane("rep")
+    for k, (t0, end) in enumerate(((0.5, 2.5), (4.0, 6.0))):
+        fast.at(t0, lambda k=k, end=end: lane.submit(
+            tpl, durs, end, lambda now, k=k: fired.append((k, now))))
+    res_fast = fast.run()
+
+    ref = Simulator()
+    ref_fired = []
+
+    def inject_all(base):
+        for t, d in zip(tpl_tasks, durs):
+            ref.inject(Task(base + t.tid, t.name, t.layer, t.resource, d,
+                            deps=tuple(base + x for x in t.deps),
+                            kind=t.kind))
+    for k, t0 in enumerate((0.5, 4.0)):
+        ref.at(t0, lambda k=k: inject_all(4 * k))
+    ref.on_complete = lambda t, now: (
+        ref_fired.append((t.tid // 4, now)) if t.tid % 4 == 3 else None)
+    res_ref = ref.run()
+    assert res_fast.makespan == res_ref.makespan
+    assert fired == ref_fired
+    by_name_fast = sorted((r.task.name, r.start, r.end)
+                          for r in res_fast.records)
+    by_name_ref = sorted((r.task.name, r.start, r.end)
+                         for r in res_ref.records)
+    assert by_name_fast == by_name_ref
+    assert res_fast.resource_busy == res_ref.resource_busy
+    assert res_fast.layer_time == res_ref.layer_time
+
+
+def test_template_lane_rejects_bad_usage():
+    sim = DynamicSimulator()
+    lane = sim.template_lane("rep")
+    bad = GraphTemplate([Task(0, "a", "rep", "rep", 0.0),
+                         Task(1, "b", "rep", "rep", 0.0)])
+    # forward dep: task 0 depending on a later id is rejected up front
+    fwd = GraphTemplate([Task(0, "a", "rep", "rep", 0.0, deps=(1,)),
+                         Task(1, "b", "rep", "rep", 0.0)])
+    with pytest.raises(ValueError):
+        lane.submit(fwd, [1.0, 1.0], 2.0, lambda now: None)
+    lane2 = sim.template_lane("rep2")
+    lane2.submit(bad, [1.0, 1.0], 1.0, lambda now: None)
+    with pytest.raises(RuntimeError):       # busy lane refuses a submit
+        lane2.submit(bad, [1.0, 1.0], 2.0, lambda now: None)
+    with pytest.raises(RuntimeError):       # non-burst entries can't roll back
+        lane2.truncate(0.5)
+
+
 def test_dynamic_engine_rejects_duplicate_and_unknown():
     sim = DynamicSimulator([Task(0, "a", "L", "r", 1.0)])
     with pytest.raises(ValueError):

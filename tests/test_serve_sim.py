@@ -191,6 +191,89 @@ def test_cost_builder_from_compiled_graphs():
     assert fast.decode_step_time(4, 512) <= cost.decode_step_time(4, 512)
 
 
+def _profiled_cost(phase_chunks=4):
+    from repro.core.config import get_arch
+    from repro.core.hw import SystemDescription, tpu_v5e_chip
+    from repro.core.taskgraph.builders import ShardPlan
+
+    cfg = get_arch("qwen1.5-0.5b").smoke
+    base = SystemDescription(name="chip", chip=tpu_v5e_chip(), torus=())
+    builder = ServingCostModelBuilder(cfg, shard=ShardPlan(data=1, model=1),
+                                      calib_batches=(1, 4),
+                                      calib_ctx=(128, 512))
+    return builder.model_for(base, phase_chunks=phase_chunks)
+
+
+def test_compiled_phase_profiles_from_builder():
+    """``model_for(system, phase_chunks=N)`` derives per-chunk profiles
+    from the compiled calibration graphs: N chunks, compute shares
+    summing to 1, and a chunked phase whose total duration is exactly
+    the phase cost (compiled-chunk exactness vs the affine split)."""
+    cost = _profiled_cost(phase_chunks=4)
+    for profile in (cost.prefill_profile, cost.decode_profile):
+        assert profile is not None
+        assert len(profile.compute) == len(profile.dma) == 4
+        assert sum(profile.compute) == pytest.approx(1.0, rel=1e-12)
+        assert all(f >= 0.0 for f in profile.compute + profile.dma)
+        # exact total: the last chunk absorbs the accumulation residue
+        for dur in (1.0, 0.0137, 3.14159e-3):
+            comp, dma = profile.chunk_durations(dur)
+            total = 0.0
+            for d in comp:
+                total += d
+            assert total == dur
+            assert len(dma) == 4
+    # compiled graphs move real bytes: some chunk overlaps a DMA
+    assert sum(cost.prefill_profile.dma) > 0.0
+    # default keeps the affine-only model
+    assert _profiled_cost(phase_chunks=0).decode_profile is None
+
+
+def test_profile_from_graph_groups_real_tasks():
+    """Chunking preserves the compiled graph's totals: compute and DMA
+    time land in chunks without loss, in compiled task order."""
+    from repro.serve_sim.cost import profile_from_graph
+
+    for n in (1, 2, 5):
+        profile = _profiled_cost(phase_chunks=n).decode_profile
+        assert len(profile.compute) == n
+        assert sum(profile.compute) == pytest.approx(1.0, rel=1e-12)
+
+
+def test_profiled_graph_mode_matches_affine_metrics():
+    """Compiled-chunk durations re-shape *intra-phase* structure only:
+    phase totals are unchanged, so serving metrics match the equal-split
+    graph mode to round-off, while both engines stay bit-identical."""
+    cost = _profiled_cost(phase_chunks=3)
+    plain = ServingCostModel(
+        name="plain", prefill_fixed=cost.prefill_fixed,
+        prefill_per_token=cost.prefill_per_token,
+        decode_fixed=cost.decode_fixed,
+        decode_per_token=cost.decode_per_token,
+        decode_per_ctx_token=cost.decode_per_ctx_token)
+    prof = ServingSimulator(cost, ContinuousBatchingScheduler, toy_poisson(150),
+                            replicas=2, slots=4, phase_tasks=3,
+                            engine="fast", record_events=True).run()
+    affine = ServingSimulator(plain, ContinuousBatchingScheduler,
+                              toy_poisson(150), replicas=2, slots=4,
+                              phase_tasks=3, engine="fast",
+                              record_events=True).run()
+    for ra, rb in zip(_metric_rows(affine), _metric_rows(prof)):
+        assert ra[0] == rb[0]
+        for va, vb in zip(ra[1:], rb[1:]):
+            assert vb == pytest.approx(va, rel=1e-9, abs=1e-12)
+    # profile-carrying runs keep exact fast-vs-dict engine parity
+    dict_ = ServingSimulator(cost, ContinuousBatchingScheduler,
+                             toy_poisson(150), replicas=2, slots=4,
+                             phase_tasks=3, engine="dict",
+                             record_events=True).run()
+    assert prof.duration == dict_.duration
+    assert _metric_rows(prof) == _metric_rows(dict_)
+    # and the compiled structure shows up: KV DMAs have real durations
+    kv = [r for r in prof.sim_result.records if r.task.kind == "dma"]
+    assert kv and any(r.end > r.start for r in kv)
+
+
 # ---------------------------------------------------------------------------
 # serving simulator
 # ---------------------------------------------------------------------------
@@ -279,27 +362,125 @@ def _metric_rows(rep):
     return [(m.rid, m.t_admit, m.t_first, m.t_done) for m in rep.requests]
 
 
+def _assert_graph_runs_identical(fast, dict_):
+    """Bit-exact equality between a TemplateLane run and the dict-engine
+    per-chunk injection baseline: metrics, per-task spans, and run-level
+    aggregates.  Task ids differ by construction (lanes materialize
+    per-lane, the dict engine interleaves injection across replicas), so
+    spans compare on (name, start, end)."""
+    assert fast.duration == dict_.duration
+    assert fast.output_tokens == dict_.output_tokens
+    assert _metric_rows(fast) == _metric_rows(dict_)
+    for stat in ("ttft", "tpot", "e2e", "queue_delay"):
+        assert getattr(fast, stat) == getattr(dict_, stat)
+    assert fast.replica_util == dict_.replica_util
+    fast_spans = sorted((r.task.name, r.start, r.end)
+                        for r in fast.sim_result.records)
+    dict_spans = sorted((r.task.name, r.start, r.end)
+                        for r in dict_.sim_result.records)
+    assert fast_spans == dict_spans
+    assert fast.sim_result.resource_busy == dict_.sim_result.resource_busy
+    assert fast.sim_result.layer_time == dict_.sim_result.layer_time
+
+
 @pytest.mark.parametrize("chunks", [1, 3])
 def test_graph_mode_fast_matches_dict_engine_exactly(chunks):
-    """Full task-graph injection: the array-backed engine must reproduce
-    the dict engine task-for-task and metric-for-metric (bit-identical —
-    same arithmetic, same event order)."""
+    """Per-step task-graph mode (record_events disables leaping on both
+    engines): the TemplateLane fast path must reproduce the dict engine
+    task-for-task and metric-for-metric (bit-identical — same
+    arithmetic, same event order)."""
+    fast = ServingSimulator(TOY, ContinuousBatchingScheduler, toy_poisson(250),
+                            replicas=2, slots=4, phase_tasks=chunks,
+                            engine="fast", record_events=True).run()
+    dict_ = ServingSimulator(TOY, ContinuousBatchingScheduler, toy_poisson(250),
+                             replicas=2, slots=4, phase_tasks=chunks,
+                             engine="dict", record_events=True).run()
+    assert fast.events == dict_.events
+    _assert_graph_runs_identical(fast, dict_)
+
+
+def test_graph_mode_blocked_fusion_matches_dict_engine_exactly():
+    """Blocked (non-speculative) decode leaps fuse identically on both
+    engines — hold_finished static batching never takes the speculative
+    path, so leaping runs stay bit-identical to the dict baseline."""
+    fast = ServingSimulator(TOY, StaticBatchScheduler, toy_poisson(250),
+                            replicas=2, slots=4, phase_tasks=3,
+                            engine="fast").run()
+    dict_ = ServingSimulator(TOY, StaticBatchScheduler, toy_poisson(250),
+                             replicas=2, slots=4, phase_tasks=3,
+                             engine="dict").run()
+    _assert_graph_runs_identical(fast, dict_)
+
+
+@pytest.mark.parametrize("chunks", [1, 4])
+def test_graph_mode_speculative_leap_matches_dict_per_step(chunks):
+    """Graph-mode speculative leaps (TemplateLane bursts + rollback)
+    against the dict engine running the same batches per step: metrics
+    must agree to float round-off — the fused per-step boundaries use
+    the same arithmetic, accumulated in one pass."""
     fast = ServingSimulator(TOY, ContinuousBatchingScheduler, toy_poisson(250),
                             replicas=2, slots=4, phase_tasks=chunks,
                             engine="fast").run()
     dict_ = ServingSimulator(TOY, ContinuousBatchingScheduler, toy_poisson(250),
                              replicas=2, slots=4, phase_tasks=chunks,
                              engine="dict").run()
-    assert fast.duration == dict_.duration
+    assert fast.n_requests == dict_.n_requests
     assert fast.output_tokens == dict_.output_tokens
-    assert _metric_rows(fast) == _metric_rows(dict_)
-    for stat in ("ttft", "tpot", "e2e", "queue_delay"):
-        assert getattr(fast, stat) == getattr(dict_, stat)
-    fast_spans = sorted((r.task.tid, r.task.name, r.start, r.end)
-                        for r in fast.sim_result.records)
-    dict_spans = sorted((r.task.tid, r.task.name, r.start, r.end)
-                        for r in dict_.sim_result.records)
-    assert fast_spans == dict_spans
+    for ra, rb in zip(_metric_rows(dict_), _metric_rows(fast)):
+        assert ra[0] == rb[0]
+        for va, vb in zip(ra[1:], rb[1:]):
+            assert vb == pytest.approx(va, rel=1e-12, abs=1e-12)
+
+
+def test_graph_mode_scripted_rollback_matches_dict_per_step():
+    """Scripted mid-leap interventions in graph mode: arrivals land
+    while a TemplateLane burst is in flight, forcing truncation back to
+    a step boundary and per-step replay; the dict engine per-step run is
+    the ground truth."""
+    fast = simulate_serving(TOY, lambda: ScriptedInterveningScheduler(32),
+                            _light_traffic(), slots=8, phase_tasks=4,
+                            engine="fast")
+    dict_ = simulate_serving(TOY, lambda: ScriptedInterveningScheduler(32),
+                             _light_traffic(), slots=8, phase_tasks=4,
+                             engine="dict")
+    assert fast.n_requests == dict_.n_requests
+    assert fast.output_tokens == dict_.output_tokens
+    for ra, rb in zip(_metric_rows(dict_), _metric_rows(fast)):
+        assert ra[0] == rb[0]
+        for va, vb in zip(ra[1:], rb[1:]):
+            assert vb == pytest.approx(va, rel=1e-12, abs=1e-12)
+    # fusion must actually engage: far fewer materialized decode chunks
+    fast_decode = sum(1 for r in fast.sim_result.records
+                      if r.task.kind == "decode")
+    dict_decode = sum(1 for r in dict_.sim_result.records
+                      if r.task.kind == "decode")
+    assert fast_decode == dict_decode     # every truncated step replays
+
+
+def test_graph_mode_burst_truncation_white_box():
+    """An admission on replica 0 must truncate replica 1's in-flight
+    TemplateLane burst at the snapshot boundary: entries shrink, the
+    stale completion event is epoch-invalidated, and the truncated end
+    matches the boundary (the graph-mode mirror of the express-lane
+    sibling-admission test)."""
+    wl = toy_poisson(4)
+    sim = ServingSimulator(TOY, ContinuousBatchingScheduler, wl,
+                           replicas=2, slots=2, phase_tasks=2)
+    lane1 = sim._lanes[1]
+    tpl = sim._template(1, "decode")
+    bounds = [round(0.1 * i, 10) for i in range(1, 11)]
+    lane1.submit_burst(tpl, bounds, lambda now: None)
+    assert lane1.end == pytest.approx(1.0)
+    sim._leap[1] = (bounds, 2)
+    sim._decode_k[1] = 10
+    req = wl.requests[0]
+    sim._start_prefill(sim.replicas[0], Prefill((req,), req.prompt_tokens),
+                       now=0.25)
+    assert sim._leap[1] is None                    # disarmed
+    assert sim._decode_k[1] == 3                   # boundary 0.3 = step 3
+    assert lane1.end == pytest.approx(0.3)         # burst truncated
+    assert lane1.epoch == 1                        # stale completion voided
+    assert len(lane1.entries[-1][3]) == 3          # 3 snapshot steps kept
 
 
 def test_graph_mode_matches_express_lane_metrics():
