@@ -1,0 +1,167 @@
+"""CI chaos-smoke: fault-injection serving must stay deterministic and
+cheap.
+
+Two gates:
+
+  * **Determinism** — a seeded 8-replica chaos scenario (MTBF/MTTR crash
+    churn + retry/backoff/deadline) run twice end-to-end (scalar
+    ``ServingSimulator`` and the fused Monte-Carlo path) produces
+    bit-identical availability / goodput / abandonment numbers and
+    per-request rows, and the two paths agree with each other.
+  * **Overhead** — threading the fault machinery through the fused
+    10k-request scenario with *no* fault profile attached costs < 10%
+    vs the pre-fault fast path (the ``faults=None`` branches must stay
+    out of the hot loop).  CI containers see background load spikes, so
+    the estimate is the min of two noise-robust estimators over
+    alternating-order pairs (median of per-pair ratios, ratio of
+    best-of-N walls) — additive noise inflates both, never deflates.
+
+Exit code 0 on pass, 1 on any violation.
+"""
+from __future__ import annotations
+
+import os
+import statistics
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+MAX_OVERHEAD_PCT = 10.0
+PAIRS = 5
+
+
+def _chaos_reports():
+    from repro.serve_sim import (ContinuousBatchingScheduler, FailureModel,
+                                 LengthDist, MonteCarloServingSimulator,
+                                 RetryPolicy, poisson_workload_batch,
+                                 simulate_serving)
+
+    from benchmarks.perf_record import _serve_cost
+
+    cost = _serve_cost()
+    failures = FailureModel(mtbf=5.0, mttr=0.8, seed=7, horizon=120.0)
+    retry = RetryPolicy(max_attempts=4, backoff=0.02, deadline=30.0)
+    batch = poisson_workload_batch(
+        120.0, 2000, prompt=LengthDist(mean=512, cv=0.6),
+        output=LengthDist(mean=96, cv=0.5), seeds=4)
+    scalar = simulate_serving(cost, ContinuousBatchingScheduler,
+                              batch.workload(0), replicas=8, slots=8,
+                              failures=failures, retry=retry,
+                              fault_seed=(failures.seed, int(batch.seeds[0])))
+    mc = MonteCarloServingSimulator(cost, ContinuousBatchingScheduler, batch,
+                                    replicas=8, slots=8, failures=failures,
+                                    retry=retry)
+    assert mc.fast_path, "chaos scenario must be fast-path eligible"
+    return scalar, mc.run()
+
+
+def _fingerprint(rep):
+    return (rep.n_requests, rep.duration, rep.output_tokens, rep.n_offered,
+            rep.n_failures, rep.n_retries, rep.n_abandoned, rep.n_shed,
+            rep.availability, rep.goodput_rps, rep.attempt_rps,
+            rep.abandonment_rate, rep.ttft.p99, rep.e2e.p99,
+            tuple((m.rid, m.replica, m.slot, m.t_admit, m.t_done)
+                  for m in rep.requests))
+
+
+def _determinism_gate() -> bool:
+    s1, m1 = _chaos_reports()
+    s2, m2 = _chaos_reports()
+    ok = True
+    if _fingerprint(s1) != _fingerprint(s2):
+        print("FAIL: scalar chaos run not bit-identical across runs")
+        ok = False
+    if [_fingerprint(r) for r in m1.reports] != \
+            [_fingerprint(r) for r in m2.reports]:
+        print("FAIL: Monte-Carlo chaos run not bit-identical across runs")
+        ok = False
+    if _fingerprint(m1.reports[0]) != _fingerprint(s1):
+        print("FAIL: fused seed-0 report != scalar path report")
+        ok = False
+    if not any(r.n_failures for r in m1.reports):
+        print("FAIL: chaos scenario injected no failures")
+        ok = False
+    a = m1.stat("availability")
+    print(f"chaos determinism OK: {s1.n_failures} failures, "
+          f"{s1.n_retries} retries, {s1.n_abandoned} abandoned on seed 0; "
+          f"availability mean={a.mean:.4f} "
+          f"ci=[{a.ci_lo:.4f}, {a.ci_hi:.4f}] over {len(m1.reports)} seeds")
+    return ok
+
+
+def _overhead_gate() -> bool:
+    from repro.serve_sim import ReplicaFault, compile_faults
+    from repro.serve_sim.monte_carlo import _simulate_continuous_fast
+
+    from benchmarks.perf_record import _serve_cost, _traffic
+
+    cost = _serve_cost()
+    wl = _traffic()
+    times = [r.t_arrive for r in wl.requests]
+    prompts = [r.prompt_tokens for r in wl.requests]
+    outputs = [r.output_tokens for r in wl.requests]
+    # armed but never firing during traffic: the one window opens long
+    # after the last completion, so every per-event fault gate runs while
+    # the simulated outcome stays that of a fault-free run
+    armed = compile_faults([ReplicaFault(0, 1.0e6, 1.0e6 + 1.0)], replicas=4)
+
+    def fused(faults):
+        t0 = time.perf_counter()
+        rep = _simulate_continuous_fast(cost, times, prompts, outputs, 4, 8,
+                                        "chaos", faults=faults)
+        return time.perf_counter() - t0, rep
+
+    # sanity: arming the machinery must not perturb the simulation
+    _, r_off = fused(None)
+    _, r_on = fused(armed)
+    same = (r_off.duration == r_on.duration
+            and r_off.output_tokens == r_on.output_tokens
+            and r_off.ttft.p99 == r_on.ttft.p99
+            and r_on.n_failures == 0 and r_on.availability == 1.0)
+    if not same:
+        print("FAIL: armed-but-idle fault schedule changed the simulation")
+        return False
+
+    # alternating-order pairs; two noise-robust estimators, take the min
+    # (additive load spikes inflate both, never deflate them)
+    on_walls, off_walls, ratios = [], [], []
+    for i in range(PAIRS):
+        if i % 2 == 0:
+            off, _ = fused(None)
+            on, _ = fused(armed)
+        else:
+            on, _ = fused(armed)
+            off, _ = fused(None)
+        on_walls.append(on)
+        off_walls.append(off)
+        ratios.append(on / off)
+    med = (statistics.median(ratios) - 1.0) * 100.0
+    best = (min(on_walls) / min(off_walls) - 1.0) * 100.0
+    overhead = min(med, best)
+    rps = len(times) / min(off_walls)
+    print(f"fused no-fault: {rps:,.0f} req/s (best); armed-machinery "
+          f"overhead median={med:.1f}% best-of={best:.1f}% "
+          f"-> {overhead:.1f}%")
+    ok = True
+    if overhead > MAX_OVERHEAD_PCT:
+        print(f"FAIL: fault-injection overhead {overhead:.1f}% > "
+              f"{MAX_OVERHEAD_PCT:.0f}% on the no-fault scenario")
+        ok = False
+    if rps < 80_000:
+        print(f"FAIL: fused no-fault path {rps:,.0f} req/s < 80,000 req/s "
+              "floor — fault branches leaked into the hot loop")
+        ok = False
+    return ok
+
+
+def main() -> int:
+    ok = _determinism_gate()
+    ok = _overhead_gate() and ok
+    print("chaos smoke:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,21 +1,21 @@
-"""Machine-readable perf trajectory: writes ``BENCH_pr8.json``.
+"""Machine-readable perf trajectory: writes ``BENCH_pr9.json``.
 
-This PR extends the speculative decode-leap from the express
-``ServiceLane`` to full task-graph serving: graph mode on the fast engine
-books each leap as one ``TemplateLane`` burst of per-step template
-instances (O(1) per leap) and rolls back by truncating the burst at a
-snapshot boundary.  The headline metric is
-``serve_sim_10k_taskgraph.fast_requests_per_sec`` (acceptance: >= 2x the
-BENCH_pr4 9,200 req/s recording), plus a new
-``serve_sim_10k_taskgraph_speculative`` scenario exercising rollbacks
-under full graph fidelity::
+This PR adds fault-injection serving: seeded replica failures (MTBF /
+MTTR crash churn, slow brownouts, zone-correlated outages) injected as
+DES events, retry / backoff / deadline-abandonment on cancelled
+requests, and degraded-mode SLO accounting — all mirrored bit-exactly
+in the fused Monte-Carlo path.  The headline metric is the new
+``serve_sim_10k_chaos`` scenario (the 10k-request fused run under live
+MTBF=5s / MTTR=0.8s churn with retries); the companion gate is
+``benchmarks/chaos_smoke.py``, which bounds the *armed-but-idle* fault
+machinery at < 10% overhead on the no-fault fast path::
 
-    PYTHONPATH=src python benchmarks/run.py --json        # BENCH_pr8.json
+    PYTHONPATH=src python benchmarks/run.py --json        # BENCH_pr9.json
     PYTHONPATH=src python benchmarks/perf_record.py       # same, standalone
     PYTHONPATH=src python benchmarks/perf_record.py --trials 3   # medians
 
-``BASELINE_PR7`` is the ``current`` section of the committed
-``BENCH_pr7.json``; absolute numbers are machine-dependent, the *ratios*
+``BASELINE_PR8`` is the ``current`` section of the committed
+``BENCH_pr8.json``; absolute numbers are machine-dependent, the *ratios*
 are the tracked signal.  Paired comparisons (MC vs scalar loop, fast vs
 dict engine, probe-on vs probe-off) are measured interleaved in this
 process, so load drifts hit both sides.  The ``--trials N`` median mode
@@ -31,42 +31,44 @@ import sys
 import time
 from typing import Dict, List
 
-# The "current" section of BENCH_pr7.json, measured at ac595bd (PR 7).
-BASELINE_PR7: Dict = {
+# The "current" section of BENCH_pr8.json, measured at da7ef91 (PR 8).
+BASELINE_PR8: Dict = {
     "engine_fifo_events_per_sec": {
-        "dict": 125_841.0, "static_cold": 393_015.4,
-        "static_warm": 564_989.2},
+        "dict": 107_958.1, "static_cold": 322_154.0,
+        "static_warm": 523_779.8},
     "engine_shared_tasks_per_sec": {
-        "200": 280_389.3, "800": 259_470.8, "3200": 260_709.0,
-        "6400": 244_559.7},
+        "200": 257_392.0, "800": 235_371.5, "3200": 224_566.2,
+        "6400": 191_484.4},
     "engine_dynamic_injection_events_per_sec": {
-        "dict": 89_656.3, "fast": 638_447.1},
+        "dict": 77_442.6, "fast": 650_670.8},
     "what_if_points_per_sec": {
-        "roofline": 2_696.0, "analytic": 1_535.1, "des": 36.9},
-    "serve_sim_10k": {"wall_seconds": 0.3863, "requests_per_sec": 25_889.9},
+        "roofline": 1_939.3, "analytic": 1_299.2, "des": 31.7},
+    "serve_sim_10k": {"wall_seconds": 0.3688, "requests_per_sec": 27_112.8},
     "serve_sim_10k_taskgraph": {
-        "fast_wall_seconds": 0.8985, "dict_wall_seconds": 3.6731,
-        "fast_requests_per_sec": 11_129.1, "speedup_fast_vs_dict": 3.95},
+        "fast_wall_seconds": 0.5208, "dict_wall_seconds": 3.3543,
+        "fast_requests_per_sec": 19_199.9, "speedup_fast_vs_dict": 6.91},
     "serve_sim_10k_speculative": {
-        "wall_seconds": 0.4242, "requests_per_sec": 23_574.1},
+        "wall_seconds": 0.3896, "requests_per_sec": 25_670.1},
+    "serve_sim_10k_taskgraph_speculative": {
+        "wall_seconds": 0.5762, "requests_per_sec": 17_355.0},
     "monte_carlo": {
-        "mc_wall_seconds": 5.5763,
-        "scalar_loop_wall_seconds_est": 38.0284,
-        "mc_seed_requests_per_sec": 114_771.5,
-        "scalar_seed_requests_per_sec": 16_829.5,
-        "speedup_mc_vs_scalar_loop": 6.18,
-        "sweep_single_seed_seconds": 1.6773,
-        "sweep_64seed_seconds": 4.5811,
-        "sweep_64seed_cost_vs_single": 2.73},
+        "mc_wall_seconds": 6.2643,
+        "scalar_loop_wall_seconds_est": 35.1427,
+        "mc_seed_requests_per_sec": 102_166.7,
+        "scalar_seed_requests_per_sec": 18_211.5,
+        "speedup_mc_vs_scalar_loop": 5.67,
+        "sweep_single_seed_seconds": 1.6701,
+        "sweep_64seed_seconds": 4.3194,
+        "sweep_64seed_cost_vs_single": 2.59},
     "persistent_pool": {
-        "explore_serial_seconds": 0.2059,
-        "explore_first_call_seconds": 3.1586,
-        "explore_steady_call_seconds": 0.1354,
-        "steady_vs_first_speedup": 23.32},
+        "explore_serial_seconds": 0.2225,
+        "explore_first_call_seconds": 4.4181,
+        "explore_steady_call_seconds": 0.1296,
+        "steady_vs_first_speedup": 41.44},
     "obs_overhead": {
-        "off_wall_seconds": 0.4069, "sampled_wall_seconds": 0.4224,
-        "full_wall_seconds": 0.6051, "sampled_overhead_pct": 6.84,
-        "full_overhead_pct": 62.85},
+        "off_wall_seconds": 0.3916, "sampled_wall_seconds": 0.4106,
+        "full_wall_seconds": 0.6343, "sampled_overhead_pct": 5.35,
+        "full_overhead_pct": 61.99},
 }
 
 
@@ -196,6 +198,41 @@ def _serve_sim_10k_taskgraph_speculative() -> Dict[str, float]:
                                phase_tasks=4).run()
         wall = min(wall, time.perf_counter() - t0)
     return {"wall_seconds": wall, "requests_per_sec": rep.n_requests / wall}
+
+
+def _serve_sim_10k_chaos() -> Dict[str, float]:
+    """10k requests on the fused fast path under live fault injection:
+    MTBF=5s / MTTR=0.8s crash churn across 4 replicas with
+    retry/backoff/deadline on every cancelled request.  The recorded
+    availability / failure / retry counts are seeded and bit-stable;
+    ``benchmarks/chaos_smoke.py`` separately bounds the armed-but-idle
+    machinery cost on the no-fault scenario."""
+    import gc
+
+    from repro.serve_sim import FailureModel, RetryPolicy, compile_faults
+    from repro.serve_sim.monte_carlo import _simulate_continuous_fast
+
+    cost = _serve_cost()
+    wl = _traffic()
+    times = [r.t_arrive for r in wl.requests]
+    prompts = [r.prompt_tokens for r in wl.requests]
+    outputs = [r.output_tokens for r in wl.requests]
+    failures = FailureModel(mtbf=5.0, mttr=0.8, seed=7, horizon=120.0)
+    retry = RetryPolicy(max_attempts=4, backoff=0.02, deadline=30.0)
+    cf = compile_faults(failures, 4, seed=(failures.seed, 0))
+    wall = float("inf")
+    for _ in range(2):
+        gc.collect()
+        t0 = time.perf_counter()
+        rep = _simulate_continuous_fast(cost, times, prompts, outputs, 4, 8,
+                                        "chaos", faults=cf, retry=retry)
+        wall = min(wall, time.perf_counter() - t0)
+    return {"wall_seconds": wall,
+            "requests_per_sec": rep.n_requests / wall,
+            "availability": rep.availability,
+            "n_failures": rep.n_failures,
+            "n_retries": rep.n_retries,
+            "n_abandoned": rep.n_abandoned}
 
 
 def _monte_carlo() -> Dict[str, float]:
@@ -386,6 +423,7 @@ def collect(trials: int = 1) -> Dict:
             "serve_sim_10k_speculative": _serve_sim_10k_speculative(),
             "serve_sim_10k_taskgraph_speculative":
                 _serve_sim_10k_taskgraph_speculative(),
+            "serve_sim_10k_chaos": _serve_sim_10k_chaos(),
             "monte_carlo": _monte_carlo(),
             "persistent_pool": _persistent_pool(),
             "obs_overhead": _obs_overhead(),
@@ -419,20 +457,20 @@ def _speedups(base: Dict, cur: Dict) -> Dict:
     return out
 
 
-def write(path: str = "BENCH_pr8.json", trials: int = 1) -> Dict:
+def write(path: str = "BENCH_pr9.json", trials: int = 1) -> Dict:
     current = collect(trials=trials)
     doc = {
-        "pr": 8,
-        "description": "Graph-mode speculative leap: full-fidelity "
-                       "task-graph serving at lane-path speed via "
-                       "TemplateLane bursts with snapshot rollback and "
-                       "compiled-graph phase profiles",
+        "pr": 9,
+        "description": "Fault-injection serving: seeded replica "
+                       "failures, retry/timeout/backoff, degraded-mode "
+                       "SLOs, N+1 capacity planning under churn, and a "
+                       "hardened worker pool",
         "python": sys.version.split()[0],
         "platform": platform.platform(),
         "trials": trials,
-        "baseline_pr7": BASELINE_PR7,
+        "baseline_pr8": BASELINE_PR8,
         "current": current,
-        "speedup_vs_pr7": _speedups(BASELINE_PR7, current),
+        "speedup_vs_pr8": _speedups(BASELINE_PR8, current),
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=False)
@@ -451,9 +489,9 @@ if __name__ == "__main__":
         i = argv.index("--trials")
         trials = int(argv[i + 1])
         del argv[i:i + 2]
-    out = write(argv[0] if argv else "BENCH_pr8.json", trials=trials)
-    print(json.dumps({"speedup_vs_pr7": out["speedup_vs_pr7"],
-                      "taskgraph": out["current"]["serve_sim_10k_taskgraph"],
+    out = write(argv[0] if argv else "BENCH_pr9.json", trials=trials)
+    print(json.dumps({"speedup_vs_pr8": out["speedup_vs_pr8"],
+                      "chaos": out["current"]["serve_sim_10k_chaos"],
                       "taskgraph_speculative":
                           out["current"]["serve_sim_10k_taskgraph_speculative"],
                       }, indent=2))

@@ -51,7 +51,7 @@ import signal
 import sys
 import tempfile
 import warnings
-from time import perf_counter
+from time import perf_counter, sleep
 from typing import Callable, Dict, List, Optional, Sequence, TypeVar
 
 T = TypeVar("T")
@@ -188,6 +188,14 @@ class _WorkerFailure(Exception):
     """A worker died or a job failed inside it."""
 
 
+class PoolTimeout(Exception):
+    """A job exceeded the pool's ``job_timeout`` on every allowed attempt.
+
+    Deliberately *not* swallowed by :func:`parallel_map`'s serial
+    fallback: re-running a hung job in the parent would hang the parent —
+    the one failure mode the timeout exists to prevent."""
+
+
 class WorkerPool:
     """Persistent fork-based worker pool (see the module docstring).
 
@@ -196,15 +204,42 @@ class WorkerPool:
     :meth:`close` (or interpreter exit — an ``atexit`` hook closes the
     module-level pools).  A pool that loses a worker marks itself
     ``broken``; :func:`get_pool` then replaces it transparently.
+
+    Hardening (fault-injection serving runs fan out through this pool, so
+    it gets the same resilience treatment as the fleet it simulates):
+
+    * ``job_timeout`` (seconds per job) arms a liveness check — the
+      result-pipe select doubles as the heartbeat, so a worker that
+      neither answers nor dies is detected, SIGKILLed, reaped, and
+      replaced by a freshly forked worker that replays the pool's
+      ``begin`` payload and every broadcast store key;
+    * a timed-out or crashed job is retried on the fresh worker up to
+      ``job_retries`` times, after ``retry_backoff * 2**(attempt-1)``
+      seconds;
+    * a job that exhausts its retries is *quarantined*: a repeat crasher
+      runs once serially in the parent (surfacing a genuine error exactly
+      as a serial run would), while a repeat hanger aborts the map with
+      :class:`PoolTimeout` — the parent must never run it inline.
+
+    Probe counters: ``pool/timeouts``, ``pool/retries``,
+    ``pool/respawns``, ``pool/quarantined``.
     """
 
-    def __init__(self, workers: int):
+    def __init__(self, workers: int, job_timeout: Optional[float] = None,
+                 job_retries: int = 1, retry_backoff: float = 0.05):
         if workers < 2:
             raise ValueError("a pool needs workers >= 2")
+        if job_timeout is not None and job_timeout <= 0:
+            raise ValueError("job_timeout must be > 0 (or None)")
+        if job_retries < 0 or retry_backoff < 0:
+            raise ValueError("need job_retries >= 0 and retry_backoff >= 0")
         self.workers = workers
+        self.job_timeout = job_timeout
+        self.job_retries = job_retries
+        self.retry_backoff = retry_backoff
         self.broken = False
         self._procs: List[List] = []    # [pid, job file(w), result file(r)]
-        self._stored: set = set()       # keys broadcast to every worker
+        self._stored: Dict = {}         # key -> pickled store blob
 
     @property
     def spawned(self) -> bool:
@@ -213,6 +248,33 @@ class WorkerPool:
     @property
     def pids(self) -> List[int]:
         return [p[0] for p in self._procs]
+
+    def _fork_one(self) -> List:
+        """Fork one worker; returns its ``[pid, job file, result file]``."""
+        job_r, job_w = os.pipe()
+        res_r, res_w = os.pipe()
+        pid = os.fork()
+        if pid == 0:                        # ---- child ----
+            try:
+                os.close(job_w)
+                os.close(res_r)
+                # drop inherited ends of the other workers' pipes so
+                # their EOF-based shutdown still works (a respawn may
+                # inherit already-closed files — ignore those)
+                for p in self._procs:
+                    for fobj in (p[1], p[2]):
+                        try:
+                            fobj.close()
+                        except Exception:
+                            pass
+                os.environ[WORKER_ENV] = "1"
+                _worker_loop(os.fdopen(job_r, "rb"),
+                             os.fdopen(res_w, "wb"))
+            finally:
+                os._exit(0)
+        os.close(job_r)                     # ---- parent ----
+        os.close(res_w)
+        return [pid, os.fdopen(job_w, "wb"), os.fdopen(res_r, "rb")]
 
     def _spawn(self) -> None:
         prb = _active_probe()
@@ -223,31 +285,48 @@ class WorkerPool:
             warnings.filterwarnings(
                 "ignore", message=".*os.fork.*", category=RuntimeWarning)
             for _ in range(self.workers):
-                job_r, job_w = os.pipe()
-                res_r, res_w = os.pipe()
-                pid = os.fork()
-                if pid == 0:                    # ---- child ----
-                    try:
-                        os.close(job_w)
-                        os.close(res_r)
-                        # drop inherited ends of earlier workers' pipes so
-                        # their EOF-based shutdown still works
-                        for p in self._procs:
-                            p[1].close()
-                            p[2].close()
-                        os.environ[WORKER_ENV] = "1"
-                        _worker_loop(os.fdopen(job_r, "rb"),
-                                     os.fdopen(res_w, "wb"))
-                    finally:
-                        os._exit(0)
-                os.close(job_r)                 # ---- parent ----
-                os.close(res_w)
-                self._procs.append([pid, os.fdopen(job_w, "wb"),
-                                    os.fdopen(res_r, "rb")])
+                self._procs.append(self._fork_one())
         if prb is not None:                     # children never reach here
             prb.histogram("pool/spawn_seconds", unit="s").observe(
                 perf_counter() - t0)
             prb.counter("pool/forks").add(prb.elapsed(), self.workers)
+
+    def _kill_worker(self, w: int) -> None:
+        """SIGKILL and reap worker ``w`` (its files are closed first so a
+        blocked write in the child cannot outlive the reap)."""
+        pid, job_f, res_f = self._procs[w]
+        for fobj in (job_f, res_f):
+            try:
+                fobj.close()
+            except Exception:
+                pass
+        try:
+            os.kill(pid, signal.SIGKILL)
+        except (ProcessLookupError, OSError):
+            pass
+        try:
+            os.waitpid(pid, 0)
+        except (ChildProcessError, OSError):
+            pass
+
+    def _replace_worker(self, w: int, begin: bytes) -> None:
+        """Fork a replacement into slot ``w`` and replay the session
+        state it missed: every broadcast store key, then the current
+        map's ``begin`` payload."""
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message=".*fork.*", category=DeprecationWarning)
+            warnings.filterwarnings(
+                "ignore", message=".*os.fork.*", category=RuntimeWarning)
+            self._procs[w] = self._fork_one()
+        job_f = self._procs[w][1]
+        for blob in self._stored.values():
+            job_f.write(blob)
+        job_f.write(begin)
+        job_f.flush()
+        prb = _active_probe()
+        if prb is not None:
+            prb.counter("pool/respawns").add(prb.elapsed())
 
     def ensure(self, key, payload) -> None:
         """Broadcast ``payload`` under ``key`` to every worker, once per
@@ -273,7 +352,7 @@ class WorkerPool:
             self.broken = True
             self.close()
             raise _WorkerFailure("broadcast failed")
-        self._stored.add(key)
+        self._stored[key] = blob    # kept for respawned-worker replay
         if prb is not None:
             prb.counter("pool/broadcast_bytes", unit="bytes").add(
                 prb.elapsed(), len(blob) * len(self._procs))
@@ -307,6 +386,9 @@ class WorkerPool:
         h_job = (prb.histogram("pool/job_seconds", unit="s")
                  if prb is not None else None)
         sent = [0.0] * nw
+        cur: List[Optional[int]] = [None] * nw  # worker -> in-flight idx
+        deadline = [0.0] * nw        # per-worker heartbeat (job_timeout)
+        tries: Dict[int, int] = {}   # item idx -> failed attempts
 
         def send_item(w: int, idx: int) -> None:
             # pickle to bytes first: a payload that cannot be pickled is
@@ -320,11 +402,58 @@ class WorkerPool:
             job_f = self._procs[w][1]
             job_f.write(blob)
             job_f.flush()
+            cur[w] = idx
+            if self.job_timeout is not None:
+                deadline[w] = perf_counter() + self.job_timeout
             if h_job is not None:
                 sent[w] = perf_counter()
 
         sel = selectors.DefaultSelector()
         in_flight: set = set()       # workers with an unanswered item
+
+        def revive(w: int, kind: str) -> None:
+            """Worker ``w`` hung ("timeout") or died ("crash") mid-job:
+            kill + replace it, then retry its item on the fresh worker —
+            or quarantine the item once its retries are spent."""
+            idx = cur[w]
+            try:
+                sel.unregister(self._procs[w][2])
+            except (KeyError, ValueError):
+                pass
+            self._kill_worker(w)
+            self._replace_worker(w, begin)
+            sel.register(self._procs[w][2], selectors.EVENT_READ, w)
+            in_flight.discard(w)
+            cur[w] = None
+            if prb is not None and kind == "timeout":
+                prb.counter("pool/timeouts").add(prb.elapsed())
+            t = tries.get(idx, 0) + 1
+            tries[idx] = t
+            if t <= self.job_retries:
+                if self.retry_backoff > 0:
+                    sleep(self.retry_backoff * 2 ** (t - 1))
+                if prb is not None:
+                    prb.counter("pool/retries").add(prb.elapsed())
+                send_item(w, idx)
+                in_flight.add(w)
+                return
+            # quarantine: the item failed on job_retries + 1 fresh workers
+            if prb is not None:
+                prb.counter("pool/quarantined").add(prb.elapsed())
+            if kind == "timeout":
+                raise PoolTimeout(
+                    f"item {idx} exceeded job_timeout={self.job_timeout}s "
+                    f"on {t} attempts")
+            # a repeat crasher reproduces serially in the parent: a
+            # genuine error surfaces exactly as a serial run would
+            results[idx] = (fn(items[idx]) if common is None
+                            else fn(common, items[idx]))
+            done[idx] = True
+            q = queues[w]
+            if q:
+                send_item(w, q.pop())
+                in_flight.add(w)
+
         try:
             try:
                 for w in range(nw):
@@ -333,9 +462,25 @@ class WorkerPool:
                     sel.register(self._procs[w][2], selectors.EVENT_READ, w)
                     in_flight.add(w)
                 while in_flight:
-                    for key, _ in sel.select():
+                    if self.job_timeout is not None:
+                        now = perf_counter()
+                        events = sel.select(timeout=max(
+                            0.0, min(deadline[w] for w in in_flight) - now))
+                        if not events:          # heartbeat expired
+                            now = perf_counter()
+                            for w in [w for w in in_flight
+                                      if deadline[w] <= now]:
+                                revive(w, "timeout")
+                            continue
+                    else:
+                        events = sel.select()
+                    for key, _ in events:
                         w = key.data
-                        tag, idx, val = _load_result(self._procs[w][2])
+                        try:
+                            tag, idx, val = _load_result(self._procs[w][2])
+                        except (EOFError, OSError, pickle.PickleError):
+                            revive(w, "crash")
+                            break   # registrations changed: re-select
                         if tag == "err":
                             raise _WorkerFailure(val)
                         if h_job is not None:
@@ -343,6 +488,7 @@ class WorkerPool:
                         results[idx] = val
                         done[idx] = True
                         in_flight.discard(w)
+                        cur[w] = None
                         q = queues[w]
                         if q:
                             send_item(w, q.pop())
@@ -366,6 +512,16 @@ class WorkerPool:
                     self.close()
                 raise
         except _Unpicklable:
+            raise
+        except PoolTimeout:
+            # the surviving workers may still hold unanswered jobs whose
+            # late responses would desynchronise the next map: dispose
+            self.broken = True
+            try:
+                sel.close()
+            except Exception:
+                pass
+            self.close()
             raise
         except Exception:
             # A worker died (EOF/BrokenPipe) or a job failed inside one:
@@ -527,6 +683,8 @@ def parallel_map(fn: Callable, items: Sequence, workers: int = 1,
         return get_pool(workers).map(fn, items, common)
     except _Unpicklable:
         pass
+    except PoolTimeout:
+        raise               # never re-run a hung job in the parent
     except Exception:
         return _serial(fn, items, common)
     wrapped = fn if common is None else (lambda x: fn(common, x))

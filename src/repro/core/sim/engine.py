@@ -307,6 +307,30 @@ class ServiceLane:
             sim._events,
             (new_end, sim._seq, "lane", (self, self._handler, self.epoch)))
 
+    def cancel(self, new_end: float, info: object = None) -> None:
+        """Abort the in-flight task at ``new_end`` (a replica crash).
+
+        Like :meth:`truncate`, the recorded span shrinks to the abort
+        time and the stale completion event is invalidated via ``epoch``
+        — but no completion is rescheduled and the handler never fires:
+        the lane simply goes idle.  The partial span stays recorded
+        (work the replica really did before dying)."""
+        if not self.busy:
+            raise RuntimeError(f"lane {self.resource!r} has no task to "
+                               f"cancel")
+        old_end = self.ends[-1]
+        if new_end < self.starts[-1]:
+            raise ValueError(f"cannot cancel before the task start "
+                             f"({new_end} < {self.starts[-1]})")
+        if new_end < old_end:
+            self.ends[-1] = new_end
+            self.busy_time -= old_end - new_end
+        if info is not None:
+            self.infos[-1] = info
+        self.epoch += 1
+        self.busy = False
+        self._handler = None
+
     def _nonempty(self) -> bool:
         return bool(self.starts)
 
@@ -371,7 +395,8 @@ class TemplateLane:
     """
 
     __slots__ = ("sim", "resource", "busy", "epoch", "entries", "end",
-                 "step_durs", "_handler", "_fin", "_sched", "_checked")
+                 "step_durs", "_handler", "_fin", "_sched", "_checked",
+                 "_prev_end")
 
     def __init__(self, sim, resource: str,
                  step_durs: Optional[Callable] = None):
@@ -385,6 +410,7 @@ class TemplateLane:
         #: (template, t0, per-task durations | None, burst bounds | None)
         self.entries: List[Tuple] = []
         self.end = 0.0
+        self._prev_end = 0.0     # lane end excluding the in-flight entry
         self.step_durs = step_durs
         self._handler: Optional[Callable[[float], None]] = None
         self._fin = None
@@ -414,6 +440,7 @@ class TemplateLane:
         sim = self.sim
         self._fin = self._sched = None
         self.entries.append((tpl, sim._now, durations, None))
+        self._prev_end = self.end
         self.end = end
         self.busy = True
         self._handler = handler
@@ -436,6 +463,7 @@ class TemplateLane:
         sim = self.sim
         self._fin = self._sched = None
         self.entries.append((tpl, sim._now, None, bounds))
+        self._prev_end = self.end
         self.end = end = float(bounds[-1])
         self.busy = True
         self._handler = handler
@@ -471,6 +499,34 @@ class TemplateLane:
         heapq.heappush(
             sim._events,
             (end, sim._seq, "lane", (self, self._handler, self.epoch)))
+
+    def cancel(self, new_end: float, info: object = None) -> None:
+        """Abort the in-flight phase or burst (a replica crash).
+
+        A burst keeps the steps whose boundary precedes ``new_end`` —
+        they ran exactly as the per-step baseline would have run them —
+        and drops the rest; a plain phase entry is dropped whole before
+        it materializes (template entries are step-granular at best, so
+        graph mode records no partial-step work — the express
+        :class:`ServiceLane` keeps the truncated span instead; the
+        serving parity tests under faults therefore compare request
+        metrics, not task records).  The stale completion event is
+        invalidated via ``epoch`` and the lane goes idle."""
+        if not self.busy:
+            raise RuntimeError(f"template lane {self.resource!r} has no "
+                               f"task to cancel")
+        self._fin = self._sched = None
+        tpl, t0, durs, bounds = self.entries[-1]
+        j = bisect_left(bounds, new_end) if bounds is not None else 0
+        if j >= 1:
+            self.entries[-1] = (tpl, t0, None, bounds[:j])
+            self.end = float(bounds[j - 1])
+        else:
+            self.entries.pop()
+            self.end = self._prev_end
+        self.epoch += 1
+        self.busy = False
+        self._handler = None
 
     # ---- lazy schedule replay -------------------------------------------
 
@@ -735,6 +791,7 @@ class Simulator:
         self._res_busy: Dict[str, float] = {}
         self._records: List[TaskRecord] = []
         self._lanes: List = []  # ServiceLane | TemplateLane
+        self._void: set = set()   # tids whose pending 'done' was cancelled
         # event heap: (time, seq, kind, payload)
         #   kind 'done'  — a fifo task finished (payload = tid)
         #   kind 'chan'  — a shared channel may have completions
@@ -820,6 +877,55 @@ class Simulator:
     def next_task_id(self) -> int:
         """A fresh task id (monotone counter above every existing id)."""
         return self._next_tid
+
+    def cancel_tasks(self, tids: Iterable[int]) -> None:
+        """Cancel uncompleted tasks mid-run (a replica crash in the
+        serving simulator's dict-graph mode).
+
+        Queued and dependency-blocked tasks are dropped before they
+        start; an in-flight task's record is truncated at the current
+        time (work really done before the crash stays recorded), its
+        pending completion event is voided, and its server freed.
+        Cancelled tasks count as completed for the run's termination
+        check but never reach ``on_complete`` or release dependents.
+        FIFO resources only — a bandwidth-shared channel would need a
+        rate re-plan for the surviving tasks."""
+        if not self._running:
+            raise RuntimeError("cancel_tasks is only valid during run()")
+        now = self._now
+        started_res = []
+        for tid in tids:
+            if tid in self._completed_ids or tid not in self.tasks:
+                continue
+            res = self.tasks[tid].resource
+            if self._spec(res).mode == "shared":
+                raise NotImplementedError(
+                    "cancel_tasks on bandwidth-shared resources")
+            queued = False
+            q = self._queues.get(res)
+            if q:
+                for i, (_, qt) in enumerate(q):
+                    if qt == tid:
+                        q[i] = q[-1]
+                        q.pop()
+                        heapq.heapify(q)
+                        queued = True
+                        break
+            if not queued and self._n_deps.get(tid, 0) == 0:
+                # started: truncate its record, void the pending 'done'
+                for r in reversed(self._records):
+                    if r.task.tid == tid:
+                        if r.end > now:
+                            self._res_busy[res] -= r.end - now
+                            r.end = now
+                        break
+                self._active[res] -= 1
+                self._void.add(tid)
+                started_res.append(res)
+            self._n_deps[tid] = 0
+            self._completed_ids.add(tid)
+        for res in started_res:
+            self._drain(res)
 
     # ------------------------------------------------------------------
     # Event loop internals
@@ -912,10 +1018,14 @@ class Simulator:
             p_chan = prb.counter("engine/chan_completions")
 
         events = self._events
+        void = self._void
         while events:
             self._now, _, kind, payload = heapq.heappop(events)
             if kind == "done":
                 tid = payload
+                if void and tid in void:
+                    void.discard(tid)     # cancelled mid-flight
+                    continue
                 t = self.tasks[tid]
                 self._active[t.resource] -= 1
                 self._complete(tid)

@@ -23,12 +23,16 @@ from repro.serve_sim.capacity import SLO, CapacityPlan, CapacityPlanner
 from repro.serve_sim.cost import (PhaseProfile, ServingCostModel,
                                   ServingCostModelBuilder,
                                   profile_from_graph)
+from repro.serve_sim.faults import (CompiledFaults, FailureModel,
+                                    ReplicaFault, RetryPolicy,
+                                    compile_faults)
 from repro.serve_sim.monte_carlo import (MonteCarloServingReport,
                                          MonteCarloServingSimulator,
                                          SeedStats, monte_carlo_serving)
 from repro.serve_sim.scheduler import (SCHEDULERS, BatchScheduler,
                                        BucketedPrefillScheduler,
                                        ContinuousBatchingScheduler,
+                                       LoadSheddingScheduler, Shed,
                                        StaticBatchScheduler, make_scheduler)
 from repro.serve_sim.simulator import (LaneStateArrays, LatencyStats,
                                        RequestMetrics, ServingReport,
@@ -44,10 +48,13 @@ __all__ = [
     "SLO", "CapacityPlan", "CapacityPlanner",
     "PhaseProfile", "ServingCostModel", "ServingCostModelBuilder",
     "profile_from_graph",
+    "CompiledFaults", "FailureModel", "ReplicaFault", "RetryPolicy",
+    "compile_faults",
     "MonteCarloServingReport", "MonteCarloServingSimulator", "SeedStats",
     "monte_carlo_serving",
     "SCHEDULERS", "BatchScheduler", "BucketedPrefillScheduler",
-    "ContinuousBatchingScheduler", "StaticBatchScheduler", "make_scheduler",
+    "ContinuousBatchingScheduler", "LoadSheddingScheduler", "Shed",
+    "StaticBatchScheduler", "make_scheduler",
     "LaneStateArrays", "LatencyStats", "RequestMetrics", "ServingReport",
     "ServingSimulator", "simulate_serving",
     "ClosedLoopWorkload", "LengthDist", "OpenLoopWorkload", "Request",

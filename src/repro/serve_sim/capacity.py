@@ -28,26 +28,38 @@ from repro.serve_sim.workload import Workload
 
 @dataclass(frozen=True)
 class SLO:
-    """Latency targets (seconds); ``inf`` disables a term."""
+    """Latency targets (seconds); ``inf`` disables a term.
+
+    ``availability`` is a degraded-mode floor (fraction of replica-seconds
+    up over the run; 0.0 disables it): under a fault profile a deployment
+    only counts as feasible when it also keeps the fleet available — this
+    is what makes the planner's answer an N+1-style redundancy sizing
+    rather than a pure latency sizing."""
 
     ttft_p99: float = math.inf
     tpot_p99: float = math.inf
     e2e_p99: float = math.inf
+    availability: float = 0.0
 
     def satisfied_by(self, report: ServingReport) -> bool:
         return (report.ttft.p99 <= self.ttft_p99
                 and report.tpot.p99 <= self.tpot_p99
-                and report.e2e.p99 <= self.e2e_p99)
+                and report.e2e.p99 <= self.e2e_p99
+                and report.availability >= self.availability)
 
     def satisfied_by_ci(self, report) -> bool:
         """CI-conservative attainment for a seed-batched
         :class:`~repro.serve_sim.monte_carlo.MonteCarloServingReport`:
         every constrained metric must meet its target at the *upper* 95%
-        confidence bound of the cross-seed mean, so one lucky draw cannot
-        declare a configuration feasible."""
+        confidence bound of the cross-seed mean (availability at the
+        *lower* bound), so one lucky draw cannot declare a configuration
+        feasible."""
         return (report.stat("ttft_p99").ci_hi <= self.ttft_p99
                 and report.stat("tpot_p99").ci_hi <= self.tpot_p99
-                and report.stat("e2e_p99").ci_hi <= self.e2e_p99)
+                and report.stat("e2e_p99").ci_hi <= self.e2e_p99
+                and (self.availability <= 0.0
+                     or report.stat("availability").ci_lo
+                     >= self.availability))
 
     def __str__(self) -> str:
         terms = []
@@ -57,6 +69,8 @@ class SLO:
             terms.append(f"TPOT p99<={self.tpot_p99 * 1e3:.1f}ms")
         if math.isfinite(self.e2e_p99):
             terms.append(f"E2E p99<={self.e2e_p99:.1f}s")
+        if self.availability > 0.0:
+            terms.append(f"avail>={self.availability:.3%}")
         return " & ".join(terms) or "no SLO"
 
 
@@ -96,7 +110,15 @@ class CapacityPlanner:
     def __init__(self, cost: ServingCostModel,
                  scheduler_factory: Callable[[], BatchScheduler],
                  workload_factory: Callable[[], Workload],
-                 slo: SLO, num_seeds: int = 1):
+                 slo: SLO, num_seeds: int = 1,
+                 failures=None, retry=None):
+        """``failures``/``retry`` (see
+        :class:`~repro.serve_sim.faults.FailureModel` /
+        :class:`~repro.serve_sim.faults.RetryPolicy`) inject the same
+        fault profile into every probe, so the plan answers "what is the
+        smallest deployment that meets the SLO *while replicas churn*" —
+        with an ``SLO.availability`` floor and ``num_seeds > 1`` this is
+        an N+1 redundancy bisection against the cross-seed CI."""
         if num_seeds < 1:
             raise ValueError("need num_seeds >= 1")
         self.cost = cost
@@ -104,6 +126,8 @@ class CapacityPlanner:
         self.workload_factory = workload_factory
         self.slo = slo
         self.num_seeds = num_seeds
+        self.failures = failures
+        self.retry = retry
 
     def _evaluate(self, replicas: int, slots: int):
         if self.num_seeds > 1:
@@ -120,10 +144,12 @@ class CapacityPlanner:
                                  f"planner wants {self.num_seeds}")
             return MonteCarloServingSimulator(
                 self.cost, self.scheduler_factory, batch,
-                replicas=replicas, slots=slots).run()
+                replicas=replicas, slots=slots,
+                failures=self.failures, retry=self.retry).run()
         return simulate_serving(self.cost, self.scheduler_factory,
                                 self.workload_factory(),
-                                replicas=replicas, slots=slots)
+                                replicas=replicas, slots=slots,
+                                failures=self.failures, retry=self.retry)
 
     def _feasible(self, report) -> bool:
         if self.num_seeds > 1:

@@ -35,7 +35,7 @@ phase's exact duration and profile-on metrics match profile-off ones.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.config import ModelConfig, ShapeConfig
@@ -145,6 +145,24 @@ class ServingCostModel:
             return 0.0
         return (self.decode_fixed + self.decode_per_token * n_active
                 + self.decode_per_ctx_token * max(0, total_ctx))
+
+    def scaled(self, factor: float) -> "ServingCostModel":
+        """A copy with every cost coefficient multiplied by ``factor``.
+
+        ``factor > 1`` models a uniformly slower system — the brownout
+        what-if behind degraded-mode capacity planning (what does the SLO
+        look like if the fleet runs at half speed?); ``factor < 1`` a
+        faster chip variant.  Profiles are shape-normalized fractions, so
+        they carry over unchanged."""
+        if factor <= 0:
+            raise ValueError("factor must be > 0")
+        return replace(
+            self, name=f"{self.name}*{factor:g}",
+            prefill_fixed=self.prefill_fixed * factor,
+            prefill_per_token=self.prefill_per_token * factor,
+            decode_fixed=self.decode_fixed * factor,
+            decode_per_token=self.decode_per_token * factor,
+            decode_per_ctx_token=self.decode_per_ctx_token * factor)
 
 
 def _solve_decode(t11: float, t21: float, t22: float,

@@ -1,0 +1,268 @@
+"""Seeded fault injection for the virtual serving simulator.
+
+The ROADMAP's million-user deployment is planned today under a
+failure-free assumption; this module removes it at the concept phase,
+the same way the paper's virtual models remove the "hardware exists"
+assumption.  A :class:`FailureModel` draws per-replica failure windows
+(MTBF/MTTR exponentials, crash or slow-degrade modes, optional
+correlated zone outages) from a seeded generator;
+:func:`compile_faults` normalizes either a model or an explicit list of
+:class:`ReplicaFault` windows into a :class:`CompiledFaults` event
+schedule the serving simulator injects as DES events.  A
+:class:`RetryPolicy` governs what happens to requests in flight on a
+crashed replica: bounded retries with exponential backoff + seeded
+jitter, and per-request deadline abandonment.
+
+Determinism contract: the same ``(model, seed)`` pair produces the same
+windows bit-for-bit, and the scalar and fused Monte-Carlo serving paths
+share this module's event schedule, availability arithmetic, and jitter
+RNG stream — so availability/goodput under faults is bit-identical
+across paths (``tests/test_faults.py`` enforces it).
+
+Event ordering at equal timestamps (the tie-break contract audited by
+the parity tests): fault/repair events fire before arrivals, arrivals
+before retries, retries and completions in schedule order; within the
+fault schedule, a repair at time ``t`` precedes a failure at ``t``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+__all__ = [
+    "ReplicaFault", "FailureModel", "RetryPolicy", "CompiledFaults",
+    "compile_faults",
+]
+
+
+@dataclass(frozen=True)
+class ReplicaFault:
+    """One explicit failure window: ``replica`` is down (crash mode) or
+    degraded (slow mode) on ``[t_fail, t_repair)``."""
+
+    replica: int
+    t_fail: float
+    t_repair: float
+
+    def __post_init__(self):
+        if self.replica < 0:
+            raise ValueError("replica must be >= 0")
+        if not (0.0 <= self.t_fail < self.t_repair):
+            raise ValueError(
+                f"need 0 <= t_fail < t_repair, got "
+                f"[{self.t_fail}, {self.t_repair})")
+
+
+@dataclass(frozen=True)
+class FailureModel:
+    """Seeded per-replica failure process.
+
+    Each replica alternates up/down: up-times are exponential with mean
+    ``mtbf`` seconds, down-times exponential with mean ``mttr`` seconds,
+    drawn per replica (in replica order) from ``default_rng(seed)`` up
+    to ``horizon`` seconds of simulated time.
+
+    ``mode``:
+      * ``"crash"`` — the replica drops its in-flight requests (they are
+        retried per the :class:`RetryPolicy`) and admits nothing until
+        repair; downtime counts against availability.
+      * ``"slow"``  — a brownout: phases *started* during the window run
+        ``slow_factor`` times slower; nothing is cancelled and
+        availability stays 1.0 (the degradation shows up in the latency
+        percentiles instead).
+
+    ``zone_size > 1`` groups replicas into consecutive zones sharing one
+    outage process (modeling a rack/PSU domain): each outage takes down
+    the whole zone with probability ``correlated_p``, otherwise one
+    uniformly drawn member.
+    """
+
+    mtbf: float = 300.0
+    mttr: float = 10.0
+    mode: str = "crash"
+    slow_factor: float = 4.0
+    zone_size: int = 0
+    correlated_p: float = 0.0
+    seed: int = 0
+    horizon: float = 3600.0
+
+    def __post_init__(self):
+        if self.mtbf <= 0 or self.mttr <= 0:
+            raise ValueError("mtbf and mttr must be > 0")
+        if self.mode not in ("crash", "slow"):
+            raise ValueError(f"unknown failure mode {self.mode!r}")
+        if self.slow_factor < 1.0:
+            raise ValueError("slow_factor must be >= 1.0")
+        if not (0.0 <= self.correlated_p <= 1.0):
+            raise ValueError("correlated_p must be in [0, 1]")
+        if self.horizon <= 0:
+            raise ValueError("horizon must be > 0")
+
+    def windows(self, replicas: int, seed=None) -> List[ReplicaFault]:
+        """Draw the failure windows for ``replicas`` replicas.
+
+        ``seed`` overrides the model's own seed (the Monte-Carlo
+        simulator passes ``(self.seed, scenario_seed)`` so each seed
+        gets an independent but reproducible draw).
+        """
+        rng = np.random.default_rng(self.seed if seed is None else seed)
+        out: List[ReplicaFault] = []
+        if self.zone_size > 1:
+            zones = [list(range(z, min(z + self.zone_size, replicas)))
+                     for z in range(0, replicas, self.zone_size)]
+            for zone in zones:
+                t = float(rng.exponential(self.mtbf))
+                while t < self.horizon:
+                    d = float(rng.exponential(self.mttr))
+                    if rng.random() < self.correlated_p:
+                        victims = zone
+                    else:
+                        victims = [zone[int(rng.integers(len(zone)))]]
+                    for r in victims:
+                        out.append(ReplicaFault(r, t, t + d))
+                    t += d + float(rng.exponential(self.mtbf))
+        else:
+            for r in range(replicas):
+                t = float(rng.exponential(self.mtbf))
+                while t < self.horizon:
+                    d = float(rng.exponential(self.mttr))
+                    out.append(ReplicaFault(r, t, t + d))
+                    t += d + float(rng.exponential(self.mtbf))
+        return out
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """What happens to a request whose replica crashed under it.
+
+    Attempt ``a`` (1-based; the first failure makes ``a = 1``) is
+    re-enqueued after ``backoff * backoff_factor**(a-1)`` seconds,
+    multiplied by ``1 + jitter * u`` with ``u ~ U[0,1)`` from the seeded
+    fault RNG stream.  The request is abandoned when it has already
+    failed ``max_attempts`` times, or when the retry would land more
+    than ``deadline`` seconds after its original arrival.
+    """
+
+    max_attempts: int = 3
+    backoff: float = 0.05
+    backoff_factor: float = 2.0
+    jitter: float = 0.5
+    deadline: float = math.inf
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.backoff < 0 or self.backoff_factor < 1.0:
+            raise ValueError("need backoff >= 0 and backoff_factor >= 1")
+        if self.jitter < 0:
+            raise ValueError("jitter must be >= 0")
+        if self.deadline <= 0:
+            raise ValueError("deadline must be > 0")
+
+
+def _merge_windows(spans: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    """Union of possibly-overlapping ``(t_fail, t_repair)`` spans."""
+    spans.sort()
+    merged: List[Tuple[float, float]] = []
+    for lo, hi in spans:
+        if merged and lo <= merged[-1][1]:
+            if hi > merged[-1][1]:
+                merged[-1] = (merged[-1][0], hi)
+        else:
+            merged.append((lo, hi))
+    return merged
+
+
+class CompiledFaults:
+    """A normalized, per-run failure schedule.
+
+    ``events`` is the time-sorted DES injection list of ``(t, code, r)``
+    with code ``0`` = repair and ``1`` = failure — so a repair at time
+    ``t`` is processed before a failure at the same ``t`` (a replica
+    that flaps at one instant ends that instant *down*, never admits a
+    request for zero time).  Per-replica windows are pre-merged, so
+    fail/repair events strictly alternate per replica.
+
+    Both serving paths (scalar DES and fused Monte-Carlo) consume the
+    same instance, and both compute availability through
+    :meth:`availability` — one shared arithmetic, bit-identical results.
+    """
+
+    __slots__ = ("windows", "events", "mode", "slow_factor", "jitter_seed")
+
+    def __init__(self, windows: List[ReplicaFault], mode: str,
+                 slow_factor: float, jitter_seed) -> None:
+        self.windows = windows
+        self.mode = mode
+        self.slow_factor = slow_factor
+        self.jitter_seed = jitter_seed      # seeds the retry-jitter RNG
+        events: List[Tuple[float, int, int]] = []
+        for w in windows:
+            events.append((w.t_fail, 1, w.replica))
+            events.append((w.t_repair, 0, w.replica))
+        events.sort()
+        self.events = events
+
+    def rng(self) -> np.random.Generator:
+        """Fresh retry-jitter generator (one per simulation run)."""
+        return np.random.default_rng(self.jitter_seed)
+
+    def n_failures(self, makespan: float) -> int:
+        """Failure windows that began by ``makespan``."""
+        return sum(1 for w in self.windows if w.t_fail <= makespan)
+
+    def availability(self, makespan: float, replicas: int) -> float:
+        """Fraction of replica-seconds the fleet was up over the run.
+
+        Slow-degrade windows don't count as downtime (the replica is
+        still serving, just slower)."""
+        if self.mode != "crash" or makespan <= 0.0 or not self.windows:
+            return 1.0
+        down = 0.0
+        for w in self.windows:
+            lo = min(w.t_fail, makespan)
+            hi = min(w.t_repair, makespan)
+            if hi > lo:
+                down += hi - lo
+        return 1.0 - down / (replicas * makespan)
+
+
+FaultSpec = Union[FailureModel, Sequence[ReplicaFault]]
+
+
+def compile_faults(failures: FaultSpec, replicas: int,
+                   seed=None) -> Optional[CompiledFaults]:
+    """Normalize a fault spec into a :class:`CompiledFaults` schedule.
+
+    ``failures`` is a :class:`FailureModel` (windows drawn from its seed,
+    or from ``seed`` when given) or an explicit :class:`ReplicaFault`
+    sequence (deterministic — identical every Monte-Carlo seed).
+    Overlapping windows on one replica are merged.  Returns ``None`` for
+    an empty schedule so callers can skip the fault machinery entirely.
+    """
+    if isinstance(failures, FailureModel):
+        raw = failures.windows(replicas, seed=seed)
+        mode, slow_factor = failures.mode, failures.slow_factor
+        jitter_seed = failures.seed if seed is None else seed
+    else:
+        raw = list(failures)
+        mode, slow_factor = "crash", 1.0
+        jitter_seed = 0 if seed is None else seed
+    per_rep: dict = {}
+    for w in raw:
+        if not isinstance(w, ReplicaFault):
+            raise TypeError(f"expected ReplicaFault, got {type(w).__name__}")
+        if w.replica >= replicas:
+            raise ValueError(
+                f"fault window names replica {w.replica} but the "
+                f"simulation has {replicas}")
+        per_rep.setdefault(w.replica, []).append((w.t_fail, w.t_repair))
+    windows = [ReplicaFault(r, lo, hi)
+               for r in sorted(per_rep)
+               for lo, hi in _merge_windows(per_rep[r])]
+    if not windows:
+        return None
+    return CompiledFaults(windows, mode, slow_factor, jitter_seed)

@@ -51,11 +51,13 @@ from collections import deque
 from dataclasses import dataclass
 from heapq import heappop, heappush
 from math import sqrt
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.serve_sim.cost import ServingCostModel
+from repro.serve_sim.faults import (FailureModel, RetryPolicy,
+                                    compile_faults)
 from repro.serve_sim.scheduler import (BatchScheduler,
                                        ContinuousBatchingScheduler)
 from repro.serve_sim.simulator import (LaneStateArrays, ServingReport,
@@ -152,6 +154,15 @@ class MonteCarloServingReport:
     def throughput_rps(self) -> SeedStats:
         return self.stats["throughput_rps"]
 
+    @property
+    def availability(self) -> SeedStats:
+        """Cross-seed replica availability (1.0 per seed without faults)."""
+        return self.stats["availability"]
+
+    @property
+    def abandonment_rate(self) -> SeedStats:
+        return self.stats["abandonment_rate"]
+
     def attainment(self, slo) -> float:
         """Fraction of seeds whose report satisfies ``slo``
         (anything with a ``satisfied_by(report) -> bool``)."""
@@ -165,7 +176,7 @@ class MonteCarloServingReport:
         o = self.stats["tpot_p99"]
         e = self.stats["e2e_p99"]
         x = self.stats["throughput_rps"]
-        return (
+        s = (
             f"mc-serve[{self.cost_model}|{self.scheduler}|{self.workload}] "
             f"{self.replicas}x{self.slots} slots, {self.num_seeds} seeds: "
             f"{x.mean:.2f} ± {x.half_width:.2f} req/s\n"
@@ -173,6 +184,16 @@ class MonteCarloServingReport:
             f"   TPOT p99 = {o.mean * 1e3:.2f} ± {o.half_width * 1e3:.2f} ms"
             f"   E2E p99 = {e.mean:.2f} ± {e.half_width:.2f} s"
             f"   (95% CI over seeds)")
+        if any(r.n_failures or r.n_retries or r.n_abandoned or r.n_shed
+               for r in self.reports):
+            a = self.stats["availability"]
+            ab = self.stats["abandonment_rate"]
+            at = self.stats["attempt_rps"]
+            s += (
+                f"\n  availability = {a.mean:.4%} ± {a.half_width:.4%}"
+                f"   abandonment = {ab.mean:.2%} ± {ab.half_width:.2%}"
+                f"   attempts = {at.mean:.2f} ± {at.half_width:.2f} req/s")
+        return s
 
 
 def _cross_seed_stats(reports: List[ServingReport]) -> Dict[str, SeedStats]:
@@ -184,13 +205,20 @@ def _cross_seed_stats(reports: List[ServingReport]) -> Dict[str, SeedStats]:
     stats["throughput_rps"] = SeedStats.of(
         [r.throughput_rps for r in reports])
     stats["duration"] = SeedStats.of([r.duration for r in reports])
+    # resilience metrics (degenerate — 1.0 / 0.0 / = throughput — when the
+    # run had no fault injection, so consumers can read them uniformly)
+    stats["availability"] = SeedStats.of([r.availability for r in reports])
+    stats["abandonment_rate"] = SeedStats.of(
+        [r.abandonment_rate for r in reports])
+    stats["attempt_rps"] = SeedStats.of([r.attempt_rps for r in reports])
     return stats
 
 
 def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
                               prompts: List[int], outputs: List[int],
                               replicas: int, slots: int,
-                              wl_name: str, probe=None) -> ServingReport:
+                              wl_name: str, probe=None,
+                              faults=None, retry=None) -> ServingReport:
     """Specialized replay of one open-loop trace under
     :class:`ContinuousBatchingScheduler` + the stock affine cost model.
 
@@ -229,6 +257,19 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
     one aligned sample to every serving track (occupancy is read
     straight off ``occ`` at tick time).  Simulation results are
     bit-identical with or without the probe.
+
+    ``faults`` (a pre-compiled
+    :class:`~repro.serve_sim.faults.CompiledFaults` or None) mirrors the
+    scalar path's fault injection event-for-event: fault events hold the
+    lowest sequence numbers (they beat arrivals — and everything else —
+    at a tied timestamp), arrivals beat retries, and retries order
+    against lane completions by ``(time, seq)`` exactly as the scalar
+    heap would pop them.  A crash commits the fused-leap steps whose
+    boundary precedes it, truncates the lane's busy time at the fault,
+    frees slots in slot order and re-enqueues their requests under
+    ``retry`` — every arithmetic operation in the same order as
+    ``ServingSimulator._fail``/``_retry_or_abandon``, so per-seed
+    reports stay bit-identical across the scalar and fused paths.
     """
     pf, pp = cost.prefill_fixed, cost.prefill_per_token
     df, dt, dc = (cost.decode_fixed, cost.decode_per_token,
@@ -237,6 +278,23 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
     n_req = len(times)
     scratch = _LeapScratch()
     INF = float("inf")
+
+    # ---- fault-injection state (all inert when faults is None) ----------
+    crash = faults is not None and faults.mode == "crash"
+    slow_factor = faults.slow_factor if faults is not None else 1.0
+    fault_events = faults.events if faults is not None else ()
+    n_fe = len(fault_events)
+    fi = 0
+    nft = fault_events[0][0] if n_fe else INF   # next fault-event time
+    down = [False] * R
+    speed = [1.0] * R
+    fbounds: List = [None] * R   # (step bounds, n_dec) of in-flight leap
+    retries: List[tuple] = []    # (t_retry, seq, req index) min-heap
+    attempts: Dict[int, int] = {}
+    rng = faults.rng() if crash else None
+    rp = retry if retry is not None else RetryPolicy()
+    n_fail_events = n_retries = n_abandoned = 0
+    last_retry_t = 0.0
 
     prb = probe
     n_queue = n_completed = n_leap_steps = n_spec = n_rollbacks = 0
@@ -247,6 +305,10 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
         p_leaps = prb.counter("serve/leap_steps", unit="steps")
         p_spec = prb.counter("serve/spec_leaps")
         p_rollbacks = prb.counter("serve/rollbacks")
+        p_failures = prb.counter("serve/failures")
+        p_retries = prb.counter("serve/retries", unit="requests")
+        p_abandoned = prb.counter("serve/abandoned", unit="requests")
+        p_shed = prb.counter("serve/shed", unit="requests")
         p_occ = [prb.gauge(f"serve/replica{r}/occupancy", unit="slots")
                  for r in range(R)]
         obs_every = obs_left = prb.sample_every
@@ -275,7 +337,9 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
     armed = 0                    # count of non-None entries in `leap`
     busy_count = 0
     total_out = 0
-    seqc = n_req                 # arrivals implicitly hold seq 0..n_req-1
+    # the scalar run() schedules fault events first, then arrivals, then
+    # runtime events — mirror those implicit sequence-number bands
+    seqc = n_fe + n_req
     makespan = 0.0
 
     def obs_tick(now: float) -> None:
@@ -285,7 +349,9 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
         obs_left = obs_every
         for h, v in ((p_queue, n_queue), (p_completed, n_completed),
                      (p_leaps, n_leap_steps), (p_spec, n_spec),
-                     (p_rollbacks, n_rollbacks)):
+                     (p_rollbacks, n_rollbacks),
+                     (p_failures, n_fail_events), (p_retries, n_retries),
+                     (p_abandoned, n_abandoned), (p_shed, 0)):
             h.value = v = float(v)
             h.series._append(now, v)
         for r in range(R):
@@ -312,6 +378,12 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
         if j >= len(bounds) - 1:
             return               # lands in the final step: leap was exact
         dec_k[r] = j + 1
+        if crash:
+            fb = fbounds[r]
+            if fb is not None:
+                # the truncated leap keeps only j+1 steps; a later crash
+                # must not commit tokens for the discarded ones
+                fbounds[r] = (fb[0][:j + 1], fb[1])
         new_end = bounds[j]
         old_end = ekey[r][0]
         if new_end >= old_end:
@@ -331,15 +403,26 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
         ctx = ctx_sum[r]
         k_min = thresh[r][0] // S - dec_total[r]
         base = df + dt * n
-        c0 = base + dc * ctx
+        cd = dc
+        f = speed[r]
+        if f != 1.0:
+            # slow-degrade window: scale the step coefficients exactly as
+            # the scalar path does, so per-step arithmetic stays bit-equal
+            base *= f
+            cd *= f
+        c0 = base + cd * ctx
         if k_min > 1:
             speculate = bool(free[r])   # admission possible -> arm rollback
-            dur, bounds = _leap_spans(now, c0, base, dc, ctx, n, k_min,
-                                      speculate, scratch)
+            dur, bounds = _leap_spans(now, c0, base, cd, ctx, n, k_min,
+                                      speculate or crash, scratch)
             dec_k[r] = k_min
-            if bounds is not None:
+            if speculate:
                 leap[r] = bounds
                 armed += 1
+            if crash:
+                # crashes need every fused decode's step boundaries (the
+                # commit point of a mid-leap fault), blocked leaps included
+                fbounds[r] = (bounds, n)
             if prb is not None:
                 n_leap_steps += k_min
                 if speculate:
@@ -355,6 +438,8 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
 
     def kick(r: int, now: float) -> None:
         nonlocal n_queue, obs_left
+        if down[r]:
+            return
         if pending and occ[r] < S:
             i = pending.popleft()
             s = heappop(free[r])
@@ -371,13 +456,112 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
                 obs_left -= 1
                 if not obs_left:
                     obs_tick(now)
-            submit(r, now, pf + pp * (p if p > 0 else 0), False)
+            dur = pf + pp * (p if p > 0 else 0)
+            if speed[r] != 1.0:
+                dur *= speed[r]     # slow-degrade (started-phase rule)
+            submit(r, now, dur, False)
             if armed:                   # admission invalidates sibling leaps
                 for r2 in range(R):
                     if r2 != r and leap[r2] is not None:
                         rollback(r2, now)
         elif occ[r]:
             start_decode(r, now)
+
+    def retry_or_abandon(i: int, now: float) -> None:
+        # mirrors ServingSimulator._retry_or_abandon arithmetic exactly:
+        # jitter draws happen in the same order (slot order within a fail
+        # event, fail events in time order), so the RNG streams match
+        nonlocal n_retries, n_abandoned, seqc, obs_left
+        att = attempts.get(i, 0) + 1
+        if att >= rp.max_attempts:
+            n_abandoned += 1
+            if prb is not None:
+                obs_left -= 1
+                if not obs_left:
+                    obs_tick(now)
+            return
+        attempts[i] = att
+        delay = rp.backoff * rp.backoff_factor ** (att - 1)
+        if rp.jitter:
+            delay *= 1.0 + rp.jitter * float(rng.random())
+        t_retry = now + delay
+        if t_retry - times[i] > rp.deadline:
+            n_abandoned += 1
+            if prb is not None:
+                obs_left -= 1
+                if not obs_left:
+                    obs_tick(now)
+            return
+        n_retries += 1
+        if prb is not None:
+            obs_left -= 1
+            if not obs_left:
+                obs_tick(now)
+        seqc += 1
+        heappush(retries, (t_retry, seqc, i))
+
+    def do_fail(r: int, now: float) -> None:
+        # mirrors ServingSimulator._fail
+        nonlocal n_fail_events, busy_count, armed, makespan, total_out
+        nonlocal obs_left
+        if not crash:
+            # brownout: phases *started* while degraded run slower
+            speed[r] = slow_factor
+            if prb is not None:
+                prb.event("replica_degrade", now, replica=r)
+            return
+        down[r] = True
+        n_fail_events += 1
+        if prb is not None:
+            prb.event("replica_fail", now, replica=r)
+            obs_left -= 1
+            if not obs_left:
+                obs_tick(now)
+        if busy[r]:
+            # commit the fused-decode steps whose boundary strictly
+            # precedes the fault (the per-step baseline already delivered
+            # their tokens), then truncate the lane's span at the fault
+            fb = fbounds[r]
+            if fb is not None:
+                j = bisect_left(fb[0], now)
+                if j:
+                    total_out += j * fb[1]
+            old_end = ekey[r][0]
+            if now < old_end:
+                busy_time[r] -= old_end - now
+            busy[r] = False
+            busy_count -= 1
+            ekey[r] = idle_key[r]
+            if now > makespan:
+                makespan = now   # the truncated span still ends a lane
+        if leap[r] is not None:
+            leap[r] = None
+            armed -= 1
+        fbounds[r] = None
+        # lost in-flight requests retry (or abandon) in slot order; slots
+        # free in the same order so the heap state matches the scalar path
+        occupied = sorted(x % S for x in thresh[r])
+        fr = free[r]
+        req_r = s_req[r]
+        for s in occupied:
+            heappush(fr, s)
+            retry_or_abandon(req_r[s], now)
+        thresh[r].clear()
+        need_tf[r].clear()
+        ctx_sum[r] = 0
+        occ[r] = 0
+
+    def do_repair(r: int, now: float) -> None:
+        # mirrors ServingSimulator._repair
+        if not crash:
+            speed[r] = 1.0
+            if prb is not None:
+                prb.event("replica_recover", now, replica=r)
+            return
+        down[r] = False
+        if prb is not None:
+            prb.event("replica_repair", now, replica=r)
+        kick(r, now)
 
     # The lane-completion path below inlines finish-decode bookkeeping,
     # the kick, decode start, and submission — it runs once per lane
@@ -393,10 +577,49 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
     while True:
         m = min(ekey)
         bt = m[0]
+        if fi < n_fe or retries:
+            # ---- fault events & retries (scalar heap (time, seq) order:
+            # fault events hold the lowest seqs so they win every tie;
+            # arrivals beat retries; retries order against completions by
+            # push sequence) ----
+            if fi < n_fe:
+                if (nft <= na and nft <= bt
+                        and (not retries or nft <= retries[0][0])):
+                    ft, code, fr2 = fault_events[fi]
+                    fi += 1
+                    nft = fault_events[fi][0] if fi < n_fe else INF
+                    if code:
+                        do_fail(fr2, ft)
+                    else:
+                        do_repair(fr2, ft)
+                    continue
+            if retries:
+                rt = retries[0]
+                t_r = rt[0]
+                if t_r < na and (t_r, rt[1]) < (bt, m[1]):
+                    heappop(retries)
+                    last_retry_t = t_r
+                    # a retry re-arrives through the arrival path
+                    pending.append(rt[2])
+                    if prb is not None:
+                        n_queue += 1
+                        obs_left -= 1
+                        if not obs_left:
+                            obs_tick(t_r)
+                    if busy_count < R:
+                        for r2 in range(R):
+                            if not busy[r2]:
+                                kick(r2, t_r)
+                    if pending and armed:
+                        for r2 in range(R):
+                            if leap[r2] is not None:
+                                rollback(r2, t_r)
+                    continue
         if na <= bt:                    # arrivals win same-time ties
             if na == INF:
                 break                   # both streams exhausted
-            if armed == 0 and busy_count == R:
+            if (armed == 0 and busy_count == R and nft > bt
+                    and (not retries or retries[0][0] > bt)):
                 # No idle replica to kick, no leap to roll back:
                 # every arrival up to (and at) the next completion is
                 # a pure queue append — take them in one jump.
@@ -440,6 +663,8 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
             makespan = now
         if is_decode[r]:
             # ---- finish the fused decode (inline finish_decode) ----
+            if crash:
+                fbounds[r] = None   # scalar _finish_decode clears too
             if leap[r] is not None:
                 leap[r] = None
                 armed -= 1
@@ -501,6 +726,8 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
                 if not obs_left:
                     obs_tick(now)
             dur = pf + pp * (p if p > 0 else 0)
+            if speed[r] != 1.0:
+                dur *= speed[r]     # slow-degrade (started-phase rule)
             busy[r] = True
             busy_count += 1
             busy_time[r] += dur
@@ -514,16 +741,27 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
         elif occ[r]:
             # ---- issue the next fused decode (inline start_decode,
             # with _leap_spans' small-k Python path unrolled in place:
-            # same `ctx += n; dur += base + dc*ctx` accumulation) ----
+            # same `ctx += n; dur += base + cd*ctx` accumulation).
+            # Fault runs share this path: slow-degrade scales the step
+            # coefficients, crash mode additionally keeps the step
+            # boundaries (the commit point of a mid-leap fault) — both
+            # behind a single `faults is not None` short-circuit, so the
+            # no-fault scenario pays one pointer test per decode start.
             n = occ[r]
             ctx = ctx_sum[r]
             k_min = thresh[r][0] // S - dec_total[r]
             base = df + dt * n
-            c0 = base + dc * ctx
+            cd = dc
+            if faults is not None and speed[r] != 1.0:
+                f = speed[r]
+                base *= f
+                cd *= f
+            c0 = base + cd * ctx
             dec_tf[r] = now + c0
             if k_min > 1:
                 dec_k[r] = k_min
-                if free[r]:             # admission possible -> arm rollback
+                speculate = bool(free[r])   # admission -> arm rollback
+                if speculate:
                     if k_min < 16:
                         dur = c0
                         bounds = [now + c0]
@@ -531,25 +769,49 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
                         cx = ctx
                         for _ in range(k_min - 1):
                             cx += n
-                            dur += base + dc * cx
+                            dur += base + cd * cx
                             ba(now + dur)
                     else:
-                        dur, bounds = _leap_spans(now, c0, base, dc, ctx,
+                        dur, bounds = _leap_spans(now, c0, base, cd, ctx,
                                                   n, k_min, True, scratch)
                     leap[r] = bounds
                     armed += 1
-                elif k_min < 16:
-                    dur = c0
-                    cx = ctx
-                    for _ in range(k_min - 1):
-                        cx += n
-                        dur += base + dc * cx
+                    if crash:
+                        fbounds[r] = (bounds, n)
                 else:
-                    dur, _nb = _leap_spans(now, c0, base, dc, ctx, n,
-                                           k_min, False, scratch)
+                    if k_min < 16:
+                        dur = c0
+                        cx = ctx
+                        for _ in range(k_min - 1):
+                            cx += n
+                            dur += base + cd * cx
+                    else:
+                        dur, _nb = _leap_spans(now, c0, base, cd, ctx, n,
+                                               k_min, False, scratch)
+                    if crash and now + dur >= nft:
+                        # a fail event may strike mid-leap: it commits
+                        # the step boundaries that precede it (do_fail),
+                        # so this leap needs them materialized.  Leaps
+                        # ending before the next fault event skip the
+                        # O(k) bounds build — that is the armed-but-idle
+                        # hot path the chaos-smoke overhead gate bounds.
+                        if k_min < 16:
+                            dur = c0
+                            bounds = [now + c0]
+                            ba = bounds.append
+                            cx = ctx
+                            for _ in range(k_min - 1):
+                                cx += n
+                                dur += base + cd * cx
+                                ba(now + dur)
+                        else:
+                            dur, bounds = _leap_spans(now, c0, base, cd,
+                                                      ctx, n, k_min, True,
+                                                      scratch)
+                        fbounds[r] = (bounds, n)
                 if prb is not None:
                     n_leap_steps += k_min
-                    if leap[r] is not None:
+                    if speculate:
                         n_spec += 1
                     obs_left -= 1
                     if not obs_left:
@@ -586,16 +848,35 @@ def _simulate_continuous_fast(cost: ServingCostModel, times: List[float],
     if makespan > 0:
         util = sum(busy_time) / (R * makespan)
     if prb is not None:
-        # close every serving track at the makespan (no early truncation)
-        obs_tick(makespan)
-        prb.gauge("serve/replica_util", unit="frac").set(makespan, util)
+        # close every serving track where the scalar path would: at the
+        # max of the makespan and the last processed event time (fault
+        # events and retries may extend past the last completion)
+        end_t = makespan
+        if n_req:
+            t = times[-1]
+            if t < 0.0:
+                t = 0.0
+            if t > end_t:
+                end_t = t
+        if n_fe and fault_events[-1][0] > end_t:
+            end_t = fault_events[-1][0]
+        if last_retry_t > end_t:
+            end_t = last_retry_t
+        obs_tick(end_t)
+        prb.gauge("serve/replica_util", unit="frac").set(end_t, util)
         prb.flush()
     return ServingReport(
         workload=wl_name, scheduler="continuous", cost_model=cost.name,
         replicas=R, slots=S, n_requests=ls.n, duration=makespan,
         output_tokens=total_out, ttft=ttft, tpot=tpot, e2e=e2e,
         queue_delay=queue_delay, replica_util=util,
-        requests=_LazyRequests(ls), sim_result=None, events=[])
+        requests=_LazyRequests(ls), sim_result=None, events=[],
+        n_offered=n_req,
+        n_failures=(faults.n_failures(makespan)
+                    if faults is not None else 0),
+        n_retries=n_retries, n_abandoned=n_abandoned, n_shed=0,
+        availability=(faults.availability(makespan, R)
+                      if faults is not None else 1.0))
 
 
 class MonteCarloServingSimulator:
@@ -615,13 +896,26 @@ class MonteCarloServingSimulator:
                  batch: RequestBatch,
                  replicas: int = 1,
                  slots: int = 8,
-                 probe=None):
+                 probe=None,
+                 failures=None,
+                 retry: Optional[RetryPolicy] = None):
         """``probe`` enables per-seed instrumentation: seed ``s`` records
         into ``probe.child(f"seed{s}")`` with the scalar simulator's
         serve/* metric names, so
         :meth:`repro.obs.probe.Probe.merged_child_series` yields
         cross-seed mean/CI bands per metric.  Results stay bit-identical
-        with or without a probe."""
+        with or without a probe.
+
+        ``failures`` injects a fault profile into every seed.  A
+        :class:`~repro.serve_sim.faults.FailureModel` draws an
+        *independent* failure schedule per seed — the fault RNG is
+        re-seeded with ``(failures.seed, batch.seeds[k])``, so seed ``k``
+        sees its own replica churn (and the K-seed CI genuinely samples
+        scenario randomness) while staying bit-reproducible run-to-run.
+        An explicit :class:`~repro.serve_sim.faults.ReplicaFault`
+        sequence is shared verbatim across seeds.  ``retry`` is the
+        re-enqueue policy for crash-lost requests (default
+        :class:`RetryPolicy`)."""
         if replicas < 1 or slots < 1:
             raise ValueError("need replicas >= 1 and slots >= 1")
         if not isinstance(batch, RequestBatch):
@@ -632,6 +926,8 @@ class MonteCarloServingSimulator:
         self.replicas = replicas
         self.slots = slots
         self.probe = probe
+        self.failures = failures
+        self.retry = retry
         sched = scheduler_factory()
         self.scheduler_name = sched.name
         cls = type(cost)
@@ -645,14 +941,25 @@ class MonteCarloServingSimulator:
         b = self.batch
         child = (self.probe.child(f"seed{b.seeds[k]}")
                  if self.probe is not None else None)
+        failures = self.failures
+        # per-seed failure draws: both paths re-seed the fault RNG with
+        # (model seed, scenario seed), so the schedules — and the retry
+        # jitter stream — are bit-identical scalar vs. fused
+        fseed = ((failures.seed, int(b.seeds[k]))
+                 if isinstance(failures, FailureModel) else None)
         if self.fast_path:
+            cf = (compile_faults(failures, self.replicas, seed=fseed)
+                  if failures is not None else None)
             return _simulate_continuous_fast(
                 self.cost, b.t_arrive[k].tolist(), b.prompt[k].tolist(),
                 b.output[k].tolist(), self.replicas, self.slots,
-                f"{b.name}/seed{b.seeds[k]}", probe=child)
+                f"{b.name}/seed{b.seeds[k]}", probe=child,
+                faults=cf, retry=self.retry)
         return ServingSimulator(self.cost, self.scheduler_factory,
                                 b.workload(k), replicas=self.replicas,
-                                slots=self.slots, probe=child).run()
+                                slots=self.slots, probe=child,
+                                failures=failures, retry=self.retry,
+                                fault_seed=fseed).run()
 
     def run(self) -> MonteCarloServingReport:
         reports = [self._run_seed(k) for k in range(self.batch.num_seeds)]
@@ -669,8 +976,11 @@ class MonteCarloServingSimulator:
 def monte_carlo_serving(cost: ServingCostModel,
                         scheduler_factory: Callable[[], BatchScheduler],
                         batch: RequestBatch, replicas: int = 1,
-                        slots: int = 8) -> MonteCarloServingReport:
+                        slots: int = 8, failures=None,
+                        retry: Optional[RetryPolicy] = None
+                        ) -> MonteCarloServingReport:
     """One-shot convenience wrapper around
     :class:`MonteCarloServingSimulator`."""
     return MonteCarloServingSimulator(cost, scheduler_factory, batch,
-                                      replicas=replicas, slots=slots).run()
+                                      replicas=replicas, slots=slots,
+                                      failures=failures, retry=retry).run()

@@ -102,7 +102,16 @@ class Wait:
     t: float
 
 
-Action = Union[Prefill, Decode, Wait, None]
+@dataclass(frozen=True)
+class Shed:
+    """Drop ``reqs`` (already popped from the queue) — graceful-degradation
+    load shedding.  The simulator accounts them as shed and immediately
+    re-invokes ``decide`` for the replica's real next action."""
+
+    reqs: Sequence[Request]
+
+
+Action = Union[Prefill, Decode, Wait, Shed, None]
 
 #: ``Decode`` carries no state — reuse one instance in the per-step hot path.
 _DECODE = Decode()
@@ -233,10 +242,58 @@ class StaticBatchScheduler(BatchScheduler):
         # prefill, the static-batching cost continuous batching removes
 
 
+class LoadSheddingScheduler(ContinuousBatchingScheduler):
+    """Continuous batching with graceful-degradation admission control.
+
+    When the shared queue grows past ``max_queue`` — the queue-depth
+    proxy for a blown ETA, e.g. during a replica outage — the scheduler
+    sheds queued requests down to ``shed_to`` before admitting.  The drop
+    set is priority-aware: lowest :attr:`Request.priority` first, and
+    newest-first among equals (older requests have waited longest and are
+    closest to service, so fresh low-priority load is the cheapest to
+    refuse).  Shedding is deterministic — no RNG — so fault scenarios
+    reproduce bit-identically.
+
+    Decode decisions are inherited unchanged, but a ``decide`` call can
+    now return :class:`Shed` whenever the queue is deep — even mid-batch
+    with admission blocked — so *both* decode-leap contracts are off:
+    fused steps would skip the per-step shedding checks the per-step
+    path performs.  The Monte-Carlo fast path falls back to the scalar
+    loop automatically (subclass ≠ stock continuous batching).
+    """
+
+    name = "shedding"
+    steady_decode = False
+    decode_stable = False
+
+    def __init__(self, max_queue: int = 64, shed_to: Optional[int] = None):
+        if max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        self.max_queue = max_queue
+        self.shed_to = max_queue if shed_to is None else shed_to
+        if not (0 <= self.shed_to <= max_queue):
+            raise ValueError("need 0 <= shed_to <= max_queue")
+
+    def decide(self, replica: ReplicaState, queue: Deque[Request],
+               now: float) -> Action:
+        if len(queue) > self.max_queue:
+            n_drop = len(queue) - self.shed_to
+            order = sorted(range(len(queue)),
+                           key=lambda i: (queue[i].priority, -i))
+            drop = set(order[:n_drop])
+            kept = [queue[i] for i in range(len(queue)) if i not in drop]
+            shed = tuple(queue[i] for i in sorted(drop))
+            queue.clear()
+            queue.extend(kept)
+            return Shed(shed)
+        return super().decide(replica, queue, now)
+
+
 SCHEDULERS = {
     "continuous": ContinuousBatchingScheduler,
     "bucketed": BucketedPrefillScheduler,
     "static": StaticBatchScheduler,
+    "shedding": LoadSheddingScheduler,
 }
 
 

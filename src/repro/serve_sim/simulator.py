@@ -38,8 +38,9 @@ import numpy as np
 from repro.core.sim.engine import (DynamicSimulator, GraphTemplate,
                                    SimResult, Simulator, Task)
 from repro.serve_sim.cost import ServingCostModel
+from repro.serve_sim.faults import RetryPolicy, compile_faults
 from repro.serve_sim.scheduler import (BatchScheduler, Decode, InFlight,
-                                       Prefill, ReplicaState, Wait)
+                                       Prefill, ReplicaState, Shed, Wait)
 from repro.serve_sim.workload import Request, Workload
 
 
@@ -333,6 +334,13 @@ class ServingReport:
     requests: Sequence[RequestMetrics] = field(default_factory=list)
     sim_result: Optional[SimResult] = None
     events: List[Tuple] = field(default_factory=list)
+    # ---- resilience metrics (fault-injection runs; defaults = no faults) --
+    n_offered: int = 0          # requests that ever arrived (excl. retries)
+    n_failures: int = 0         # replica failure windows begun by makespan
+    n_retries: int = 0          # re-enqueues after a replica crash
+    n_abandoned: int = 0        # dropped: retry budget / deadline exhausted
+    n_shed: int = 0             # dropped at admission (load shedding)
+    availability: float = 1.0   # up replica-seconds / total replica-seconds
 
     @property
     def throughput_rps(self) -> float:
@@ -342,8 +350,50 @@ class ServingReport:
     def throughput_tps(self) -> float:
         return self.output_tokens / self.duration if self.duration > 0 else 0.0
 
+    @property
+    def goodput_rps(self) -> float:
+        """Completed requests per second — under faults this is the rate
+        of *delivered* work (retried attempts are not double-counted)."""
+        return self.throughput_rps
+
+    @property
+    def attempt_rps(self) -> float:
+        """Retry-amplified attempt rate: completed + retried attempts per
+        second.  ``attempt_rps / goodput_rps`` is the amplification the
+        fleet actually pays for the goodput it delivers."""
+        if self.duration <= 0:
+            return 0.0
+        return (self.n_requests + self.n_retries) / self.duration
+
+    @property
+    def abandonment_rate(self) -> float:
+        """Fraction of offered requests never served (abandoned after
+        retries/deadline, or shed at admission)."""
+        if self.n_offered <= 0:
+            return 0.0
+        return (self.n_abandoned + self.n_shed) / self.n_offered
+
+    def slo_attainment(self, slo) -> float:
+        """Per-request SLO attainment: the fraction of *offered* requests
+        individually meeting every target of ``slo`` (its p99 fields read
+        as per-request bounds here).  Abandoned and shed requests count
+        as misses, so churn shows up even when the survivors' percentiles
+        look healthy.  Returns 1.0 for an empty run."""
+        if self.n_offered > 0:
+            denom = self.n_offered
+        else:
+            denom = len(self.requests)
+        if denom == 0:
+            return 1.0
+        ok = 0
+        for r in self.requests:
+            if (r.ttft <= slo.ttft_p99 and r.tpot <= slo.tpot_p99
+                    and r.e2e <= slo.e2e_p99):
+                ok += 1
+        return ok / denom
+
     def summary(self) -> str:
-        return (
+        s = (
             f"serve[{self.cost_model}|{self.scheduler}|{self.workload}] "
             f"{self.replicas}x{self.slots} slots: "
             f"{self.n_requests} reqs in {self.duration:.1f}s "
@@ -354,6 +404,17 @@ class ServingReport:
             f"TPOT p50/p99 = {self.tpot.p50 * 1e3:.2f}/"
             f"{self.tpot.p99 * 1e3:.2f} ms   "
             f"E2E p99 = {self.e2e.p99:.2f} s")
+        if (self.n_failures or self.n_retries or self.n_abandoned
+                or self.n_shed or self.availability < 1.0):
+            s += (
+                f"\n  faults: {self.n_failures} failures, "
+                f"{self.n_retries} retries "
+                f"({self.attempt_rps:.2f} attempt/s vs "
+                f"{self.goodput_rps:.2f} goodput/s), "
+                f"{self.n_abandoned} abandoned + {self.n_shed} shed "
+                f"({self.abandonment_rate:.1%} of offered), "
+                f"availability={self.availability:.4%}")
+        return s
 
 
 def _slot_of(fl: InFlight) -> int:
@@ -378,7 +439,10 @@ class ServingSimulator:
                  phase_tasks: int = 0,
                  engine: str = "fast",
                  probe=None,
-                 probe_engine: bool = False):
+                 probe_engine: bool = False,
+                 failures=None,
+                 retry: Optional[RetryPolicy] = None,
+                 fault_seed=None):
         """``phase_tasks > 0`` switches from the ServiceLane express path
         to *full task-graph mode*: every prefill/decode phase carries a
         real task graph (chained compute chunks, each followed by a
@@ -400,7 +464,17 @@ class ServingSimulator:
         runs stay bit-identical.  ``probe_engine=True`` additionally
         threads the probe into the embedded engine (per-event
         completion counters — deeper but ~2x the instrumentation cost,
-        and the replica span tracks already cover the engine's view)."""
+        and the replica span tracks already cover the engine's view).
+
+        ``failures`` (a :class:`~repro.serve_sim.faults.FailureModel` or
+        an explicit :class:`~repro.serve_sim.faults.ReplicaFault` list)
+        injects seeded replica failures as DES events: a crash cancels
+        the replica's in-flight phase via the lane epoch machinery and
+        re-enqueues its requests under ``retry`` (default
+        :class:`~repro.serve_sim.faults.RetryPolicy`), a slow-degrade
+        window scales phases *started* inside it.  ``fault_seed``
+        overrides the model's seed (the Monte-Carlo simulator threads
+        per-scenario seeds through it)."""
         if replicas < 1 or slots < 1:
             raise ValueError("need replicas >= 1 and slots >= 1")
         if phase_tasks < 0:
@@ -442,6 +516,12 @@ class ServingSimulator:
             self._p_leaps = probe.counter("serve/leap_steps", unit="steps")
             self._p_spec = probe.counter("serve/spec_leaps")
             self._p_rollbacks = probe.counter("serve/rollbacks")
+            self._p_failures = probe.counter("serve/failures")
+            self._p_retries = probe.counter("serve/retries",
+                                            unit="requests")
+            self._p_abandoned = probe.counter("serve/abandoned",
+                                              unit="requests")
+            self._p_shed = probe.counter("serve/shed", unit="requests")
             self._p_occ = [probe.gauge(f"serve/replica{r}/occupancy",
                                        unit="slots")
                            for r in range(replicas)]
@@ -458,6 +538,10 @@ class ServingSimulator:
             self._p_leaps = None
             self._p_spec = None
             self._p_rollbacks = None
+            self._p_failures = None
+            self._p_retries = None
+            self._p_abandoned = None
+            self._p_shed = None
             self._p_occ = None
         # Graph-mode chunk structure: compiled-graph profiles when the
         # cost model carries them (chunk count comes from the profile),
@@ -520,6 +604,28 @@ class ServingSimulator:
         self._total_out_tokens = 0
         self._wait_until: Dict[int, float] = {}   # replica -> armed wake-up
         self._leap_scratch = _LeapScratch()
+        # ---- fault injection --------------------------------------------
+        self.retry = retry if retry is not None else RetryPolicy()
+        self._faults = (compile_faults(failures, replicas, seed=fault_seed)
+                        if failures is not None else None)
+        self._fault_rng = (self._faults.rng() if self._faults is not None
+                           else None)
+        self._down = [False] * replicas        # crash windows (no admission)
+        self._speed = [1.0] * replicas         # slow-degrade cost factor
+        self._attempts: Dict[int, int] = {}    # rid -> crashes survived
+        # dict-graph mode: in-flight phase's (tid0, tid_end, tail_tid) so a
+        # crash can cancel the injected chunk tasks
+        self._phase_range: List[Optional[Tuple[int, int, int]]] = \
+            [None] * replicas
+        # (step boundaries, n_dec) of an in-flight fused decode: a crash
+        # mid-leap commits the tokens of the steps whose boundary precedes
+        # it — exactly what the per-step baseline would have delivered
+        self._fault_bounds: List[Optional[Tuple]] = [None] * replicas
+        self._n_offered = 0
+        self._n_fail_events = 0                # obs track (incl. post-run)
+        self._n_retries = 0
+        self._n_abandoned = 0
+        self._n_shed = 0
 
     @staticmethod
     def _res(r: int) -> str:
@@ -611,7 +717,7 @@ class ServingSimulator:
             return
         res = self._res(idx)                # dict engine baseline
         kv = res + ":kv"
-        tid = sim.next_task_id()
+        tid = tid0 = sim.next_task_id()
         prev = -1
         for i in range(0, len(durs), 2):
             sim.inject(Task(tid, f"{kind}/r{idx}/c{i // 2}", res, res,
@@ -622,6 +728,8 @@ class ServingSimulator:
             prev = tid
             tid += 2
         self._tail_handlers[prev] = handler
+        if self._faults is not None:
+            self._phase_range[idx] = (tid0, tid, prev)
 
     # ---- arrivals --------------------------------------------------------
 
@@ -661,20 +769,159 @@ class ServingSimulator:
         k = j + 1
         self._decode_k[idx] = k
         self._lanes[idx].truncate(bounds[j], info=n if k == 1 else (n, k))
+        fb = self._fault_bounds[idx]
+        if fb is not None:
+            # the truncated leap keeps only k steps; a later crash must
+            # not commit tokens for the steps the rollback discarded
+            self._fault_bounds[idx] = (fb[0][:k], fb[1])
         if self._p_rollbacks is not None:
             self._n_rollbacks += 1
 
     def _schedule_arrival(self, req: Request) -> None:
+        self._n_offered += 1
         self._sim.at(max(0.0, req.t_arrive),
                      lambda r=req: self._arrive(r, self._sim.now))
+
+    # ---- fault injection -------------------------------------------------
+
+    def _fail(self, idx: int) -> None:
+        """Replica ``idx``'s failure window opens (a pre-scheduled DES
+        event — fault events at a timestamp fire before arrivals and
+        completions at the same timestamp; see ``faults``)."""
+        now = self._sim.now
+        faults = self._faults
+        if faults.mode == "slow":
+            # brownout: phases *started* in the window run slower; nothing
+            # is cancelled and the replica keeps admitting
+            self._speed[idx] = faults.slow_factor
+            if self.probe is not None:
+                self.probe.event("replica_degrade", now, replica=idx)
+            return
+        replica = self.replicas[idx]
+        self._down[idx] = True
+        self._n_fail_events += 1
+        if self.probe is not None:
+            self.probe.event("replica_fail", now, replica=idx)
+            if self._p_failures is not None:
+                n = self._obs_left - 1
+                if n > 0:
+                    self._obs_left = n
+                else:
+                    self._obs_tick(now)
+        if replica.busy:
+            # A crash mid-fused-decode first commits the tokens of the
+            # steps whose boundary precedes it — the per-step baseline
+            # already delivered them (a step ending exactly at the fault
+            # time loses: fault events win the timestamp tie everywhere).
+            fb = self._fault_bounds[idx]
+            if fb is not None:
+                bounds, n_dec = fb
+                j = bisect_left(bounds, now)
+                if j:
+                    self._total_out_tokens += j * n_dec
+            # then cancel the in-flight phase via the epoch machinery:
+            # the express lane keeps the truncated span, the fast-graph
+            # lane keeps committed burst steps and drops the rest, and
+            # dict-graph mode voids the injected chunks
+            if self._lanes:
+                self._lanes[idx].cancel(now)
+            else:
+                rng_t = self._phase_range[idx]
+                if rng_t is not None:
+                    tid0, tid_end, tail = rng_t
+                    self._tail_handlers.pop(tail, None)
+                    self._sim.cancel_tasks(range(tid0, tid_end))
+            replica.busy = False
+        self._phase_range[idx] = None
+        self._leap[idx] = None
+        self._fault_bounds[idx] = None
+        if self.record_events:
+            self.events.append(("fail", idx))
+        # lost in-flight requests retry (or abandon) in slot order; slots
+        # free in the same order so the heap state matches the fused path
+        free = self._free_slots[idx]
+        for fl in replica.active:
+            heappush(free, fl.slot)
+            if not fl.done:         # done-but-held slots were delivered
+                self._retry_or_abandon(fl.req, now)
+        replica.active.clear()
+
+    def _repair(self, idx: int) -> None:
+        now = self._sim.now
+        if self._faults.mode == "slow":
+            self._speed[idx] = 1.0
+            if self.probe is not None:
+                self.probe.event("replica_recover", now, replica=idx)
+            return
+        self._down[idx] = False
+        if self.probe is not None:
+            self.probe.event("replica_repair", now, replica=idx)
+        if self.record_events:
+            self.events.append(("repair", idx))
+        self._kick(self.replicas[idx], now)
+
+    def _retry_or_abandon(self, req: Request, now: float) -> None:
+        """Re-enqueue a crash-lost request per the retry policy, or
+        abandon it (attempt budget / per-request deadline exhausted).
+        All progress is lost: the retried request prefills from scratch,
+        but keeps its original ``t_arrive`` so E2E spans every attempt."""
+        retry = self.retry
+        att = self._attempts.get(req.rid, 0) + 1
+        if att >= retry.max_attempts:
+            self._abandon(req, now)
+            return
+        self._attempts[req.rid] = att
+        delay = retry.backoff * retry.backoff_factor ** (att - 1)
+        if retry.jitter:
+            delay *= 1.0 + retry.jitter * float(self._fault_rng.random())
+        t_retry = now + delay
+        if t_retry - req.t_arrive > retry.deadline:
+            self._abandon(req, now)
+            return
+        self._n_retries += 1
+        if self._p_retries is not None:
+            n = self._obs_left - 1
+            if n > 0:
+                self._obs_left = n
+            else:
+                self._obs_tick(now)
+        if self.record_events:
+            self.events.append(("retry", req.rid, att))
+        self._sim.at(t_retry, lambda r=req: self._arrive(r, self._sim.now))
+
+    def _abandon(self, req: Request, now: float) -> None:
+        self._n_abandoned += 1
+        if self._p_abandoned is not None:
+            n = self._obs_left - 1
+            if n > 0:
+                self._obs_left = n
+            else:
+                self._obs_tick(now)
+        if self.record_events:
+            self.events.append(("abandon", req.rid))
 
     # ---- the scheduling loop --------------------------------------------
 
     def _kick(self, replica: ReplicaState, now: float) -> None:
-        if replica.busy:
+        if replica.busy or self._down[replica.index]:
             return
         sched = self.schedulers[replica.index]
         action = sched.decide(replica, self.pending, now)
+        while isinstance(action, Shed):
+            # graceful degradation: the scheduler dropped queued requests
+            # to keep the backlog bounded; account, then re-decide
+            self._n_shed += len(action.reqs)
+            if self._p_shed is not None:
+                self._n_queue -= len(action.reqs)
+                n = self._obs_left - 1
+                if n > 0:
+                    self._obs_left = n
+                else:
+                    self._obs_tick(now)
+            if self.record_events:
+                for req in action.reqs:
+                    self.events.append(("shed", req.rid))
+            action = sched.decide(replica, self.pending, now)
 
         if isinstance(action, Prefill):
             self._start_prefill(replica, action, now)
@@ -711,6 +958,9 @@ class ServingSimulator:
             if record:
                 self.events.append(("admit", req.rid))
         dur = self.cost.prefill_time(action.tokens)
+        f = self._speed[replica.index]
+        if f != 1.0:
+            dur *= f            # slow-degrade window (started-phase rule)
         replica.busy = True
         if self._p_queue is not None:
             self._n_queue -= len(action.reqs)
@@ -785,33 +1035,53 @@ class ServingSimulator:
         cost = self.cost
         affine = (type(cost).decode_step_time
                   is ServingCostModel.decode_step_time)
+        f = self._speed[idx]
+        # crash-faults need the step boundaries of *every* fused decode
+        # (blocked leaps included): a crash mid-leap commits the steps
+        # whose boundary precedes it.  Collecting bounds never changes
+        # the duration arithmetic (see _leap_spans).
+        faultable = (self._faults is not None
+                     and self._faults.mode == "crash" and k > 1)
         if affine:
             base = cost.decode_fixed + cost.decode_per_token * n
             c_d = cost.decode_per_ctx_token
+            if f != 1.0:
+                # slow-degrade: scale the step coefficients (the fused
+                # Monte-Carlo path applies the identical scaling, so the
+                # per-step arithmetic stays bit-equal across paths)
+                base *= f
+                c_d *= f
             c0 = base + c_d * ctx
             dur, bounds = _leap_spans(now, c0, base, c_d, ctx, n_dec, k,
-                                      speculate, self._leap_scratch)
+                                      speculate or faultable,
+                                      self._leap_scratch)
         else:
             c0 = cost.decode_step_time(n, ctx)
+            if f != 1.0:
+                c0 *= f
             dur = c0
             bounds = None
-            if speculate:
+            if speculate or faultable:
                 bounds = [now + c0]
                 for _ in range(k - 1):
                     ctx += n_dec
-                    dur += cost.decode_step_time(n, ctx)
+                    s = cost.decode_step_time(n, ctx)
+                    dur += s * f if f != 1.0 else s
                     bounds.append(now + dur)
             else:
                 for _ in range(k - 1):
                     ctx += n_dec
-                    dur += cost.decode_step_time(n, ctx)
+                    s = cost.decode_step_time(n, ctx)
+                    dur += s * f if f != 1.0 else s
         if self.record_events:
             self.events.append(
                 ("step", tuple(sorted(f.req.rid for f in replica.active
                                       if not f.done))))
         self._decode_k[idx] = k
         self._decode_tfirst[idx] = now + c0
-        self._leap[idx] = (bounds, n) if bounds is not None else None
+        self._leap[idx] = (bounds, n) if speculate else None
+        if faultable:
+            self._fault_bounds[idx] = (bounds, n_dec)
         if self._p_leaps is not None and k > 1:
             self._n_leap_steps += k
             if speculate:
@@ -834,6 +1104,7 @@ class ServingSimulator:
     def _finish_decode(self, replica: ReplicaState, now: float) -> None:
         idx = replica.index
         self._leap[idx] = None
+        self._fault_bounds[idx] = None
         sched = self.schedulers[idx]
         k = self._decode_k[idx]
         t_first = self._decode_tfirst[idx]
@@ -897,7 +1168,11 @@ class ServingSimulator:
                      (self._p_completed, self._n_completed),
                      (self._p_leaps, self._n_leap_steps),
                      (self._p_spec, self._n_spec),
-                     (self._p_rollbacks, self._n_rollbacks)):
+                     (self._p_rollbacks, self._n_rollbacks),
+                     (self._p_failures, self._n_fail_events),
+                     (self._p_retries, self._n_retries),
+                     (self._p_abandoned, self._n_abandoned),
+                     (self._p_shed, self._n_shed)):
             h.value = v = float(v)
             h.series._append(now, v)
         for r, h in zip(self.replicas, self._p_occ):
@@ -907,6 +1182,18 @@ class ServingSimulator:
     # ---- entry point -----------------------------------------------------
 
     def run(self) -> ServingReport:
+        faults = self._faults
+        if faults is not None:
+            # Fault events are scheduled FIRST, in schedule order (sorted
+            # by time, repairs before failures at equal times), so at any
+            # tied timestamp they beat arrivals — and every runtime event
+            # (completions, retries) — on the heap's sequence tie-break.
+            # The fused Monte-Carlo loop mirrors this priority exactly.
+            for t, code, r in faults.events:
+                if code:
+                    self._sim.at(t, lambda i=r: self._fail(i))
+                else:
+                    self._sim.at(t, lambda i=r: self._repair(i))
         for req in self.workload.initial():
             self._schedule_arrival(req)
         sim_result = self._sim.run()
@@ -922,27 +1209,37 @@ class ServingSimulator:
         if probe is not None:
             # close the counter tracks at the makespan so they span the
             # whole run, and record the end-of-run utilization level
-            self._obs_tick(sim_result.makespan)
+            # (fault events past the last completion may extend the span)
+            end_t = max(sim_result.makespan, self._sim.now)
+            self._obs_tick(end_t)
             probe.gauge("serve/replica_util",
-                        unit="frac").set(sim_result.makespan, util)
+                        unit="frac").set(end_t, util)
             probe.flush()
 
         ls = self.lane_state
         ls.sort_by_rid()
         ttft, tpot, e2e, queue_delay = ls.stats()
+        mk = sim_result.makespan
         return ServingReport(
             workload=self.workload.name,
             scheduler=self.schedulers[0].name,
             cost_model=self.cost.name,
             replicas=len(self.replicas), slots=self.slots,
             n_requests=ls.n,
-            duration=sim_result.makespan,
+            duration=mk,
             output_tokens=self._total_out_tokens,
             ttft=ttft, tpot=tpot, e2e=e2e, queue_delay=queue_delay,
             replica_util=util,
             requests=_LazyRequests(ls),
             sim_result=sim_result,
-            events=self.events)
+            events=self.events,
+            n_offered=self._n_offered,
+            n_failures=(faults.n_failures(mk) if faults is not None else 0),
+            n_retries=self._n_retries,
+            n_abandoned=self._n_abandoned,
+            n_shed=self._n_shed,
+            availability=(faults.availability(mk, len(self.replicas))
+                          if faults is not None else 1.0))
 
 
 def simulate_serving(cost: ServingCostModel,
@@ -950,10 +1247,13 @@ def simulate_serving(cost: ServingCostModel,
                      workload: Workload, replicas: int = 1, slots: int = 8,
                      record_events: bool = False,
                      phase_tasks: int = 0, engine: str = "fast",
-                     probe=None) -> ServingReport:
+                     probe=None, failures=None,
+                     retry: Optional[RetryPolicy] = None,
+                     fault_seed=None) -> ServingReport:
     """One-shot convenience wrapper around :class:`ServingSimulator`."""
     return ServingSimulator(cost, scheduler_factory, workload,
                             replicas=replicas, slots=slots,
                             record_events=record_events,
                             phase_tasks=phase_tasks, engine=engine,
-                            probe=probe).run()
+                            probe=probe, failures=failures, retry=retry,
+                            fault_seed=fault_seed).run()

@@ -49,6 +49,7 @@ class Request:
     prompt_tokens: int
     output_tokens: int
     user: int = -1           # closed-loop: issuing user index
+    priority: int = 0        # load shedding drops lowest priority first
 
 
 @dataclass(frozen=True)
@@ -168,7 +169,7 @@ class RequestBatch:
     draw from the same seeded generator in the same order.
     """
 
-    t_arrive: np.ndarray        # (K, N) float64, non-decreasing per row
+    t_arrive: np.ndarray        # (K, N) float64
     prompt: np.ndarray          # (K, N) int64
     output: np.ndarray          # (K, N) int64
     seeds: Tuple[int, ...]
@@ -182,6 +183,13 @@ class RequestBatch:
                              "(num_seeds, n_requests) shape")
         if len(self.seeds) != shape[0]:
             raise ValueError(f"{len(self.seeds)} seeds for {shape[0]} rows")
+        if shape[1]:
+            t = self.t_arrive
+            # rows need not be sorted (the Monte-Carlo fast path checks
+            # and falls back), but NaN/negative times are always bugs
+            if not np.all(np.isfinite(t)) or float(t.min()) < 0.0:
+                raise ValueError(
+                    "arrival times must be finite and >= 0")
 
     @property
     def num_seeds(self) -> int:
@@ -328,14 +336,43 @@ def bursty_workload_batch(rate_low: float, rate_high: float, n_requests: int,
         f"bursty@{rate_low:g}/{rate_high:g}rps")
 
 
+def _checked_trace_rows(trace) -> List[Tuple]:
+    """Validate and time-sort explicit trace rows.
+
+    An empty trace, a non-finite/negative arrival time, or non-positive
+    token counts raise immediately with the offending row — otherwise a
+    malformed production log silently becomes negative inter-arrivals or
+    a simulation that never terminates."""
+    rows = list(trace)
+    if not rows:
+        raise ValueError("trace is empty — need at least one "
+                         "(t_arrive, prompt_tokens, output_tokens) row")
+    for i, r in enumerate(rows):
+        if len(r) not in (3, 4):
+            raise ValueError(
+                f"trace row {i} has {len(r)} fields, expected "
+                f"(t, prompt, output[, priority])")
+        t = float(r[0])
+        if not np.isfinite(t) or t < 0.0:
+            raise ValueError(f"trace row {i} has invalid arrival time {r[0]}")
+        if int(r[1]) < 0 or int(r[2]) < 1:
+            raise ValueError(f"trace row {i} needs prompt >= 0 and "
+                             f"output >= 1, got {r[1]}/{r[2]}")
+    rows.sort(key=lambda r: r[0])
+    return rows
+
+
 def trace_workload(trace: Iterable[Tuple[float, int, int]],
                    name: str = "trace") -> OpenLoopWorkload:
     """Replay explicit ``(t_arrive, prompt_tokens, output_tokens)`` rows
-    (e.g. parsed from a production request log).  Rows are sorted by time."""
-    rows = sorted(trace, key=lambda r: r[0])
-    reqs = [Request(rid=i, t_arrive=float(t), prompt_tokens=int(p),
-                    output_tokens=int(o))
-            for i, (t, p, o) in enumerate(rows)]
+    (e.g. parsed from a production request log).  Rows are sorted by time;
+    an optional 4th field per row sets :attr:`Request.priority` (load
+    shedding drops lowest first).  Empty or malformed traces raise."""
+    rows = _checked_trace_rows(trace)
+    reqs = [Request(rid=i, t_arrive=float(r[0]), prompt_tokens=int(r[1]),
+                    output_tokens=int(r[2]),
+                    priority=int(r[3]) if len(r) > 3 else 0)
+            for i, r in enumerate(rows)]
     wl = OpenLoopWorkload(reqs)
     wl.name = name
     return wl
@@ -345,8 +382,9 @@ def trace_workload_batch(trace: Iterable[Tuple[float, int, int]],
                          seeds=1, name: str = "trace") -> RequestBatch:
     """Seed-batched :func:`trace_workload`: the replay is deterministic,
     so every row is the same sorted trace (seeds only label the rows —
-    useful to mix trace replay into a seeded Monte-Carlo sweep)."""
-    rows = sorted(trace, key=lambda r: r[0])
+    useful to mix trace replay into a seeded Monte-Carlo sweep).  The
+    same empty/malformed-trace guards as the scalar generator apply."""
+    rows = _checked_trace_rows(trace)
     seeds_t = _seed_tuple(seeds)
     k, n = len(seeds_t), len(rows)
     t = np.array([r[0] for r in rows], dtype=np.float64)

@@ -1,18 +1,23 @@
 """Persistent worker pool: lazy spawn, reuse across calls, deterministic
-results, and failure containment (PR 4).
+results, and failure containment (PR 4), plus the PR 9 hardening layer —
+per-job timeouts with heartbeat detection, bounded retry on a freshly
+forked worker, and poisoned-job quarantine.
 
-The regression that motivated the failure tests: a fork child dying
-mid-map used to hang the result gather — the parent now sees EOF on the
-worker's result pipe, disposes the pool, and finishes the remaining items
-serially.
+The regression that motivated the original failure tests: a fork child
+dying mid-map used to hang the result gather.  The hardened pool now
+detects the EOF (or a missed heartbeat), SIGKILLs and replaces the
+worker, retries the job, and only falls back to serial/quarantine once
+retries are spent — a hung job aborts with :class:`PoolTimeout` rather
+than ever re-running in the parent.
 """
 import os
+import time
 
 import pytest
 
 import repro.core.parallel as par
-from repro.core.parallel import (WorkerPool, close_pools, ensure_shared,
-                                 get_pool, parallel_map)
+from repro.core.parallel import (PoolTimeout, WorkerPool, close_pools,
+                                 ensure_shared, get_pool, parallel_map)
 
 pytestmark = pytest.mark.skipif(not hasattr(os, "fork"),
                                 reason="fork-based pool needs POSIX")
@@ -99,14 +104,17 @@ def test_worker_death_mid_map_falls_back_to_serial():
     assert get_pool(4).spawned is False or not get_pool(4).broken
 
 
-def test_broken_pool_is_replaced_transparently():
+def test_externally_killed_worker_is_survived():
+    """A worker killed from outside must not corrupt results: depending
+    on when the kill lands the pool either revives the worker in place
+    (mid-map EOF -> respawn) or breaks at dispatch and is replaced by
+    get_pool — both end with correct output and a usable pool."""
     parallel_map(_sq, list(range(4)), workers=2)
     pool = get_pool(2)
     os.kill(pool.pids[0], 9)                   # kill a worker externally
     out = parallel_map(_sq, list(range(12)), workers=2)
-    assert out == [x * x for x in range(12)]   # serial completion
-    fresh = get_pool(2)
-    assert fresh is not pool                   # replaced after the break
+    assert out == [x * x for x in range(12)]
+    assert not get_pool(2).broken              # healed or replaced
     out = parallel_map(_sq, list(range(12)), workers=2)
     assert out == [x * x for x in range(12)]   # healthy again
 
@@ -230,3 +238,106 @@ def test_get_pool_refreshes_recency():
     get_pool(2)                                # touch: 2 becomes MRU
     get_pool(4)                                # should evict 3, not 2
     assert sorted(par._POOLS) == [2, 4]
+
+
+# ---------------------------------------------------------------------------
+# Hardening: job timeouts, retry-on-fresh-worker, quarantine (PR 9)
+# ---------------------------------------------------------------------------
+
+def _hang_on_3(x):
+    if os.environ.get(par.WORKER_ENV) and x == 3:
+        time.sleep(60)                # hung, not dead: no EOF to detect
+    return x + 1
+
+
+def _crash_once(marker, x):
+    """Crashes the worker the first time item 2 is attempted; the marker
+    file makes the retry (on a fresh worker) succeed."""
+    if os.environ.get(par.WORKER_ENV) and x == 2 \
+            and not os.path.exists(marker):
+        open(marker, "w").close()
+        os._exit(9)
+    return x * 10
+
+
+def _lookup_crash_once(key, x):
+    if os.environ.get(par.WORKER_ENV) and x == 3 \
+            and not os.path.exists(par.WORKER_STORE[key]):
+        open(par.WORKER_STORE[key], "w").close()
+        os._exit(9)
+    return x + 100
+
+
+def test_pool_param_validation():
+    with pytest.raises(ValueError):
+        WorkerPool(2, job_timeout=0.0)
+    with pytest.raises(ValueError):
+        WorkerPool(2, job_retries=-1)
+    with pytest.raises(ValueError):
+        WorkerPool(2, retry_backoff=-0.1)
+
+
+def test_hung_job_times_out_and_raises():
+    """A worker that neither answers nor dies must be detected by the
+    heartbeat, killed, retried once, and the map aborted with
+    PoolTimeout — never re-run in the parent (which would hang it)."""
+    pool = WorkerPool(2, job_timeout=0.3, job_retries=1,
+                      retry_backoff=0.01)
+    t0 = time.perf_counter()
+    with pytest.raises(PoolTimeout):
+        pool.map(_hang_on_3, list(range(8)))
+    assert time.perf_counter() - t0 < 10.0     # bounded, not 60 s
+    assert pool.broken                         # in-flight siblings lost
+    hung_pids = list(pool.pids)
+    pool.close()
+    for pid in hung_pids:                      # every child reaped
+        with pytest.raises(OSError):
+            os.kill(pid, 0)
+
+
+def test_crashed_job_retries_on_fresh_worker(tmp_path):
+    marker = str(tmp_path / "crashed-once")
+    pool = WorkerPool(2, job_retries=2, retry_backoff=0.0)
+    out = pool.map(_crash_once, list(range(6)), common=marker)
+    assert out == [x * 10 for x in range(6)]
+    assert os.path.exists(marker)              # the crash really happened
+    assert not pool.broken                     # pool healed in place
+    assert pool.map(_crash_once, list(range(6)), common=marker) \
+        == [x * 10 for x in range(6)]          # reusable afterwards
+    pool.close()
+
+
+def test_repeat_crasher_is_quarantined_to_parent():
+    """A job that kills every worker it touches exhausts its retries and
+    runs once serially in the parent (where WORKER_ENV is unset), exactly
+    like the pre-hardening serial fallback — but without disposing the
+    pool."""
+    pool = WorkerPool(4, job_retries=1, retry_backoff=0.0)
+    out = pool.map(_die_in_worker, list(range(16)))
+    assert out == [x + 1 for x in range(16)]
+    assert not pool.broken
+    pool.close()
+
+
+def test_respawned_worker_replays_store(tmp_path):
+    """ensure() broadcasts must survive a worker respawn: the retry of a
+    crashed job resolves the same WORKER_STORE key on the fresh worker."""
+    marker = str(tmp_path / "crashed-once")
+    pool = WorkerPool(2, job_retries=2, retry_backoff=0.0)
+    pool.ensure("hardening-key", marker)
+    out = pool.map(_lookup_crash_once, list(range(8)),
+                   common="hardening-key")
+    assert out == [x + 100 for x in range(8)]
+    assert os.path.exists(marker)
+    assert not pool.broken
+    pool.close()
+
+
+def test_parallel_map_propagates_pool_timeout():
+    """parallel_map's generic serial fallback must not swallow
+    PoolTimeout — re-running a hung job in the parent is the one failure
+    mode the timeout exists to prevent."""
+    close_pools()
+    par._POOLS[2] = WorkerPool(2, job_timeout=0.3, job_retries=0)
+    with pytest.raises(PoolTimeout):
+        parallel_map(_hang_on_3, list(range(6)), workers=2)

@@ -131,6 +131,33 @@ def test_trace_workload_sorts_and_preserves_rows():
     assert [r.rid for r in wl.requests] == [0, 1, 2]
 
 
+def test_trace_workload_guards_malformed_traces():
+    """Empty or malformed traces raise immediately with the offending
+    row — a bad production log must not become negative inter-arrivals
+    or a simulation that never terminates."""
+    from repro.serve_sim import trace_workload_batch
+
+    with pytest.raises(ValueError, match="empty"):
+        trace_workload([])
+    with pytest.raises(ValueError, match="arrival"):
+        trace_workload([(float("nan"), 10, 5)])
+    with pytest.raises(ValueError, match="arrival"):
+        trace_workload([(0.0, 10, 5), (-1.0, 20, 6)])
+    with pytest.raises(ValueError, match="arrival"):
+        trace_workload([(float("inf"), 10, 5)])
+    with pytest.raises(ValueError):
+        trace_workload([(0.0, -1, 5)])           # negative prompt
+    with pytest.raises(ValueError):
+        trace_workload([(0.0, 10, 0)])           # zero output tokens
+    with pytest.raises(ValueError, match="fields"):
+        trace_workload([(0.0, 10)])
+    # the batch variant applies the same guards
+    with pytest.raises(ValueError, match="empty"):
+        trace_workload_batch([], seeds=2)
+    with pytest.raises(ValueError, match="arrival"):
+        trace_workload_batch([(-2.0, 10, 5)], seeds=2)
+
+
 def test_closed_loop_issues_bounded_requests():
     wl = ClosedLoopWorkload(n_users=4, requests_per_user=3, think_time=0.1,
                             seed=1)
