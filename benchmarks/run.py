@@ -8,7 +8,7 @@
 #
 # ``--json [PATH]`` additionally writes the machine-readable perf record
 # (events/sec, points/sec, requests/sec, wall times vs the pre-PR
-# baseline) to PATH (default BENCH_pr9.json) — see benchmarks/perf_record;
+# baseline) to PATH (default BENCH_pr10.json) — see benchmarks/perf_record;
 # ``--trials N`` after the path makes the record a per-metric median over
 # N full suite passes.
 import os
@@ -52,7 +52,7 @@ def main(argv) -> None:
 
         i = argv.index("--json")
         path = (argv[i + 1] if i + 1 < len(argv)
-                and not argv[i + 1].startswith("-") else "BENCH_pr9.json")
+                and not argv[i + 1].startswith("-") else "BENCH_pr10.json")
         # fresh interpreter: the JAX-heavy suites above leave memory/GC
         # pressure that skews the microbenchmark timings
         script = os.path.join(os.path.dirname(__file__), "perf_record.py")

@@ -1,0 +1,189 @@
+"""Cluster resilience: a 3-zone fleet on virtual HW, faults included.
+
+The resilience example hardens a *single* replica pool; production
+deployments spread heterogeneous pools across failure domains behind a
+routing tier.  This example drives a 3-zone cluster — two zones of the
+baseline chip, one zone of a faster variant — through a diurnal traffic
+cycle with per-zone outage processes, entirely on virtual models.
+
+Four stages:
+
+  1. router policy comparison: the same chaos scenario under
+     round-robin, least-loaded, weighted and session-sticky routing —
+     tail latency and failover counts are the discriminator;
+  2. the full resilience stack: health-checked rotation (detection lag
+     included), circuit breakers, p99-derived hedging and cross-pool
+     failover vs the bare router;
+  3. fault-aware autoscaling: reactive scale-up (with boot lag) against
+     the diurnal cycle, reported as cost (replica-seconds) vs SLO;
+  4. N+k redundancy planning: ``ClusterCapacityPlanner.plan_redundancy``
+     decides N+1 vs N+2 from CI-conservative cross-seed availability.
+
+A ``runs/<name>/`` observability bundle (counter tracks for rotation,
+failovers, hedges; metrics.json) is written for the stage-2 run.
+
+Run:  PYTHONPATH=src python examples/serve_cluster.py [--smoke]
+"""
+import argparse
+import os
+import sys
+import time
+from dataclasses import replace
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.config import get_arch
+from repro.core.hw import SystemDescription, tpu_v5e_chip
+from repro.core.taskgraph.builders import ShardPlan
+from repro.obs import Probe, write_bundle
+from repro.serve_sim import (SLO, AutoscalerPolicy, CircuitBreakerPolicy,
+                             ClusterCapacityPlanner, ClusterSimulator,
+                             FailureModel, HealthCheckPolicy, HedgePolicy,
+                             ReplicaPool, RetryPolicy, RoundRobinRouter,
+                             ServingCostModelBuilder, diurnal_workload,
+                             diurnal_workload_batch, make_router)
+
+ARCH = "qwen1.5-0.5b"
+
+
+def _cost_models():
+    cfg = get_arch(ARCH).model
+    builder = ServingCostModelBuilder(cfg, shard=ShardPlan(data=1, model=1))
+    base = builder.model_for(
+        SystemDescription(name="v5e_chip", chip=tpu_v5e_chip(), torus=()))
+    # a faster chip variant for the heterogeneous zone: 1.6x compute and
+    # HBM bandwidth — the kind of what-if the virtual-model flow exists for
+    chip = tpu_v5e_chip()
+    fast_chip = replace(
+        chip, name="v5e_boost",
+        compute=replace(chip.compute,
+                        matrix_flops=chip.compute.matrix_flops * 1.6,
+                        vector_flops=chip.compute.vector_flops * 1.6),
+        memory=replace(chip.memory, bandwidth=chip.memory.bandwidth * 1.6))
+    fast = builder.model_for(
+        SystemDescription(name="v5e_boost", chip=fast_chip, torus=()))
+    return base, fast
+
+
+def _pools(base, fast, replicas):
+    # correlated zone outages (a failure takes the whole zone with p=0.5)
+    # longer than the retry deadline: stuck requests are *lost*, not just
+    # late — that is what health-checked failover protects against
+    mk = lambda z, cost: ReplicaPool(
+        f"zone-{z}", cost, replicas, slots=8,
+        failures=FailureModel(mtbf=25.0, mttr=12.0, seed=20 + ord(z),
+                              zone_size=replicas, correlated_p=0.5,
+                              horizon=600.0),
+        retry=RetryPolicy(max_attempts=4, backoff=0.05, deadline=8.0))
+    return [mk("a", base), mk("b", base), mk("c", fast)]
+
+
+def _traffic(n, seed=0):
+    return diurnal_workload(rate_mean=60.0, n_requests=n, period=120.0,
+                            amplitude=0.8, seed=seed)
+
+
+def _row(label, r):
+    trips = sum(r.breaker_trips.values())
+    print(f"  {label:13s} avail {r.availability:8.3%}   "
+          f"p99 e2e {r.e2e.p99 * 1e3:7.0f}ms   "
+          f"failovers {r.n_failovers:4d}   hedges {r.hedges_issued:4d}"
+          f"/{r.hedges_won:<4d} trips {trips:2d}   "
+          f"lost {r.n_lost_total:3d}")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="small request counts (CI)")
+    p.add_argument("--bundle", default="serve_cluster",
+                   help="runs/<name>/ bundle name for the stage-2 run")
+    args = p.parse_args()
+    n_req = 4_000 if args.smoke else 20_000
+    K = 3 if args.smoke else 8
+    base, fast = _cost_models()
+    reps = 3
+
+    print(f"--- router policies under zone churn ({ARCH}, {n_req} diurnal "
+          f"requests, 3 zones x {reps} replicas, correlated zone outages "
+          f"MTBF=25s/MTTR=12s) ---")
+    for name in ("round_robin", "least_loaded", "weighted", "sticky"):
+        r = ClusterSimulator(_pools(base, fast, reps), _traffic(n_req),
+                             make_router(name, retry_budget=4),
+                             health=HealthCheckPolicy(interval=1.0)).run()
+        _row(name, r)
+    print("  (heterogeneous pools reward load/weight-aware policies; "
+          "sticky trades tail latency for session locality)")
+
+    print("\n--- resilience stack: bare router vs health+breaker+hedge ---")
+    bare = ClusterSimulator(_pools(base, fast, reps), _traffic(n_req),
+                            RoundRobinRouter(retry_budget=4)).run()
+    _row("bare", bare)
+    # decimate probe series so the bundle stays a few MB at 20k requests
+    probe = Probe("serve_cluster", sample_every=max(1, n_req // 500))
+    full = ClusterSimulator(
+        _pools(base, fast, reps), _traffic(n_req),
+        RoundRobinRouter(retry_budget=4),
+        health=HealthCheckPolicy(interval=1.0, unhealthy_after=2),
+        breaker=CircuitBreakerPolicy(error_threshold=6, window=10.0,
+                                     cooldown=8.0),
+        hedge=HedgePolicy(quantile=0.99, min_samples=64, max_fraction=0.05),
+        probe=probe).run()
+    _row("full_stack", full)
+    print("  (health checks re-route around outages after a detection lag; "
+          "hedges clip the p99 tail within a 5% duplicate budget)")
+    bundle = write_bundle(args.bundle, probe=probe,
+                          extra={"cluster": full.summary()})
+    print(f"  wrote observability bundle -> {bundle}")
+
+    print("\n--- fault-aware autoscaling over the diurnal cycle ---")
+    for label, auto in (("static", None),
+                        ("aggressive", AutoscalerPolicy(interval=2.0,
+                                                        up_threshold=2.0,
+                                                        down_threshold=0.3,
+                                                        scale_up_lag=15.0)),
+                        ("conservative", AutoscalerPolicy(interval=2.0,
+                                                          up_threshold=1.0,
+                                                          down_threshold=0.05,
+                                                          scale_up_lag=10.0))):
+        pools = [ReplicaPool(sp.name, sp.cost, sp.replicas, slots=sp.slots,
+                             failures=sp.failures, retry=sp.retry,
+                             max_replicas=sp.replicas * 2 if auto else None,
+                             cost_rate=1.0)
+                 for sp in _pools(base, fast, reps)]
+        r = ClusterSimulator(pools, _traffic(n_req),
+                             RoundRobinRouter(retry_budget=4),
+                             health=HealthCheckPolicy(interval=1.0),
+                             autoscaler=auto).run()
+        print(f"  {label:12s} p99 e2e {r.e2e.p99 * 1e3:7.0f}ms   "
+              f"cost {r.cost:8.0f} replica-s   "
+              f"scale events {len(r.scale_events):3d}   "
+              f"avail {r.availability:8.3%}")
+    print("  (boot lag is what makes reactive scaling lose to faults: "
+          "aggressive trough-draining saves replica-seconds but pays the "
+          "tail back during ramps and outages)")
+
+    n_plan = 4_000
+    slo = SLO(e2e_p99=35.0, availability=0.995)
+    print(f"\n--- N+k redundancy: {slo}, {K} seeds, CI-conservative ---")
+    t0 = time.perf_counter()
+    planner = ClusterCapacityPlanner(
+        pools_factory=lambda n: _pools(base, fast, n),
+        workload_factory=lambda: diurnal_workload_batch(
+            rate_mean=60.0, n_requests=n_plan, period=120.0, amplitude=0.8,
+            seeds=K),
+        slo=slo, router_factory=RoundRobinRouter, num_seeds=K,
+        health=HealthCheckPolicy(interval=1.0))
+    plan = planner.plan_redundancy(base=2, extras=(0, 1, 2))
+    wall = time.perf_counter() - t0
+    print(f"  {plan}")
+    if plan.choice is not None:
+        a = plan.reports[plan.choice].stat("availability")
+        print(f"  chosen N+{plan.choice}: availability CI "
+              f"[{a.ci_lo:.3%}, {a.ci_hi:.3%}] over {K} seeds")
+    print(f"  ({len(plan.options) * K} cluster-seed simulations "
+          f"in {wall:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,9 +52,34 @@ O(n^2) per burst of n concurrent transfers.)
 from __future__ import annotations
 
 import heapq
+import math
 from bisect import bisect_left
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+def _schedule_every(sim, interval: float, fn: Callable[[], bool],
+                    start: Optional[float]) -> None:
+    """Shared implementation behind ``Simulator.every`` /
+    ``DynamicSimulator.every``.
+
+    Exactly one pending tick lives on the event heap at a time; the
+    chain self-extends only while ``fn()`` returns a truthy value, so a
+    draining run (the event loop stops when the heap empties) always
+    terminates: the caller's ``fn`` is responsible for returning False
+    once the condition it monitors (outstanding requests, open probes,
+    ...) is resolved.
+    """
+    if not (interval > 0.0) or not math.isfinite(interval):
+        raise ValueError(f"every(): interval must be finite and > 0, "
+                         f"got {interval!r}")
+    t0 = sim.now + interval if start is None else start
+
+    def _tick() -> None:
+        if fn():
+            sim.at(sim.now + interval, _tick)
+
+    sim.at(t0, _tick)
 
 
 @dataclass(frozen=True)
@@ -830,6 +855,15 @@ class Simulator:
         if t < self._now - 1e-18:
             raise ValueError(f"cannot schedule at {t} < now ({self._now})")
         self._push_event(max(t, self._now), "call", fn)
+
+    def every(self, interval: float, fn: Callable[[], bool],
+              start: Optional[float] = None) -> None:
+        """Run ``fn`` periodically inside the event loop (health checks,
+        autoscaler ticks).  The first tick fires at ``start`` (default
+        ``now + interval``), then every ``interval`` for as long as
+        ``fn()`` returns truthy; a falsy return ends the chain so the
+        heap can drain and :meth:`run` can terminate."""
+        _schedule_every(self, interval, fn, start)
 
     def inject(self, task: Task) -> Task:
         """Add ``task`` to a (possibly running) simulation.
@@ -1684,6 +1718,11 @@ class DynamicSimulator:
         self._seq += 1
         heapq.heappush(self._events,
                        (max(t, self._now), self._seq, "call", fn))
+
+    def every(self, interval: float, fn: Callable[[], bool],
+              start: Optional[float] = None) -> None:
+        """Periodic conditional callback (see :meth:`Simulator.every`)."""
+        _schedule_every(self, interval, fn, start)
 
     def next_task_id(self) -> int:
         return self._next_tid

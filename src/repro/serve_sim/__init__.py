@@ -19,7 +19,12 @@ Quickstart::
                               poisson_workload(4.0, 1000), slots=8)
     print(report.summary())
 """
-from repro.serve_sim.capacity import SLO, CapacityPlan, CapacityPlanner
+from repro.serve_sim.capacity import (SLO, CapacityPlan, CapacityPlanner,
+                                      ClusterCapacityPlanner, RedundancyPlan)
+from repro.serve_sim.cluster import (ClusterReport, ClusterSimulator,
+                                     MonteCarloClusterReport,
+                                     MonteCarloClusterSimulator, ReplicaPool,
+                                     simulate_cluster)
 from repro.serve_sim.cost import (PhaseProfile, ServingCostModel,
                                   ServingCostModelBuilder,
                                   profile_from_graph)
@@ -29,6 +34,13 @@ from repro.serve_sim.faults import (CompiledFaults, FailureModel,
 from repro.serve_sim.monte_carlo import (MonteCarloServingReport,
                                          MonteCarloServingSimulator,
                                          SeedStats, monte_carlo_serving)
+from repro.serve_sim.router import (ROUTERS, AutoscalerPolicy,
+                                    CircuitBreaker, CircuitBreakerPolicy,
+                                    HealthCheckPolicy, HedgePolicy,
+                                    LeastLoadedRouter, PassThroughRouter,
+                                    RoundRobinRouter, RouterPolicy,
+                                    StickyRouter, WeightedRouter,
+                                    make_router)
 from repro.serve_sim.scheduler import (SCHEDULERS, BatchScheduler,
                                        BucketedPrefillScheduler,
                                        ContinuousBatchingScheduler,
@@ -40,12 +52,21 @@ from repro.serve_sim.simulator import (LaneStateArrays, LatencyStats,
 from repro.serve_sim.workload import (ClosedLoopWorkload, LengthDist,
                                       OpenLoopWorkload, Request, RequestBatch,
                                       Workload, bursty_workload,
-                                      bursty_workload_batch, poisson_workload,
+                                      bursty_workload_batch, diurnal_workload,
+                                      diurnal_workload_batch,
+                                      poisson_workload,
                                       poisson_workload_batch, trace_workload,
                                       trace_workload_batch)
 
 __all__ = [
-    "SLO", "CapacityPlan", "CapacityPlanner",
+    "SLO", "CapacityPlan", "CapacityPlanner", "ClusterCapacityPlanner",
+    "RedundancyPlan",
+    "ClusterReport", "ClusterSimulator", "MonteCarloClusterReport",
+    "MonteCarloClusterSimulator", "ReplicaPool", "simulate_cluster",
+    "ROUTERS", "AutoscalerPolicy", "CircuitBreaker", "CircuitBreakerPolicy",
+    "HealthCheckPolicy", "HedgePolicy", "LeastLoadedRouter",
+    "PassThroughRouter", "RoundRobinRouter", "RouterPolicy", "StickyRouter",
+    "WeightedRouter", "make_router",
     "PhaseProfile", "ServingCostModel", "ServingCostModelBuilder",
     "profile_from_graph",
     "CompiledFaults", "FailureModel", "ReplicaFault", "RetryPolicy",
@@ -59,6 +80,7 @@ __all__ = [
     "ServingSimulator", "simulate_serving",
     "ClosedLoopWorkload", "LengthDist", "OpenLoopWorkload", "Request",
     "RequestBatch", "Workload", "bursty_workload", "bursty_workload_batch",
+    "diurnal_workload", "diurnal_workload_batch",
     "poisson_workload", "poisson_workload_batch", "trace_workload",
     "trace_workload_batch",
 ]

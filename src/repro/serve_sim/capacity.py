@@ -163,35 +163,169 @@ class CapacityPlanner:
         if axis not in ("replicas", "slots"):
             raise ValueError("axis must be 'replicas' or 'slots'")
 
-        probes: Dict[int, bool] = {}
+        def evaluate(v: int):
+            return self._evaluate(v if axis == "replicas" else replicas,
+                                  v if axis == "slots" else slots)
+
+        value, ok, probes, reports = _plan_bisect(
+            evaluate, self._feasible, lo, cap)
+        return CapacityPlan(axis=axis, value=value, feasible=ok,
+                            report=reports.get(value), probes=probes)
+
+
+def _plan_bisect(evaluate: Callable[[int], object],
+                 is_feasible: Callable[[object], bool],
+                 lo: int, cap: int):
+    """Shared doubling-then-bisect search for the smallest feasible value
+    in ``[lo, cap]`` (see the monotonicity note in the module docstring).
+    Returns ``(value, feasible, probes, reports)``; when nothing in range
+    is feasible, ``value`` is ``cap`` with ``feasible=False``."""
+    if lo < 1 or cap < lo:
+        raise ValueError(f"need 1 <= lo <= cap, got lo={lo}, cap={cap}")
+
+    probes: Dict[int, bool] = {}
+    reports: Dict[int, object] = {}
+
+    def feasible(v: int) -> bool:
+        if v not in probes:
+            r = evaluate(v)
+            reports[v] = r
+            probes[v] = is_feasible(r)
+        return probes[v]
+
+    # doubling phase: find a feasible upper bound
+    hi = lo
+    while hi < cap and not feasible(hi):
+        hi = min(cap, hi * 2)
+    if not feasible(hi):
+        return hi, False, probes, reports
+    # bisect down to the smallest feasible probe
+    lo_infeasible = max((v for v, ok in probes.items() if not ok),
+                        default=lo - 1)
+    best = hi
+    lo_b, hi_b = lo_infeasible + 1, hi
+    while lo_b < hi_b:
+        mid = (lo_b + hi_b) // 2
+        if feasible(mid):
+            best = mid
+            hi_b = mid
+        else:
+            lo_b = mid + 1
+    return best, True, probes, reports
+
+
+@dataclass
+class RedundancyPlan:
+    """Outcome of an N+k redundancy comparison
+    (:meth:`ClusterCapacityPlanner.plan_redundancy`)."""
+
+    base: int                       # the N of N+k (replicas per pool)
+    options: Dict[int, bool]        # extra k -> SLO-feasible?
+    choice: Optional[int]           # smallest feasible k (None: none were)
+    reports: Dict[int, object] = field(default_factory=dict)
+
+    @property
+    def feasible(self) -> bool:
+        return self.choice is not None
+
+    def __str__(self) -> str:
+        opts = ", ".join(f"N+{k}:{'ok' if ok else 'MISS'}"
+                         for k, ok in sorted(self.options.items()))
+        if self.choice is None:
+            return f"no N+k option meets the SLO (N={self.base}; {opts})"
+        return f"N+{self.choice} meets the SLO (N={self.base}; {opts})"
+
+
+class ClusterCapacityPlanner:
+    """Cluster mode of the capacity planner: sizes *per-pool* replica
+    counts for a heterogeneous routed cluster under a fault profile.
+
+    ``pools_factory(n)`` must return the cluster's pool list scaled to
+    ``n`` replicas per pool (each pool carrying its own cost model and
+    :class:`~repro.serve_sim.faults.FailureModel`); ``workload_factory``
+    returns a fresh workload per probe — or, with ``num_seeds > 1``, a
+    ``RequestBatch`` with that many seed rows, in which case every probe
+    runs the Monte-Carlo cluster simulator and feasibility is decided on
+    cross-seed confidence bounds (:meth:`SLO.satisfied_by_ci` — the
+    availability floor reads the *lower* CI bound, so one lucky fault
+    draw cannot declare a redundancy level sufficient).
+
+    Remaining keyword arguments (``health=``, ``hedge=``, ``breaker=``,
+    ``autoscaler=``, ``engine=`` ...) are forwarded to every
+    :class:`~repro.serve_sim.cluster.ClusterSimulator` probe.
+    """
+
+    def __init__(self, pools_factory: Callable[[int], list],
+                 workload_factory: Callable[[], object],
+                 slo: SLO,
+                 router_factory: Optional[Callable[[], object]] = None,
+                 num_seeds: int = 1,
+                 **cluster_kwargs):
+        if num_seeds < 1:
+            raise ValueError("need num_seeds >= 1")
+        self.pools_factory = pools_factory
+        self.workload_factory = workload_factory
+        self.slo = slo
+        self.router_factory = router_factory
+        self.num_seeds = num_seeds
+        self.cluster_kwargs = cluster_kwargs
+
+    def _evaluate(self, n: int):
+        from repro.serve_sim.cluster import (ClusterSimulator,
+                                             MonteCarloClusterSimulator)
+        from repro.serve_sim.workload import RequestBatch
+
+        pools = self.pools_factory(n)
+        if self.num_seeds > 1:
+            batch = self.workload_factory()
+            if not isinstance(batch, RequestBatch):
+                raise TypeError(
+                    "num_seeds > 1 needs a workload_factory returning a "
+                    f"RequestBatch, got {type(batch)!r}")
+            if batch.num_seeds != self.num_seeds:
+                raise ValueError(f"batch has {batch.num_seeds} seed rows, "
+                                 f"planner wants {self.num_seeds}")
+            return MonteCarloClusterSimulator(
+                pools, batch, router_factory=self.router_factory,
+                **self.cluster_kwargs).run()
+        router = (self.router_factory()
+                  if self.router_factory is not None else None)
+        return ClusterSimulator(pools, self.workload_factory(), router,
+                                **self.cluster_kwargs).run()
+
+    def _feasible(self, report) -> bool:
+        if self.num_seeds > 1:
+            return self.slo.satisfied_by_ci(report)
+        return self.slo.satisfied_by(report)
+
+    def plan(self, lo: int = 1, cap: int = 64) -> CapacityPlan:
+        """Smallest per-pool replica count in ``[lo, cap]`` meeting the
+        SLO (doubling then bisection, like the single-pool planner)."""
+        value, ok, probes, reports = _plan_bisect(
+            self._evaluate, self._feasible, lo, cap)
+        return CapacityPlan(axis="replicas_per_pool", value=value,
+                            feasible=ok, report=reports.get(value),
+                            probes=probes)
+
+    def plan_redundancy(self, base: int,
+                        extras=(0, 1, 2)) -> RedundancyPlan:
+        """The N+1-vs-N+2 question: probe ``base + k`` replicas per pool
+        for each ``k`` in ``extras`` and pick the smallest feasible
+        overprovision — with ``num_seeds > 1`` each verdict is backed by
+        the cross-seed CI availability bound."""
+        if base < 1:
+            raise ValueError("base must be >= 1")
+        options: Dict[int, bool] = {}
         reports: Dict[int, object] = {}
-
-        def feasible(v: int) -> bool:
-            if v not in probes:
-                r = self._evaluate(v if axis == "replicas" else replicas,
-                                   v if axis == "slots" else slots)
-                reports[v] = r
-                probes[v] = self._feasible(r)
-            return probes[v]
-
-        # doubling phase: find a feasible upper bound
-        hi = lo
-        while hi < cap and not feasible(hi):
-            hi = min(cap, hi * 2)
-        if not feasible(hi):
-            return CapacityPlan(axis=axis, value=hi, feasible=False,
-                                report=reports.get(hi), probes=probes)
-        # bisect down to the smallest feasible probe
-        lo_infeasible = max((v for v, ok in probes.items() if not ok),
-                            default=lo - 1)
-        best = hi
-        lo_b, hi_b = lo_infeasible + 1, hi
-        while lo_b < hi_b:
-            mid = (lo_b + hi_b) // 2
-            if feasible(mid):
-                best = mid
-                hi_b = mid
-            else:
-                lo_b = mid + 1
-        return CapacityPlan(axis=axis, value=best, feasible=True,
-                            report=reports[best], probes=probes)
+        choice: Optional[int] = None
+        for k in sorted(set(int(e) for e in extras)):
+            if k < 0:
+                raise ValueError("extras must be >= 0")
+            r = self._evaluate(base + k)
+            reports[k] = r
+            ok = self._feasible(r)
+            options[k] = ok
+            if ok and choice is None:
+                choice = k
+        return RedundancyPlan(base=base, options=options, choice=choice,
+                              reports=reports)

@@ -90,16 +90,20 @@ class FailureModel:
     horizon: float = 3600.0
 
     def __post_init__(self):
-        if self.mtbf <= 0 or self.mttr <= 0:
-            raise ValueError("mtbf and mttr must be > 0")
+        if not (math.isfinite(self.mtbf) and self.mtbf > 0):
+            raise ValueError("mtbf must be finite and > 0")
+        if not (math.isfinite(self.mttr) and self.mttr > 0):
+            raise ValueError("mttr must be finite and > 0")
         if self.mode not in ("crash", "slow"):
             raise ValueError(f"unknown failure mode {self.mode!r}")
-        if self.slow_factor < 1.0:
-            raise ValueError("slow_factor must be >= 1.0")
+        if not (math.isfinite(self.slow_factor) and self.slow_factor >= 1.0):
+            raise ValueError("slow_factor must be finite and >= 1.0")
+        if not isinstance(self.zone_size, int) or self.zone_size < 0:
+            raise ValueError("zone_size must be an int >= 0")
         if not (0.0 <= self.correlated_p <= 1.0):
             raise ValueError("correlated_p must be in [0, 1]")
-        if self.horizon <= 0:
-            raise ValueError("horizon must be > 0")
+        if not (math.isfinite(self.horizon) and self.horizon > 0):
+            raise ValueError("horizon must be finite and > 0")
 
     def windows(self, replicas: int, seed=None) -> List[ReplicaFault]:
         """Draw the failure windows for ``replicas`` replicas.
@@ -155,12 +159,15 @@ class RetryPolicy:
     def __post_init__(self):
         if self.max_attempts < 1:
             raise ValueError("max_attempts must be >= 1")
-        if self.backoff < 0 or self.backoff_factor < 1.0:
-            raise ValueError("need backoff >= 0 and backoff_factor >= 1")
-        if self.jitter < 0:
-            raise ValueError("jitter must be >= 0")
-        if self.deadline <= 0:
-            raise ValueError("deadline must be > 0")
+        if not (math.isfinite(self.backoff) and self.backoff >= 0):
+            raise ValueError("backoff must be finite and >= 0")
+        if not (math.isfinite(self.backoff_factor)
+                and self.backoff_factor >= 1.0):
+            raise ValueError("backoff_factor must be finite and >= 1")
+        if not (math.isfinite(self.jitter) and self.jitter >= 0):
+            raise ValueError("jitter must be finite and >= 0")
+        if math.isnan(self.deadline) or self.deadline <= 0:
+            raise ValueError("deadline must be > 0 (inf allowed)")
 
 
 def _merge_windows(spans: List[Tuple[float, float]]) -> List[Tuple[float, float]]:

@@ -1,0 +1,441 @@
+"""Routing-tier policies for cluster serving.
+
+The :class:`~repro.serve_sim.cluster.ClusterSimulator` places
+heterogeneous :class:`~repro.serve_sim.cluster.ReplicaPool`\\ s behind a
+pluggable :class:`RouterPolicy` and layers the resilience machinery on
+top: health-checked rotation (:class:`HealthCheckPolicy`), per-pool
+circuit breakers (:class:`CircuitBreakerPolicy` +
+:class:`CircuitBreaker`), latency hedging (:class:`HedgePolicy`) and
+reactive scaling (:class:`AutoscalerPolicy`).  Everything here is
+deterministic — policies keep plain counters, never draw randomness —
+so seeded cluster runs replay bit-identically.
+
+Router contract: the cluster calls ``pick(candidates, cluster, req)``
+with the pool indices currently routable (in rotation, breaker
+allowing); ``candidates`` is never empty (the cluster fails open to
+every pool when nothing is routable, and counts it).  ``pick`` must
+return one of ``candidates``.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.serve_sim.workload import Request
+
+
+def _check_pos(name: str, v: float) -> None:
+    if not (isinstance(v, (int, float)) and math.isfinite(v) and v > 0):
+        raise ValueError(f"{name} must be finite and > 0, got {v!r}")
+
+
+def _check_int_ge(name: str, v: int, lo: int) -> None:
+    if not isinstance(v, int) or isinstance(v, bool) or v < lo:
+        raise ValueError(f"{name} must be an int >= {lo}, got {v!r}")
+
+
+# ---------------------------------------------------------------------------
+# Router policies
+# ---------------------------------------------------------------------------
+
+
+class RouterPolicy:
+    """Base router: picks a pool index for each request.
+
+    ``retry_budget`` is a *router-level* cap on failover re-routes per
+    request, on top of each pool's :class:`RetryPolicy` attempt budget:
+    a crash-lost request whose pool-level retry fires is re-routed
+    through the router at most ``retry_budget`` times (``None`` =
+    unlimited, which preserves single-pool parity with the standalone
+    :class:`~repro.serve_sim.simulator.ServingSimulator`).
+    """
+
+    name = "router"
+
+    def __init__(self, retry_budget: Optional[int] = None):
+        if retry_budget is not None:
+            _check_int_ge("retry_budget", retry_budget, 0)
+        self.retry_budget = retry_budget
+
+    def pick(self, candidates: Sequence[int], cluster, req: Request) -> int:
+        raise NotImplementedError
+
+
+class PassThroughRouter(RouterPolicy):
+    """Always the first routable pool — with one pool this is the
+    golden-parity configuration (zero routing decisions)."""
+
+    name = "passthrough"
+
+    def pick(self, candidates: Sequence[int], cluster, req: Request) -> int:
+        return candidates[0]
+
+
+class RoundRobinRouter(RouterPolicy):
+    """Cycle over the routable pools in index order."""
+
+    name = "round_robin"
+
+    def __init__(self, retry_budget: Optional[int] = None):
+        super().__init__(retry_budget)
+        self._i = 0
+
+    def pick(self, candidates: Sequence[int], cluster, req: Request) -> int:
+        c = candidates[self._i % len(candidates)]
+        self._i += 1
+        return c
+
+
+class LeastLoadedRouter(RouterPolicy):
+    """Pool with the lowest load per unit of healthy capacity (queued +
+    in-flight requests over in-rotation replicas x slots); ties go to
+    the lowest pool index.  Load is what a real balancer observes at its
+    own edge — not the pools' internal fault state."""
+
+    name = "least_loaded"
+
+    def pick(self, candidates: Sequence[int], cluster, req: Request) -> int:
+        best = candidates[0]
+        best_load = math.inf
+        for i in candidates:
+            load = cluster.pool_load(i) / max(1.0, cluster.pool_capacity(i))
+            if load < best_load:
+                best, best_load = i, load
+        return best
+
+
+class WeightedRouter(RouterPolicy):
+    """Smooth weighted round-robin (the nginx algorithm): pool ``i`` is
+    chosen ``weight_i / sum(weights)`` of the time with no bursts, fully
+    deterministically.  Weights default to each pool's raw capacity
+    (replicas x slots) scaled by its chip speed, so faster variants
+    absorb proportionally more traffic."""
+
+    name = "weighted"
+
+    def __init__(self, retry_budget: Optional[int] = None):
+        super().__init__(retry_budget)
+        self._cur: Dict[int, float] = {}
+
+    def pick(self, candidates: Sequence[int], cluster, req: Request) -> int:
+        cur = self._cur
+        total = 0.0
+        best = candidates[0]
+        best_cur = -math.inf
+        for i in candidates:
+            w = cluster.pool_weight(i)
+            total += w
+            c = cur.get(i, 0.0) + w
+            cur[i] = c
+            if c > best_cur:
+                best, best_cur = i, c
+        cur[best] -= total
+        return best
+
+
+class StickyRouter(RouterPolicy):
+    """Session-sticky: the same user (or request id, for anonymous
+    open-loop traffic) consistently maps to the same pool via a
+    deterministic integer hash over the *routable* set — so a pool
+    leaving rotation only remaps its own sessions."""
+
+    name = "sticky"
+
+    @staticmethod
+    def _mix(key: int) -> int:
+        # splitmix64 finalizer: cheap, stable across processes (unlike
+        # Python's salted hash()), well spread for sequential keys
+        z = (key + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+        return z ^ (z >> 31)
+
+    def pick(self, candidates: Sequence[int], cluster, req: Request) -> int:
+        key = req.user if req.user >= 0 else req.rid
+        return candidates[self._mix(key) % len(candidates)]
+
+
+ROUTERS: Dict[str, Callable[..., RouterPolicy]] = {
+    "passthrough": PassThroughRouter,
+    "round_robin": RoundRobinRouter,
+    "least_loaded": LeastLoadedRouter,
+    "weighted": WeightedRouter,
+    "sticky": StickyRouter,
+}
+
+
+def make_router(name: str, **kwargs) -> RouterPolicy:
+    """Build a router policy by registry name."""
+    try:
+        cls = ROUTERS[name]
+    except KeyError:
+        raise ValueError(f"unknown router {name!r} "
+                         f"(available: {sorted(ROUTERS)})") from None
+    return cls(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Health checks
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HealthCheckPolicy:
+    """Periodic replica probing with hysteresis.
+
+    Every ``interval`` seconds each replica is probed; a probe fails if
+    the replica is crashed, or browned out beyond ``max_slow_factor``
+    (the probe's timeout proxy: a slow-degrade window scaling phases by
+    more than this would also time the probe out).  ``unhealthy_after``
+    consecutive failures take the replica out of rotation,
+    ``healthy_after`` consecutive successes put it back — so crashes are
+    *detected* with realistic lag (up to
+    ``unhealthy_after * interval``), not omnisciently avoided, and
+    repairs re-admit traffic only after the hysteresis clears.
+    """
+
+    interval: float = 1.0
+    unhealthy_after: int = 3
+    healthy_after: int = 2
+    max_slow_factor: float = math.inf
+
+    def __post_init__(self):
+        _check_pos("HealthCheckPolicy.interval", self.interval)
+        _check_int_ge("HealthCheckPolicy.unhealthy_after",
+                      self.unhealthy_after, 1)
+        _check_int_ge("HealthCheckPolicy.healthy_after",
+                      self.healthy_after, 1)
+        f = self.max_slow_factor
+        if not (isinstance(f, (int, float)) and f >= 1.0):
+            raise ValueError("HealthCheckPolicy.max_slow_factor must be "
+                             f">= 1.0, got {f!r}")
+
+
+# ---------------------------------------------------------------------------
+# Circuit breakers
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CircuitBreakerPolicy:
+    """Per-pool breaker: trip open after ``error_threshold`` errors
+    (crash-losses and abandonments) within ``window`` seconds; after
+    ``cooldown`` seconds half-open and let ``half_open_probes`` trial
+    requests through — a success closes the breaker, an error re-opens
+    it for another cooldown."""
+
+    error_threshold: int = 5
+    window: float = 10.0
+    cooldown: float = 30.0
+    half_open_probes: int = 1
+
+    def __post_init__(self):
+        _check_int_ge("CircuitBreakerPolicy.error_threshold",
+                      self.error_threshold, 1)
+        _check_pos("CircuitBreakerPolicy.window", self.window)
+        _check_pos("CircuitBreakerPolicy.cooldown", self.cooldown)
+        _check_int_ge("CircuitBreakerPolicy.half_open_probes",
+                      self.half_open_probes, 1)
+
+
+class CircuitBreaker:
+    """Runtime state machine for one pool (closed -> open -> half-open).
+
+    Purely counter-driven: ``record_error`` / ``record_success`` come
+    from the cluster's failure/completion hooks, ``allow`` gates
+    routing, ``on_route`` consumes half-open probe slots.  Tracks
+    ``n_trips`` and total open time for :class:`ClusterReport`."""
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    __slots__ = ("policy", "state", "n_trips", "_errors", "_opened_at",
+                 "_probes_out", "time_open")
+
+    def __init__(self, policy: CircuitBreakerPolicy):
+        self.policy = policy
+        self.state = self.CLOSED
+        self.n_trips = 0
+        self._errors: deque = deque()   # error timestamps inside window
+        self._opened_at = 0.0
+        self._probes_out = 0
+        self.time_open = 0.0
+
+    def _trip(self, now: float) -> None:
+        self.state = self.OPEN
+        self.n_trips += 1
+        self._opened_at = now
+        self._probes_out = 0
+        self._errors.clear()
+
+    def record_error(self, now: float) -> None:
+        if self.state == self.HALF_OPEN:
+            # the trial request failed: straight back to open
+            self.time_open += now - self._opened_at
+            self._trip(now)
+            return
+        if self.state == self.OPEN:
+            return
+        errs = self._errors
+        errs.append(now)
+        lo = now - self.policy.window
+        while errs and errs[0] < lo:
+            errs.popleft()
+        if len(errs) >= self.policy.error_threshold:
+            self._trip(now)
+
+    def record_success(self, now: float) -> None:
+        if self.state == self.HALF_OPEN:
+            self.state = self.CLOSED
+            self.time_open += now - self._opened_at
+            self._probes_out = 0
+            self._errors.clear()
+
+    def allow(self, now: float) -> bool:
+        state = self.state
+        if state == self.CLOSED:
+            return True
+        if state == self.OPEN:
+            if now - self._opened_at >= self.policy.cooldown:
+                self.state = self.HALF_OPEN
+                return True
+            return False
+        return self._probes_out < self.policy.half_open_probes
+
+    def on_route(self, now: float) -> None:
+        if self.state == self.HALF_OPEN:
+            self._probes_out += 1
+
+    def finalize(self, makespan: float) -> None:
+        """Close the open-time integral at the end of the run."""
+        if self.state != self.CLOSED:
+            self.time_open += max(0.0, makespan - self._opened_at)
+
+
+# ---------------------------------------------------------------------------
+# Hedging
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HedgePolicy:
+    """Latency hedging: a request still unfinished ``delay`` seconds
+    after arrival is duplicated to a second pool; the first completion
+    wins and the loser is cancelled.
+
+    The delay is derived from the running ``quantile`` of completed E2E
+    latencies (recomputed every ``refresh_every`` completions over the
+    last ``window`` samples) once ``min_samples`` completions exist;
+    until then ``initial_delay`` applies (the ``inf`` default simply
+    disables hedging during warm-up).  A fixed ``delay`` overrides the
+    derivation.  ``max_fraction`` is the hedging budget: hedges issued
+    never exceed that fraction of offered requests."""
+
+    quantile: float = 0.99
+    min_samples: int = 64
+    refresh_every: int = 256
+    window: int = 2048
+    initial_delay: float = math.inf
+    delay: Optional[float] = None
+    max_fraction: float = 0.05
+
+    def __post_init__(self):
+        if not (0.0 < self.quantile <= 1.0):
+            raise ValueError("HedgePolicy.quantile must be in (0, 1], "
+                             f"got {self.quantile!r}")
+        _check_int_ge("HedgePolicy.min_samples", self.min_samples, 1)
+        _check_int_ge("HedgePolicy.refresh_every", self.refresh_every, 1)
+        _check_int_ge("HedgePolicy.window", self.window, 1)
+        if self.delay is not None:
+            _check_pos("HedgePolicy.delay", self.delay)
+        if not (isinstance(self.initial_delay, (int, float))
+                and self.initial_delay > 0):
+            raise ValueError("HedgePolicy.initial_delay must be > 0, "
+                             f"got {self.initial_delay!r}")
+        if not (0.0 < self.max_fraction <= 1.0):
+            raise ValueError("HedgePolicy.max_fraction must be in (0, 1], "
+                             f"got {self.max_fraction!r}")
+
+
+class HedgeDelayTracker:
+    """Streaming p-quantile over recent E2E latencies — the hedge
+    trigger.  Keeps a ring of the last ``policy.window`` samples and
+    recomputes the quantile every ``policy.refresh_every`` completions
+    (sorting 2k floats a few hundred times is noise next to the event
+    loop; recomputing per-arrival would not be)."""
+
+    __slots__ = ("policy", "_ring", "_n", "_since", "_delay")
+
+    def __init__(self, policy: HedgePolicy):
+        self.policy = policy
+        self._ring: List[float] = []
+        self._n = 0
+        self._since = 0
+        self._delay = (policy.delay if policy.delay is not None
+                       else policy.initial_delay)
+
+    def observe(self, e2e: float) -> None:
+        if self.policy.delay is not None:
+            return
+        ring = self._ring
+        w = self.policy.window
+        if len(ring) < w:
+            ring.append(e2e)
+        else:
+            ring[self._n % w] = e2e
+        self._n += 1
+        self._since += 1
+        if (self._n >= self.policy.min_samples
+                and self._since >= self.policy.refresh_every):
+            self._since = 0
+            s = sorted(ring)
+            i = min(len(s) - 1, int(self.policy.quantile * len(s)))
+            self._delay = s[i]
+
+    @property
+    def delay(self) -> float:
+        return self._delay
+
+
+# ---------------------------------------------------------------------------
+# Autoscaling
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AutoscalerPolicy:
+    """Reactive per-pool scaling on queue pressure.
+
+    Every ``interval`` seconds the cluster evaluates each pool's queue
+    depth per enabled replica: above ``up_threshold`` it *orders* a
+    replica (active after ``scale_up_lag`` — boot/warm-up is what makes
+    reactive scaling lose to faults); below ``down_threshold`` it drains
+    one immediately (the replica finishes in-flight work, admits
+    nothing, and stops accruing cost once idle).  ``min_replicas``
+    floors the drain; pools scale at most ``step`` replicas per tick and
+    never beyond their ``max_replicas`` headroom."""
+
+    interval: float = 5.0
+    up_threshold: float = 2.0
+    down_threshold: float = 0.25
+    scale_up_lag: float = 30.0
+    min_replicas: int = 1
+    step: int = 1
+
+    def __post_init__(self):
+        _check_pos("AutoscalerPolicy.interval", self.interval)
+        _check_pos("AutoscalerPolicy.up_threshold", self.up_threshold)
+        if not (isinstance(self.down_threshold, (int, float))
+                and math.isfinite(self.down_threshold)
+                and 0.0 <= self.down_threshold < self.up_threshold):
+            raise ValueError(
+                "AutoscalerPolicy.down_threshold must satisfy 0 <= "
+                f"down_threshold < up_threshold, got {self.down_threshold!r}")
+        if not (isinstance(self.scale_up_lag, (int, float))
+                and math.isfinite(self.scale_up_lag)
+                and self.scale_up_lag >= 0.0):
+            raise ValueError("AutoscalerPolicy.scale_up_lag must be finite "
+                             f"and >= 0, got {self.scale_up_lag!r}")
+        _check_int_ge("AutoscalerPolicy.min_replicas", self.min_replicas, 1)
+        _check_int_ge("AutoscalerPolicy.step", self.step, 1)

@@ -340,6 +340,9 @@ class ServingReport:
     n_retries: int = 0          # re-enqueues after a replica crash
     n_abandoned: int = 0        # dropped: retry budget / deadline exhausted
     n_shed: int = 0             # dropped at admission (load shedding)
+    #: shed counts keyed by request priority class — the audit-friendly
+    #: breakdown behind ``n_shed`` (always sums to it)
+    shed_by_priority: Dict[int, int] = field(default_factory=dict)
     availability: float = 1.0   # up replica-seconds / total replica-seconds
 
     @property
@@ -421,6 +424,11 @@ def _slot_of(fl: InFlight) -> int:
     return fl.slot
 
 
+#: queue view a drained (autoscaler-disabled) replica consults — always
+#: empty, so schedulers admit nothing while in-flight work runs down.
+_EMPTY_PENDING: deque = deque()
+
+
 class ServingSimulator:
     """Replays a :class:`Workload` against replicas of one cost model.
 
@@ -442,7 +450,10 @@ class ServingSimulator:
                  probe_engine: bool = False,
                  failures=None,
                  retry: Optional[RetryPolicy] = None,
-                 fault_seed=None):
+                 fault_seed=None,
+                 sim=None,
+                 res_prefix: str = "",
+                 obs_ns: str = "serve"):
         """``phase_tasks > 0`` switches from the ServiceLane express path
         to *full task-graph mode*: every prefill/decode phase carries a
         real task graph (chained compute chunks, each followed by a
@@ -474,7 +485,16 @@ class ServingSimulator:
         :class:`~repro.serve_sim.faults.RetryPolicy`), a slow-degrade
         window scales phases *started* inside it.  ``fault_seed``
         overrides the model's seed (the Monte-Carlo simulator threads
-        per-scenario seeds through it)."""
+        per-scenario seeds through it).
+
+        ``sim``/``res_prefix``/``obs_ns`` exist for
+        :class:`repro.serve_sim.cluster.ClusterSimulator`, which runs
+        several pools as one discrete-event simulation: ``sim`` shares
+        an already-built engine (the caller owns scheduling order and
+        ``run()``), ``res_prefix`` namespaces the per-replica resources
+        (``poolA/replica0``), and ``obs_ns`` namespaces the probe
+        tracks.  Left at their defaults the behavior is bit-identical
+        to earlier revisions."""
         if replicas < 1 or slots < 1:
             raise ValueError("need replicas >= 1 and slots >= 1")
         if phase_tasks < 0:
@@ -484,6 +504,8 @@ class ServingSimulator:
                              "(expected 'fast' or 'dict')")
         self.cost = cost
         self.workload = workload
+        self.res_prefix = res_prefix
+        self._obs_ns = obs_ns
         self.replicas = [ReplicaState(index=r, slots=slots)
                          for r in range(replicas)]
         self.schedulers = [scheduler_factory() for _ in range(replicas)]
@@ -509,20 +531,21 @@ class ServingSimulator:
         # integer slot ops instead of a handle method call per metric.
         self.probe = probe
         if probe is not None:
-            self._p_queue = probe.counter("serve/queue_depth",
+            ns = obs_ns
+            self._p_queue = probe.counter(f"{ns}/queue_depth",
                                           unit="requests")
-            self._p_completed = probe.counter("serve/completed",
+            self._p_completed = probe.counter(f"{ns}/completed",
                                               unit="requests")
-            self._p_leaps = probe.counter("serve/leap_steps", unit="steps")
-            self._p_spec = probe.counter("serve/spec_leaps")
-            self._p_rollbacks = probe.counter("serve/rollbacks")
-            self._p_failures = probe.counter("serve/failures")
-            self._p_retries = probe.counter("serve/retries",
+            self._p_leaps = probe.counter(f"{ns}/leap_steps", unit="steps")
+            self._p_spec = probe.counter(f"{ns}/spec_leaps")
+            self._p_rollbacks = probe.counter(f"{ns}/rollbacks")
+            self._p_failures = probe.counter(f"{ns}/failures")
+            self._p_retries = probe.counter(f"{ns}/retries",
                                             unit="requests")
-            self._p_abandoned = probe.counter("serve/abandoned",
+            self._p_abandoned = probe.counter(f"{ns}/abandoned",
                                               unit="requests")
-            self._p_shed = probe.counter("serve/shed", unit="requests")
-            self._p_occ = [probe.gauge(f"serve/replica{r}/occupancy",
+            self._p_shed = probe.counter(f"{ns}/shed", unit="requests")
+            self._p_occ = [probe.gauge(f"{ns}/replica{r}/occupancy",
                                        unit="slots")
                            for r in range(replicas)]
             self._obs_every = probe.sample_every
@@ -558,7 +581,8 @@ class ServingSimulator:
         eng_probe = probe if probe_engine else None
         if self.phase_tasks:
             if engine == "fast":
-                self._sim = DynamicSimulator(probe=eng_probe)
+                self._sim = sim if sim is not None \
+                    else DynamicSimulator(probe=eng_probe)
                 self._templates = {}
                 # Graph mode on the fast engine: each replica is a
                 # TemplateLane — full chunk/DMA records per phase, one
@@ -570,10 +594,14 @@ class ServingSimulator:
                                             step_durs=self._burst_step_durs)
                     for r in range(replicas)]
             else:
-                self._sim = Simulator(on_complete=self._task_done,
-                                      probe=eng_probe)
+                # A shared dict engine already carries the owner's
+                # ``on_complete`` dispatcher, which must forward phase
+                # tails to this pool's ``_task_done``.
+                self._sim = sim if sim is not None \
+                    else Simulator(on_complete=self._task_done,
+                                   probe=eng_probe)
         else:
-            self._sim = Simulator(probe=eng_probe)
+            self._sim = sim if sim is not None else Simulator(probe=eng_probe)
             # Express path: each replica is a ServiceLane (one phase at a
             # time on a dedicated single-server resource) — no Task
             # construction or dependency bookkeeping per decode step,
@@ -626,19 +654,34 @@ class ServingSimulator:
         self._n_retries = 0
         self._n_abandoned = 0
         self._n_shed = 0
+        self._shed_by_priority: Dict[int, int] = {}
+        # ---- cluster hooks (repro.serve_sim.cluster) --------------------
+        # All default to None / empty and every hot site guards on one
+        # ``is not None`` (the probe pattern), so standalone runs and a
+        # 1-pool pass-through cluster stay bit-identical.  The hooks do
+        # bookkeeping only — no RNG draws, no event scheduling of their
+        # own on the parity path.
+        self._route_hook: Optional[Callable[[Request], None]] = None
+        self._retry_hook: Optional[Callable[[Request, float], None]] = None
+        self._abandon_hook: Optional[Callable[[Request], None]] = None
+        self._shed_hook: Optional[Callable[[Sequence[Request]], None]] = None
+        self._finish_hook: Optional[Callable[[InFlight, float], bool]] = None
+        #: hedge losers awaiting release at the next scheduler boundary
+        self._cancelled_rids: set = set()
+        #: autoscaler rotation mask; None means "all replicas admit"
+        self._enabled: Optional[List[bool]] = None
 
-    @staticmethod
-    def _res(r: int) -> str:
-        return f"replica{r}"
+    def _res(self, r: int) -> str:
+        return f"{self.res_prefix}replica{r}"
 
-    @staticmethod
-    def _name_fn(r: int) -> Callable[[str, object], str]:
+    def _name_fn(self, r: int) -> Callable[[str, object], str]:
+        pre = self.res_prefix
         def fmt(kind: str, info: object) -> str:
             if kind == "prefill":
-                return f"prefill/r{r}/{'+'.join(str(i) for i in info)}"
+                return f"prefill/{pre}r{r}/{'+'.join(str(i) for i in info)}"
             if isinstance(info, tuple):          # fused decode leap
-                return f"decode/r{r}/b{info[0]}x{info[1]}"
-            return f"decode/r{r}/b{info}"
+                return f"decode/{pre}r{r}/b{info[0]}x{info[1]}"
+            return f"decode/{pre}r{r}/b{info}"
         return fmt
 
     def _phase_handler(self, replica: ReplicaState):
@@ -742,8 +785,9 @@ class ServingSimulator:
                 self._obs_left = n
             else:
                 self._obs_tick(now)
+        en = self._enabled
         for replica in self.replicas:
-            if not replica.busy:
+            if not replica.busy and (en is None or en[replica.index]):
                 self._kick(replica, now)
         if self.pending:
             # The arrival survived the idle replicas, so a mid-flight
@@ -778,6 +822,12 @@ class ServingSimulator:
             self._n_rollbacks += 1
 
     def _schedule_arrival(self, req: Request) -> None:
+        if self._route_hook is not None:
+            # cluster mode: follow-up arrivals (closed-loop workloads)
+            # go back through the router, which picks a pool at the
+            # request's arrival time and accounts cluster-level offers
+            self._route_hook(req)
+            return
         self._n_offered += 1
         self._sim.at(max(0.0, req.t_arrive),
                      lambda r=req: self._arrive(r, self._sim.now))
@@ -887,6 +937,13 @@ class ServingSimulator:
                 self._obs_tick(now)
         if self.record_events:
             self.events.append(("retry", req.rid, att))
+        if self._retry_hook is not None:
+            # cluster failover: the backoff/jitter/deadline decision (and
+            # the RNG draw order) above is unchanged; only the final
+            # re-enqueue is redirected through the router, which picks
+            # the target pool when the retry *fires*, not here.
+            self._retry_hook(req, t_retry)
+            return
         self._sim.at(t_retry, lambda r=req: self._arrive(r, self._sim.now))
 
     def _abandon(self, req: Request, now: float) -> None:
@@ -899,20 +956,33 @@ class ServingSimulator:
                 self._obs_tick(now)
         if self.record_events:
             self.events.append(("abandon", req.rid))
+        if self._abandon_hook is not None:
+            self._abandon_hook(req)
 
     # ---- the scheduling loop --------------------------------------------
 
     def _kick(self, replica: ReplicaState, now: float) -> None:
-        if replica.busy or self._down[replica.index]:
+        idx = replica.index
+        if replica.busy or self._down[idx]:
             return
-        sched = self.schedulers[replica.index]
-        action = sched.decide(replica, self.pending, now)
+        sched = self.schedulers[idx]
+        en = self._enabled
+        # A drained (autoscaler-disabled) replica admits nothing but
+        # finishes its in-flight batch: it consults the policy against an
+        # empty queue, so every stock scheduler naturally runs the batch
+        # down and then idles.
+        q = self.pending if en is None or en[idx] else _EMPTY_PENDING
+        action = sched.decide(replica, q, now)
         while isinstance(action, Shed):
             # graceful degradation: the scheduler dropped queued requests
             # to keep the backlog bounded; account, then re-decide
-            self._n_shed += len(action.reqs)
+            n_dropped = len(action.reqs)
+            self._n_shed += n_dropped
+            sbp = self._shed_by_priority
+            for req in action.reqs:
+                sbp[req.priority] = sbp.get(req.priority, 0) + 1
             if self._p_shed is not None:
-                self._n_queue -= len(action.reqs)
+                self._n_queue -= n_dropped
                 n = self._obs_left - 1
                 if n > 0:
                     self._obs_left = n
@@ -921,7 +991,9 @@ class ServingSimulator:
             if self.record_events:
                 for req in action.reqs:
                     self.events.append(("shed", req.rid))
-            action = sched.decide(replica, self.pending, now)
+            if self._shed_hook is not None:
+                self._shed_hook(action.reqs)
+            action = sched.decide(replica, q, now)
 
         if isinstance(action, Prefill):
             self._start_prefill(replica, action, now)
@@ -1099,7 +1171,28 @@ class ServingSimulator:
 
     def _finish_phase(self, replica: ReplicaState, now: float) -> None:
         replica.busy = False
+        if self._cancelled_rids:
+            self._sweep_cancelled(replica)
         self._kick(replica, now)
+
+    def _sweep_cancelled(self, replica: ReplicaState) -> None:
+        """Release hedge-cancelled requests at a prefill boundary: they
+        leave the batch and free their slots without ever decoding.
+        (Decode boundaries release through ``_finish_decode``'s finished
+        path instead, which preserves hold-finished batch semantics.)"""
+        cr = self._cancelled_rids
+        free = self._free_slots[replica.index]
+        kept = []
+        changed = False
+        for fl in replica.active:
+            if not fl.done and fl.req.rid in cr:
+                heappush(free, fl.slot)
+                cr.discard(fl.req.rid)
+                changed = True
+            else:
+                kept.append(fl)
+        if changed:
+            replica.active[:] = kept
 
     def _finish_decode(self, replica: ReplicaState, now: float) -> None:
         idx = replica.index
@@ -1113,6 +1206,7 @@ class ServingSimulator:
         tokens = 0
         # actives are slot-sorted, mirroring the real BatchedServer's
         # finish ordering
+        cr = self._cancelled_rids or None
         for fl in replica.active:
             if fl.done:
                 continue
@@ -1122,6 +1216,12 @@ class ServingSimulator:
             if fl.t_first is None:
                 fl.t_first = t_first
             if fl.generated >= fl.req.output_tokens:
+                fl.done = True
+                finished.append(fl)
+            elif cr is not None and fl.req.rid in cr:
+                # hedge loser: leaves the batch at this step boundary —
+                # the same instant on every engine, so dict-vs-fast
+                # golden parity holds under cancellation
                 fl.done = True
                 finished.append(fl)
             else:
@@ -1135,7 +1235,12 @@ class ServingSimulator:
         for fl in release:
             replica.active.remove(fl)
             heappush(free, fl.slot)
+        fh = self._finish_hook
+        n_rec = 0
         for fl in finished:
+            if fh is not None and not fh(fl, now):
+                continue     # swallowed: a hedge duplicate already won
+            n_rec += 1
             if self.record_events:
                 self.events.append(("finish", fl.req.rid))
             self.lane_state.record(
@@ -1146,7 +1251,7 @@ class ServingSimulator:
             if follow is not None:
                 self._schedule_arrival(follow)
         if self._p_completed is not None:
-            self._n_completed += len(finished)
+            self._n_completed += n_rec
             n = self._obs_left - 1
             if n > 0:
                 self._obs_left = n
@@ -1154,6 +1259,59 @@ class ServingSimulator:
                 self._obs_tick(now)
         replica.busy = False
         self._kick(replica, now)
+
+    # ---- cluster support -------------------------------------------------
+
+    def cancel_request(self, rid: int, now: float) -> str:
+        """Withdraw ``rid`` from this pool (a hedge duplicate lost the
+        race on another pool).  A queued copy leaves immediately; an
+        admitted copy is marked and released at its replica's next
+        scheduler boundary — a prefill end or a decode step boundary,
+        which fall at the same instants on every engine, so the
+        dict-vs-fast golden contract survives cancellation.  An armed
+        speculative decode leap is rolled back first so that boundary
+        arrives at per-step fidelity instead of the leap's far end.
+        Returns ``"queued"`` / ``"inflight"`` / ``"absent"``."""
+        pending = self.pending
+        for i, req in enumerate(pending):
+            if req.rid == rid:
+                del pending[i]
+                if self._p_queue is not None:
+                    self._n_queue -= 1
+                    n = self._obs_left - 1
+                    if n > 0:
+                        self._obs_left = n
+                    else:
+                        self._obs_tick(now)
+                return "queued"
+        for replica in self.replicas:
+            for fl in replica.active:
+                if fl.req.rid == rid and not fl.done:
+                    self._cancelled_rids.add(rid)
+                    idx = replica.index
+                    leap = self._leap[idx]
+                    if leap is not None:
+                        self._rollback_leap(idx, leap, now)
+                    return "inflight"
+        return "absent"
+
+    def set_replica_enabled(self, idx: int, enabled: bool,
+                            now: float) -> None:
+        """Autoscaler support: a disabled replica admits nothing (its
+        scheduler sees an empty queue) but drains in-flight work
+        naturally; re-enabling kicks it against the real queue."""
+        en = self._enabled
+        if en is None:
+            en = self._enabled = [True] * len(self.replicas)
+        if en[idx] == enabled:
+            return
+        en[idx] = enabled
+        if enabled:
+            self._kick(self.replicas[idx], now)
+
+    def n_enabled(self) -> int:
+        en = self._enabled
+        return len(self.replicas) if en is None else sum(en)
 
     # ---- observability ---------------------------------------------------
 
@@ -1181,7 +1339,11 @@ class ServingSimulator:
 
     # ---- entry point -----------------------------------------------------
 
-    def run(self) -> ServingReport:
+    def _arm_faults(self) -> None:
+        """Schedule this pool's compiled fault events on the engine.
+        Called before any arrival is scheduled — fault events at a tied
+        timestamp must beat arrivals/completions on the heap's sequence
+        tie-break (the cluster arms every pool first, then routes)."""
         faults = self._faults
         if faults is not None:
             # Fault events are scheduled FIRST, in schedule order (sorted
@@ -1194,10 +1356,17 @@ class ServingSimulator:
                     self._sim.at(t, lambda i=r: self._fail(i))
                 else:
                     self._sim.at(t, lambda i=r: self._repair(i))
+
+    def run(self) -> ServingReport:
+        self._arm_faults()
         for req in self.workload.initial():
             self._schedule_arrival(req)
         sim_result = self._sim.run()
+        return self._build_report(sim_result)
 
+    def _build_report(self, sim_result: SimResult,
+                      flush: bool = True) -> ServingReport:
+        faults = self._faults
         util = 0.0
         if sim_result.makespan > 0:
             util = sum(
@@ -1212,9 +1381,10 @@ class ServingSimulator:
             # (fault events past the last completion may extend the span)
             end_t = max(sim_result.makespan, self._sim.now)
             self._obs_tick(end_t)
-            probe.gauge("serve/replica_util",
+            probe.gauge(f"{self._obs_ns}/replica_util",
                         unit="frac").set(end_t, util)
-            probe.flush()
+            if flush:
+                probe.flush()
 
         ls = self.lane_state
         ls.sort_by_rid()
@@ -1238,6 +1408,7 @@ class ServingSimulator:
             n_retries=self._n_retries,
             n_abandoned=self._n_abandoned,
             n_shed=self._n_shed,
+            shed_by_priority=dict(self._shed_by_priority),
             availability=(faults.availability(mk, len(self.replicas))
                           if faults is not None else 1.0))
 

@@ -336,6 +336,70 @@ def bursty_workload_batch(rate_low: float, rate_high: float, n_requests: int,
         f"bursty@{rate_low:g}/{rate_high:g}rps")
 
 
+def _diurnal_times(rng: np.random.Generator, rate_mean: float,
+                   amplitude: float, period: float, n: int) -> np.ndarray:
+    """Inhomogeneous Poisson arrivals with a sinusoidal rate,
+    ``lambda(t) = rate_mean * (1 + amplitude * sin(2*pi*t/period))``,
+    via Lewis-Shedler thinning (candidates at the peak rate, accepted
+    with probability ``lambda(t)/lambda_max`` — exact, and the draw
+    order is identical for the scalar and batched generators)."""
+    lam_max = rate_mean * (1.0 + amplitude)
+    omega = 2.0 * np.pi / period
+    times = np.empty(n)
+    t = 0.0
+    i = 0
+    while i < n:
+        t += rng.exponential(1.0 / lam_max)
+        lam = rate_mean * (1.0 + amplitude * np.sin(omega * t))
+        if rng.random() * lam_max < lam:
+            times[i] = t
+            i += 1
+    return times
+
+
+def _check_diurnal(rate_mean: float, amplitude: float,
+                   period: float) -> None:
+    if rate_mean <= 0:
+        raise ValueError("rate_mean must be > 0")
+    if not (0.0 <= amplitude <= 1.0):
+        raise ValueError(f"amplitude must be in [0, 1], got {amplitude!r}")
+    if period <= 0:
+        raise ValueError("period must be > 0")
+
+
+def diurnal_workload(rate_mean: float, n_requests: int,
+                     period: float = 600.0, amplitude: float = 0.8,
+                     prompt: LengthDist = LengthDist(mean=512),
+                     output: LengthDist = LengthDist(mean=128),
+                     seed: int = 0) -> OpenLoopWorkload:
+    """Diurnal traffic: Poisson arrivals whose rate swings sinusoidally
+    between ``rate_mean*(1-amplitude)`` and ``rate_mean*(1+amplitude)``
+    with period ``period`` seconds — the trace shape reactive
+    autoscaling is sized against (peaks arrive gradually; outages do
+    not)."""
+    _check_diurnal(rate_mean, amplitude, period)
+    rng = np.random.default_rng(seed)
+    times = _diurnal_times(rng, rate_mean, amplitude, period, n_requests)
+    wl = OpenLoopWorkload(_make_requests(times, prompt, output, rng))
+    wl.name = f"diurnal@{rate_mean:g}rps~{amplitude:g}"
+    return wl
+
+
+def diurnal_workload_batch(rate_mean: float, n_requests: int,
+                           period: float = 600.0, amplitude: float = 0.8,
+                           prompt: LengthDist = LengthDist(mean=512),
+                           output: LengthDist = LengthDist(mean=128),
+                           seeds=1) -> RequestBatch:
+    """Seed-batched :func:`diurnal_workload` (same per-row bit-parity
+    contract as :func:`poisson_workload_batch`)."""
+    _check_diurnal(rate_mean, amplitude, period)
+    return _batch_rows(
+        lambda rng: _diurnal_times(rng, rate_mean, amplitude, period,
+                                   n_requests),
+        n_requests, prompt, output, _seed_tuple(seeds),
+        f"diurnal@{rate_mean:g}rps~{amplitude:g}")
+
+
 def _checked_trace_rows(trace) -> List[Tuple]:
     """Validate and time-sort explicit trace rows.
 
